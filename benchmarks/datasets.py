@@ -1,0 +1,33 @@
+"""Shared benchmark datasets, shaped after the paper's Table 1 (scaled to
+CPU-CI size; the generators expose the same statistics — density, feature
+popularity skew, class imbalance — at ~1/1000 scale):
+
+  epsilon-like   : dense, correlated features            (paper: 2k dense)
+  webspam-like   : sparse, ~3.7k nnz/row in the paper    (here avg 60)
+  clickstream-like: sparse, highly imbalanced labels      (yandex_ad proxy)
+"""
+from __future__ import annotations
+
+from repro.data import synthetic
+
+
+def epsilon_like(seed=0):
+    return synthetic.make_dense(n=2000, p=300, k_true=40, rho=0.4,
+                                seed=seed)
+
+
+def webspam_like(seed=0):
+    return synthetic.make_sparse(n=3000, p=20000, avg_nnz=60, k_true=150,
+                                 seed=seed)
+
+
+def clickstream_like(seed=0):
+    return synthetic.make_sparse(n=4000, p=30000, avg_nnz=40, k_true=120,
+                                 imbalance=2.0, seed=seed)
+
+
+ALL = {
+    "epsilon_like": epsilon_like,
+    "webspam_like": webspam_like,
+    "clickstream_like": clickstream_like,
+}

@@ -1,0 +1,48 @@
+"""Paper Figure 1: constant μ=1 vs adaptive μ (L1 regularization).
+
+The paper's claim: adaptive μ slightly improves convergence/accuracy and
+dramatically improves sparsity.  We reproduce on the clickstream-like
+dataset (the paper used yandex_ad)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import dglmnet
+from repro.core.dglmnet import DGLMNETConfig
+from repro.data import synthetic
+
+
+def run():
+    # strongly correlated features + many small blocks = the conflict regime
+    # where the trust region matters (paper: yandex_ad, M=16 nodes)
+    ds = synthetic.make_dense(n=1500, p=512, k_true=25, rho=0.9, seed=7)
+    X, y = ds.train.X, ds.train.y
+    lam1 = 2.0
+
+    rows = []
+    for adaptive in (False, True):
+        cfg = DGLMNETConfig(lam1=lam1, lam2=0.0, tile_size=16,
+                            coupling="jacobi", adaptive_mu=adaptive,
+                            max_outer=40, tol=0.0)
+        t0 = time.time()
+        res = dglmnet.fit(X, y, cfg)
+        dt = time.time() - t0
+        rows.append({
+            "variant": "adaptive_mu" if adaptive else "constant_mu",
+            "f_final": res.history["f"][-1],
+            "nnz_final": int(res.history["nnz"][-1]),
+            "unit_step_frac": float(np.mean(res.history["accepted_unit"])),
+            "iters": res.n_iter,
+            "wall_s": dt,
+        })
+    # paper's qualitative claim (adaptive μ ⇒ more α=1 steps ⇒ sparser
+    # iterates), recorded as data — the magnitude is dataset-dependent:
+    claim = {
+        "adaptive_more_unit_steps":
+            rows[1]["unit_step_frac"] >= rows[0]["unit_step_frac"],
+        "adaptive_not_denser":
+            rows[1]["nnz_final"] <= rows[0]["nnz_final"] * 1.05,
+    }
+    return {"figure": "fig1_adaptive_mu", "rows": rows, "claims": claim}

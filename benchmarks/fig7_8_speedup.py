@@ -1,0 +1,62 @@
+"""Paper Figures 7-8: speedup of d-GLMNET-ALB vs number of nodes M.
+
+Protocol (adapted for the CPU host, see EXPERIMENTS.md): for M ∈ {1,2,4,8}
+we measure ITERATIONS to reach 2.5% relative suboptimality (the paper's
+threshold) on M feature blocks, then model wall time per iteration as
+
+    t(M) = flops_per_node(M) / R + comm_bytes(M) / BW + latency
+
+with R, BW the paper's cluster-ish constants.  This separates the two
+effects the paper discusses: block-diagonal Hessian degradation (iterations
+grow with M — measured, not modeled) and communication growth (modeled).
+The M blocks execute as M shard_map blocks in a subprocess with fake
+devices (same numerics as real nodes)."""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import subprocess
+import sys
+
+R_FLOPS = 2e10        # per-node effective flop rate (cluster-era CPU)
+BW = 1e8              # 1 Gb/s ethernet ≈ the paper's fabric
+LATENCY = 2e-3
+# paper-scale workload constants (webspam row of Table 1) — the ITERATION
+# COUNTS are measured on real M-block runs of our implementation; only the
+# per-iteration wall time is projected onto the paper's cluster scale
+# (nnz=1.2e9, n=315k), since wall-clock on a 1-core CPU simulating M nodes
+# is meaningless.
+NNZ_PAPER = 1.2e9
+N_PAPER = 3.15e5
+
+
+def run():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = str(pathlib.Path(__file__).parents[1] / "src")
+    out = subprocess.run([sys.executable, str(_CHILD)], env=env,
+                         capture_output=True, text=True, timeout=2400)
+    assert out.returncode == 0, out.stderr[-4000:]
+    measured = json.loads(out.stdout.strip().splitlines()[-1])
+
+    rows = []
+    base_time = None
+    for rec in measured["per_m"]:
+        M = rec["M"]
+        flops_per_node = 3.0 * 2.0 * NNZ_PAPER / M
+        comm = 2.0 * N_PAPER * 4              # margin allreduce, f32
+        t_iter = flops_per_node / R_FLOPS + (comm / BW + LATENCY) * (M > 1)
+        t_total = t_iter * rec["iters_to_2.5pct"]
+        if base_time is None:
+            base_time = t_total
+        rows.append({"M": M, "iters": rec["iters_to_2.5pct"],
+                     "modeled_iter_s": round(t_iter, 4),
+                     "speedup_vs_1": round(base_time / t_total, 3)})
+    return {"figure": "fig7_8_speedup", "rows": rows,
+            "note": "iteration counts measured on real M-block runs; "
+                    "per-iteration time projected to the paper's webspam "
+                    "scale (constants in source)"}
+
+
+_CHILD = pathlib.Path(__file__).parent / "_speedup_child.py"

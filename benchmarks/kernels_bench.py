@@ -1,0 +1,57 @@
+"""Kernel micro-benchmarks: us_per_call for the three Pallas kernels (ref
+backend timings on CPU — interpret-mode Pallas timing measures the Python
+interpreter, not the kernel; TPU wall-times come from the roofline model in
+EXPERIMENTS.md) plus derived per-call FLOP counts."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+
+def _time(fn, *args, iters=20, **kw):
+    fn(*args, **kw)  # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run():
+    rng = np.random.default_rng(0)
+    rows = []
+
+    n, T = 4096, 256
+    X = rng.normal(size=(n, T)).astype(np.float32)
+    w = rng.uniform(0.01, 0.25, n).astype(np.float32)
+    s = rng.normal(size=n).astype(np.float32)
+    G = jnp.asarray((X.T * w) @ X)
+    g = jnp.asarray(X.T @ s)
+    h = jnp.diagonal(G)
+    beta = jnp.zeros(T)
+    us = _time(ops.cd_tile_solve, G, g, h, beta, beta, 1.0, 1e-6, 0.3, 0.1,
+               backend="ref")
+    rows.append({"name": f"cd_tile_solve_T{T}", "us_per_call": round(us, 1),
+                 "derived": f"flops~{2*T*T}"})
+
+    y = jnp.asarray(rng.choice([-1.0, 1.0], n).astype(np.float32))
+    xb = jnp.asarray(rng.normal(size=n).astype(np.float32))
+    for fam in ("logistic", "probit"):
+        us = _time(ops.glm_stats, y, xb, fam, backend="ref")
+        rows.append({"name": f"glm_stats_{fam}_n{n}",
+                     "us_per_call": round(us, 1),
+                     "derived": f"bytes~{n*4*5}"})
+
+    xdb = jnp.asarray(rng.normal(size=n).astype(np.float32))
+    alphas = jnp.asarray(np.logspace(-3, 0, 21), jnp.float32)
+    us = _time(ops.alpha_search, y, xb, xdb, alphas, "logistic",
+               backend="ref")
+    rows.append({"name": f"alpha_search_K21_n{n}",
+                 "us_per_call": round(us, 1),
+                 "derived": f"loss_evals~{21*n}"})
+    return {"figure": "kernels", "rows": rows}

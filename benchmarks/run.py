@@ -1,0 +1,70 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines per the harness contract,
+followed by a JSON blob per figure (also written to results/benchmarks/).
+
+Figures:
+  table2_load       — paper Table 2 (computational load)
+  fig1_adaptive_mu  — paper Fig 1  (constant vs adaptive trust region)
+  fig2_4_l1         — paper Figs 2-4 (L1: vs ADMM, online-TG; auPRC; nnz)
+  fig5_6_l2         — paper Figs 5-6 (L2: vs online-warmstarted L-BFGS)
+  fig7_8_speedup    — paper Figs 7-8 (speedup vs number of nodes)
+  kernels           — Pallas kernel micro-benches
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+import time
+
+RESULTS = pathlib.Path(__file__).resolve().parents[1] / "results" / "benchmarks"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated figure names")
+    args = ap.parse_args()
+
+    from benchmarks import (fig1_adaptive_mu, fig2_4_l1, fig5_6_l2,
+                            fig7_8_speedup, kernels_bench, table2_load)
+    figures = {
+        "table2_load": table2_load.run,
+        "fig1_adaptive_mu": fig1_adaptive_mu.run,
+        "fig2_4_l1": fig2_4_l1.run,
+        "fig5_6_l2": fig5_6_l2.run,
+        "fig7_8_speedup": fig7_8_speedup.run,
+        "kernels": kernels_bench.run,
+    }
+    wanted = (args.only.split(",") if args.only else list(figures))
+    RESULTS.mkdir(parents=True, exist_ok=True)
+
+    print("name,us_per_call,derived")
+    ok = True
+    for name in wanted:
+        t0 = time.time()
+        try:
+            res = figures[name]()
+            wall_us = (time.time() - t0) * 1e6
+            if name == "kernels":
+                for r in res["rows"]:
+                    print(f"{r['name']},{r['us_per_call']},{r['derived']}")
+            else:
+                print(f"{name},{wall_us:.0f},rows={len(res.get('rows', []))}")
+            (RESULTS / f"{name}.json").write_text(json.dumps(res, indent=2,
+                                                             default=str))
+            for row in res.get("rows", []):
+                print(f"#   {row}")
+        except Exception as e:  # pragma: no cover
+            ok = False
+            print(f"{name},FAILED,{type(e).__name__}: {e}", file=sys.stderr)
+            import traceback
+            traceback.print_exc()
+    if not ok:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

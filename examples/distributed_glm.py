@@ -1,0 +1,66 @@
+"""Distributed d-GLMNET on 8 (simulated) nodes: the paper's 1-D feature
+split, the 2-D extension, ALB straggler mitigation, and margin compression —
+all converging to the same optimum.
+
+    python examples/distributed_glm.py       (sets up fake devices itself)
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import sys
+import pathlib
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dglmnet, glm
+from repro.core.dglmnet import DGLMNETConfig
+from repro.data import synthetic
+from repro.data.sparse import to_dense_blocks
+
+
+def main():
+    ds = synthetic.make_sparse(n=4000, p=8000, avg_nnz=50, seed=3)
+    X, _, occ = to_dense_blocks(ds.train.X, 128)
+    y = ds.train.y
+    print(f"sparse design: nnz={ds.train.X.nnz}, brick occupancy={occ:.2f}")
+
+    base = DGLMNETConfig(lam1=1.0, lam2=0.1, tile_size=128,
+                         coupling="jacobi", max_outer=40, tol=1e-10)
+
+    def obj(beta):
+        return float(glm.objective(glm.LOGISTIC, jnp.asarray(y),
+                                   jnp.asarray(X), jnp.asarray(beta),
+                                   base.lam1, base.lam2))
+
+    # the paper's layout: 8 feature blocks, every node holds all rows
+    mesh_1d = jax.make_mesh((1, 8), ("data", "model"),
+                            axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    res = dglmnet.fit_sharded(X, y, base, mesh_1d, verbose=False)
+    print(f"1-D (paper) split : f={obj(res.beta):.5f} "
+          f"iters={res.n_iter} nnz={(res.beta != 0).sum()}")
+
+    # 2-D: rows × features (beyond-paper scale-out)
+    mesh_2d = jax.make_mesh((2, 4), ("data", "model"),
+                            axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    res = dglmnet.fit_sharded(X, y, base, mesh_2d)
+    print(f"2-D rows×features : f={obj(res.beta):.5f} iters={res.n_iter}")
+
+    # ALB with a straggling node (paper Section 7)
+    alb = dataclasses.replace(base, alb=True)
+    res = dglmnet.fit_sharded(X, y, alb, mesh_1d,
+                              speeds=np.array([1, 1, 1, 0.2, 1, 1, 2, 1]))
+    print(f"ALB w/ straggler  : f={obj(res.beta):.5f} iters={res.n_iter}")
+
+    # compressed margin allreduce
+    comp = dataclasses.replace(base, compress_margin="bf16")
+    res = dglmnet.fit_sharded(X, y, comp, mesh_2d)
+    print(f"bf16 margin comm  : f={obj(res.beta):.5f} iters={res.n_iter}")
+
+
+if __name__ == "__main__":
+    main()

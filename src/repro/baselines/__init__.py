@@ -1,0 +1,7 @@
+"""Competing algorithms from paper Section 8.1, reimplemented in JAX so the
+benchmark figures (Figs. 2-6) compare against the same baselines the paper
+used: ADMM with sharing (feature-split), online learning via truncated
+gradient (example-split), and L-BFGS warmstarted by online learning."""
+from repro.baselines.admm import fit_admm  # noqa: F401
+from repro.baselines.online_tg import fit_online_tg  # noqa: F401
+from repro.baselines.lbfgs import fit_lbfgs, fit_online_warmstart_lbfgs  # noqa: F401

@@ -1,0 +1,123 @@
+"""ADMM with sharing for feature-split L1/L2 logistic regression.
+
+Boyd et al. 2011, sections 7.3 + 8.3.1/8.3.3, including the correction the
+paper points out (footnote 3): the z̄-update quadratic coefficient is ρN/2,
+not ρ/2.  The x-update LASSO is solved with Shooting (cyclic CD) as in the
+paper's comparison.  Feature blocks are carried in one device tensor of
+shape (M, n, p_block) and the per-block x-updates are vmapped — the sharing
+structure (only Ax̄ crosses blocks) is identical to distributing over M
+nodes, which is what makes this "another way to do distributed coordinate
+descent" (paper §8.1).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import glm as glm_lib
+
+
+@dataclasses.dataclass(frozen=True)
+class ADMMConfig:
+    lam1: float = 0.0
+    lam2: float = 0.0
+    rho: float = 1.0
+    n_blocks: int = 4
+    shooting_passes: int = 3
+    newton_iters: int = 12
+    max_outer: int = 100
+    family: str = "logistic"
+
+
+def _shooting_pass(A, x, v, lam1_eff, lam2_eff, col_sq):
+    """One cyclic CD pass on  0.5||A x - v||^2 + lam1_eff||x||_1
+    + 0.5 lam2_eff ||x||^2.  Residual r = A x - v carried."""
+    p = x.shape[0]
+
+    def body(j, carry):
+        x_c, r = carry
+        aj = A[:, j]
+        xj = x_c[j]
+        rho_j = aj @ r - col_sq[j] * xj            # gradient sans own term
+        num = glm_lib.soft_threshold(-rho_j, lam1_eff)
+        xj_new = num / jnp.maximum(col_sq[j] + lam2_eff, 1e-30)
+        r = r + aj * (xj_new - xj)
+        x_c = x_c.at[j].set(xj_new)
+        return x_c, r
+
+    r0 = A @ x - v
+    x, _ = jax.lax.fori_loop(0, p, body, (x, r0))
+    return x
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def _admm_step(A_blocks, y, x_blocks, zbar, u, cfg: ADMMConfig):
+    M = A_blocks.shape[0]
+    fam = glm_lib.get_family(cfg.family)
+
+    Ax = jnp.einsum("mnp,mp->mn", A_blocks, x_blocks)     # (M, n)
+    Ax_bar = jnp.mean(Ax, axis=0)
+
+    # ---- x-update: M independent LASSOs (vmapped "nodes")
+    v = Ax + (zbar - Ax_bar - u)[None, :]
+    col_sq = jnp.einsum("mnp,mnp->mp", A_blocks, A_blocks)
+
+    def solve_block(A, x0, v_m, csq):
+        def one_pass(x, _):
+            return _shooting_pass(A, x, v_m, cfg.lam1 / cfg.rho,
+                                  cfg.lam2 / cfg.rho, csq), None
+        x, _ = jax.lax.scan(one_pass, x0, None, length=cfg.shooting_passes)
+        return x
+
+    x_new = jax.vmap(solve_block)(A_blocks, x_blocks, v, col_sq)
+
+    # ---- z̄-update: n independent 1-D problems, Newton (ρN/2 fix applied)
+    Ax_new = jnp.einsum("mnp,mp->mn", A_blocks, x_new)
+    Ax_bar_new = jnp.mean(Ax_new, axis=0)
+    a = Ax_bar_new + u
+
+    def newton(z, _):
+        _, s, w = fam.stats(y, M * z)            # l'(Mz) = -s, l''(Mz) = w
+        grad = -M * s + M * cfg.rho * (z - a)
+        hess = M * M * w + M * cfg.rho
+        return z - grad / hess, None
+
+    zbar_new, _ = jax.lax.scan(newton, zbar, None, length=cfg.newton_iters)
+
+    u_new = u + Ax_bar_new - zbar_new
+
+    # true objective on the consensus iterate
+    margin = M * Ax_bar_new
+    f = (jnp.sum(fam.stats(y, margin)[0])
+         + cfg.lam1 * jnp.sum(jnp.abs(x_new))
+         + 0.5 * cfg.lam2 * jnp.sum(x_new * x_new))
+    nnz = jnp.sum((x_new != 0.0).astype(jnp.int32))
+    return x_new, zbar_new, u_new, f, nnz
+
+
+def fit_admm(X, y, cfg: ADMMConfig):
+    """Returns (beta, history dict)."""
+    X = np.asarray(X, np.float32)
+    y = jnp.asarray(y, jnp.float32)
+    n, p = X.shape
+    M = cfg.n_blocks
+    p_pad = p + ((-p) % M)
+    Xp = np.pad(X, ((0, 0), (0, p_pad - p)))
+    # (M, n, p_block) feature blocks
+    A_blocks = jnp.asarray(np.stack(np.split(Xp, M, axis=1)))
+    x_blocks = jnp.zeros((M, p_pad // M), jnp.float32)
+    zbar = jnp.zeros((n,), jnp.float32)
+    u = jnp.zeros((n,), jnp.float32)
+
+    hist = {"f": [], "nnz": []}
+    for _ in range(cfg.max_outer):
+        x_blocks, zbar, u, f, nnz = _admm_step(A_blocks, y, x_blocks, zbar,
+                                               u, cfg)
+        hist["f"].append(float(f))
+        hist["nnz"].append(int(nnz))
+    beta = np.concatenate([np.asarray(b) for b in x_blocks])[:p]
+    return beta, hist

@@ -1,0 +1,2 @@
+from repro.configs.base import ArchConfig, SHAPES, ShapeSpec  # noqa: F401
+from repro.configs.registry import ARCHS, get_arch, smoke_variant  # noqa: F401

@@ -1,0 +1,25 @@
+"""The paper's own workload as a dry-run cell: web-scale sparse logistic
+regression (yandex_ad-like: n≫10⁶ examples, p≫10⁶ features), trained with
+d-GLMNET on the production mesh.  Rows shard over ``data``, feature blocks
+over ``model`` (D=1 recovers the paper's exact 1-D layout).
+
+The dense (n_loc × p_loc) brick is the densified-tile representation from
+DESIGN.md §2; the shapes below give a 2 TiB design matrix — 8.6 GiB/chip on
+the single-pod mesh."""
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class GLMShape:
+    name: str
+    n_examples: int
+    n_features: int
+    tile_size: int
+
+
+GLM_SHAPES = {
+    "glm_web": GLMShape("glm_web", n_examples=1 << 19, n_features=1 << 20,
+                        tile_size=512),
+    "glm_tall": GLMShape("glm_tall", n_examples=1 << 22, n_features=1 << 17,
+                         tile_size=512),
+}

@@ -1,0 +1,9 @@
+"""repro.core — d-GLMNET: distributed coordinate descent for regularized GLMs.
+
+Public API:
+  DGLMNETConfig, fit, fit_sharded     — the paper's algorithm (Algorithms 1-4)
+  glm.FAMILIES                        — logistic / squared / probit / poisson
+  head_probe.fit_probe                — elastic-net GLM head on frozen LM features
+"""
+from repro.core.dglmnet import DGLMNETConfig, FitResult, fit, fit_sharded  # noqa: F401
+from repro.core import glm  # noqa: F401

@@ -1,0 +1,58 @@
+"""Asynchronous Load Balancing (paper Section 7) — deterministic simulation.
+
+The paper's mechanism: a watcher thread ends the superstep once a κ-fraction
+of nodes finished one full cycle over their block; fast nodes keep cycling,
+slow nodes park their cursor and resume next superstep.
+
+Inside a jitted SPMD program there are no wall clocks or threads, so we model
+node speed explicitly: node m with relative speed v_m completes
+
+    budget_m = round(n_tiles · v_m / v_(κ-quantile))
+
+tiles in the time the κ-quantile node completes exactly one cycle — which is
+precisely when the paper's watcher fires.  Budgets are recomputed every
+superstep from (optionally resampled) speeds, modelling transient stragglers;
+cursors guarantee every coordinate is still updated every
+⌈n_tiles/min_budget⌉ supersteps, preserving the Tseng–Yun global-convergence
+schedule requirement (the paper's own caveat — no linear rate — carries
+over).
+
+On a real cluster the speeds vector is fed from runtime telemetry; here the
+benchmark/test harness supplies it, which keeps the whole algorithm
+replayable bit-for-bit.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+_MAX_CYCLES = 4  # cap fast nodes at 4 cycles per superstep (static loop bound)
+
+
+def max_budget(n_tiles: int) -> int:
+    return _MAX_CYCLES * n_tiles
+
+
+def alb_budgets(speeds: np.ndarray, n_tiles: int, kappa: float,
+                budget_cap: int | None = None) -> np.ndarray:
+    """Per-node tile budgets for one superstep (paper's κ-completion rule)."""
+    speeds = np.asarray(speeds, np.float64)
+    if np.any(speeds <= 0):
+        raise ValueError("node speeds must be positive")
+    # the superstep ends when a κ-fraction of nodes completed a full cycle:
+    # the pivot node is the (1-κ)-quantile *fastest* ... i.e. κ-th slowest
+    # completes exactly n_tiles.
+    pivot = np.quantile(speeds, 1.0 - kappa)
+    budgets = np.round(n_tiles * speeds / max(pivot, 1e-12)).astype(np.int64)
+    cap = budget_cap if budget_cap is not None else max_budget(n_tiles)
+    return np.clip(budgets, 1, cap).astype(np.int32)
+
+
+def sample_speeds(rng: np.random.Generator, base_speeds: np.ndarray,
+                  jitter: float = 0.15, straggler_prob: float = 0.05,
+                  straggler_slowdown: float = 4.0) -> np.ndarray:
+    """Transient node-speed model: lognormal jitter + rare deep stragglers."""
+    M = base_speeds.shape[0]
+    speeds = base_speeds * rng.lognormal(0.0, jitter, size=M)
+    stragglers = rng.random(M) < straggler_prob
+    speeds = np.where(stragglers, speeds / straggler_slowdown, speeds)
+    return np.maximum(speeds, 1e-3)

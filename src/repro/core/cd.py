@@ -1,0 +1,150 @@
+"""Block coordinate-descent sweeps over a local feature block.
+
+This is the compute core of d-GLMNET's Algorithm 2, re-blocked for TPU as
+described in DESIGN.md §2: features are processed in tiles of ``tile_size``;
+per tile, the gradient vector ``g`` and the Gram block ``G`` are produced by
+MXU matmuls (with a psum over the ``data`` mesh axis when examples are
+sharded), and the strictly sequential chain of exact coordinate updates runs
+in the ``cd_tile_solve`` kernel with everything VMEM-resident.
+
+Two tile-coupling modes:
+
+  * ``gauss-seidel`` (paper-faithful node semantics): tiles are processed
+    cyclically; tile t sees the margin delta produced by tiles < t.  One
+    (G, g) psum per tile.
+  * ``jacobi``: all tile Grams/gradients are computed up-front from the
+    iteration-start state and solved independently (vmapped).  Mathematically
+    this equals d-GLMNET with a finer feature partition (every tile is a
+    virtual node), so the paper's convergence story is unchanged — conflicts
+    between tiles are handled by the same μ/line-search machinery that
+    handles conflicts between nodes.  One fused psum per sweep and fully
+    parallel tile solves: this is the collective-batching optimization
+    explored in EXPERIMENTS.md §Perf.
+
+All functions are shard_map-friendly: pass ``axis_data`` to psum partial row
+reductions; pass ``None`` when rows are unsharded (the paper's 1-D layout).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+
+def _psum(x, axis: Optional[str]):
+    return jax.lax.psum(x, axis) if axis is not None else x
+
+
+def sweep_gauss_seidel(X, s, w, beta, dbeta, xdb, *, mu, nu, lam1, lam2,
+                       tile_size: int, start_tile=0, num_tiles=None,
+                       max_num_tiles: Optional[int] = None,
+                       axis_data: Optional[str] = None,
+                       backend: Optional[str] = None):
+    """Cyclic tile sweep; returns (dbeta, xdb, tiles_done).
+
+    X: (n_loc, p_loc) dense local block, p_loc % tile_size == 0.
+    s, w: (n_loc,) link stats at the outer iterate (FIXED during the sweep).
+    beta, dbeta: (p_loc,); xdb: (n_loc,) = X @ dbeta (local block only).
+    num_tiles: how many tiles this node is budgeted to process this superstep
+      (ALB); defaults to one full cycle.  May exceed a full cycle (fast
+      nodes).  ``max_num_tiles`` is the static loop bound all SPMD peers run
+      (masked work beyond the local budget) — required because collectives
+      inside the loop must be executed in lockstep.
+    """
+    n_loc, p_loc = X.shape
+    T = tile_size
+    n_tiles_total = p_loc // T
+    if num_tiles is None:
+        num_tiles = n_tiles_total
+    num_tiles = jnp.asarray(num_tiles, jnp.int32)
+    static_bound = int(max_num_tiles if max_num_tiles is not None else n_tiles_total)
+
+    def tile_body(t, carry):
+        dbeta_c, xdb_c = carry
+        active = t < num_tiles
+        tid = jax.lax.rem(jnp.asarray(start_tile, jnp.int32) + t, n_tiles_total)
+        col0 = tid * T
+        Xt = jax.lax.dynamic_slice(X, (0, col0), (n_loc, T))
+        Xw = Xt * w[:, None]
+        G = _psum(Xw.T @ Xt, axis_data)                    # (T, T)
+        g = _psum(Xt.T @ (s - mu * (w * xdb_c)), axis_data)
+        h = jnp.diagonal(G)
+        bt = jax.lax.dynamic_slice(beta, (col0,), (T,))
+        dt = jax.lax.dynamic_slice(dbeta_c, (col0,), (T,))
+        dt_new = ops.cd_tile_solve(G, g, h, bt, dt, mu, nu, lam1, lam2,
+                                   backend=backend)
+        dt_new = jnp.where(active, dt_new, dt)
+        xdb_c = xdb_c + Xt @ (dt_new - dt)
+        dbeta_c = jax.lax.dynamic_update_slice(dbeta_c, dt_new, (col0,))
+        return dbeta_c, xdb_c
+
+    dbeta, xdb = jax.lax.fori_loop(0, static_bound, tile_body, (dbeta, xdb))
+    return dbeta, xdb, jnp.minimum(num_tiles, static_bound)
+
+
+def sweep_jacobi(X, s, w, beta, dbeta, xdb, *, mu, nu, lam1, lam2,
+                 tile_size: int, start_tile=0, num_tiles=None,
+                 max_num_tiles: Optional[int] = None,
+                 axis_data: Optional[str] = None,
+                 backend: Optional[str] = None):
+    """Jacobi-across-tiles sweep: one fused psum, vmapped tile solves.
+
+    Equivalent to d-GLMNET with each tile as a virtual node.  ``dbeta`` and
+    ``xdb`` must be zero on entry (start of an outer iteration) — asserted by
+    the driver.  ALB budgeting masks whole tiles.
+    """
+    n_loc, p_loc = X.shape
+    T = tile_size
+    n_tiles_total = p_loc // T
+    if num_tiles is None:
+        num_tiles = n_tiles_total
+    num_tiles = jnp.asarray(num_tiles, jnp.int32)
+
+    Xr = X.reshape(n_loc, n_tiles_total, T)
+    # Fused Gram blocks + gradient: ONE collective for the entire sweep.
+    G_all = jnp.einsum("nti,ntj->tij", Xr * w[:, None, None], Xr)
+    g_all = (X.T @ s).reshape(n_tiles_total, T)
+    G_all, g_all = _psum((G_all, g_all), axis_data)
+    h_all = jnp.diagonal(G_all, axis1=-2, axis2=-1)
+
+    beta_r = beta.reshape(n_tiles_total, T)
+    dbeta_r = jnp.zeros_like(beta_r)
+
+    solve = functools.partial(ops.cd_tile_solve, mu=mu, nu=nu, lam1=lam1,
+                              lam2=lam2, backend=backend)
+    d_new = jax.vmap(lambda Gt, gt, ht, bt, dt: solve(Gt, gt, ht, bt, dt))(
+        G_all, g_all, h_all, beta_r, dbeta_r)
+
+    # ALB mask: tiles [start, start+budget) in cyclic order are active.
+    tids = jnp.arange(n_tiles_total, dtype=jnp.int32)
+    offset = jax.lax.rem(tids - jnp.asarray(start_tile, jnp.int32),
+                         jnp.asarray(n_tiles_total, jnp.int32))
+    offset = jnp.where(offset < 0, offset + n_tiles_total, offset)
+    active = offset < jnp.minimum(num_tiles, n_tiles_total)
+    d_new = jnp.where(active[:, None], d_new, 0.0)
+
+    dbeta_out = d_new.reshape(p_loc)
+    xdb_out = X @ dbeta_out
+    return dbeta_out, xdb_out, jnp.minimum(num_tiles, n_tiles_total)
+
+
+SWEEPS = {"gauss-seidel": sweep_gauss_seidel, "jacobi": sweep_jacobi}
+
+
+def pad_features(X, beta=None, *, tile_size: int):
+    """Pad feature dim to a multiple of tile_size with zero columns.
+
+    Zero columns have h=0 and num=ν·β=0, so the solve leaves them at exactly
+    0 forever — padding is inert by construction (tested).
+    """
+    p = X.shape[1]
+    pad = (-p) % tile_size
+    if pad:
+        X = jnp.pad(X, ((0, 0), (0, pad)))
+        if beta is not None:
+            beta = jnp.pad(beta, (0, pad))
+    return (X, beta, p + pad) if beta is not None else (X, p + pad)

@@ -1,0 +1,326 @@
+"""d-GLMNET: distributed block-coordinate Newton descent for regularized GLMs.
+
+Implements the paper's Algorithms 1–4 as one jitted SPMD "superstep"
+(= one outer iteration), parameterized by mesh axis names so the same code
+runs:
+
+  * single-device (axis names None) — reference/unit-test path,
+  * 1-D feature split over ``model`` (the paper's exact layout, D=1),
+  * 2-D (data × model) — the beyond-paper scale-out (DESIGN.md §3),
+
+with the host loop only checking convergence and recording history.
+
+Superstep structure (paper Algorithm 4):
+  1. link stats (s, w, loss) at β from the maintained margin Xβ    [glm_stats]
+  2. local tile CD sweep over this node's feature block            [cd.py]
+  3. AllReduce XΔβ over the feature axis (optionally compressed)
+  4. global line search for α; Armijo with α_init pre-search     [linesearch]
+  5. β += αΔβ, Xβ += α·XΔβ; trust-region μ update (Algorithm 1 lines 9–12)
+  6. ALB cursor/budget bookkeeping (Section 7)
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core import cd as cd_lib
+from repro.core import linesearch
+from repro.kernels import ops
+from repro.sharding.compress import psum_compressed
+
+
+@dataclasses.dataclass(frozen=True)
+class DGLMNETConfig:
+    family: str = "logistic"
+    lam1: float = 0.0
+    lam2: float = 0.0
+    # trust region (paper Algorithm 1 / Section 4):
+    mu_init: float = 1.0
+    adaptive_mu: bool = True
+    eta1: float = 2.0
+    eta2: float = 2.0
+    nu: float = 1e-6
+    # line search (paper Algorithm 3):
+    sigma: float = 0.01
+    backtrack_b: float = 0.5
+    gamma: float = 0.0
+    ls_delta: float = 1e-3
+    ls_grid_size: int = 13
+    max_backtracks: int = 20
+    # sweep:
+    tile_size: int = 256
+    coupling: str = "gauss-seidel"          # or "jacobi"
+    kernel_backend: Optional[str] = None    # None = auto (ref on CPU)
+    # distribution:
+    compress_margin: Optional[str] = None   # None | "bf16" | "int8"
+    # ALB (Section 7): None = BSP (P^m = S^m every superstep)
+    alb: bool = False
+    alb_kappa: float = 0.75
+    # outer loop:
+    max_outer: int = 100
+    tol: float = 1e-8
+
+
+class FitState(NamedTuple):
+    beta: jnp.ndarray      # (p_loc,) feature-sharded weights
+    xb: jnp.ndarray        # (n_loc,) margins Xβ (model-replicated)
+    mu: jnp.ndarray        # () trust-region scale, replicated
+    cursor: jnp.ndarray    # (1,) per-feature-shard ALB tile cursor
+    step: jnp.ndarray      # () int32
+
+
+class FitResult(NamedTuple):
+    beta: np.ndarray
+    history: dict
+    n_iter: int
+    converged: bool
+
+
+def _psum(x, axis):
+    return jax.lax.psum(x, axis) if axis is not None else x
+
+
+def make_superstep(config: DGLMNETConfig, *, axis_data=None, axis_model=None,
+                   n_tiles_local: int, max_budget: Optional[int] = None):
+    """Build the jittable superstep closure.
+
+    Shapes (per device): X (n_loc, p_loc), y/mask (n_loc,), budget (1,) int32.
+    """
+    sweep = cd_lib.SWEEPS[config.coupling]
+    backend = config.kernel_backend
+    fam = config.family
+    static_bound = int(max_budget if max_budget is not None else n_tiles_local)
+
+    def superstep(X, y, mask, budget, state: FitState):
+        beta, xb, mu, cursor, step = state
+        n_loc, p_loc = X.shape
+
+        # (1) link statistics at the current iterate
+        loss_i, s, w = ops.glm_stats(y, xb, fam, mask=mask, backend=backend)
+        L = _psum(jnp.sum(loss_i), axis_data)
+        R0 = linesearch.penalty_terms(beta, jnp.zeros_like(beta),
+                                      jnp.zeros((1,)), config.lam1,
+                                      config.lam2, axis_model)[0]
+        f_cur = L + R0
+
+        # (2) local quadratic sub-problem: one (budgeted) tile CD cycle
+        dbeta0 = jnp.zeros_like(beta)
+        xdb0 = jnp.zeros_like(xb)
+        dbeta, xdb_local, tiles_done = sweep(
+            X, s, w, beta, dbeta0, xdb0,
+            mu=mu, nu=config.nu, lam1=config.lam1, lam2=config.lam2,
+            tile_size=config.tile_size, start_tile=cursor[0],
+            num_tiles=budget[0], max_num_tiles=static_bound,
+            axis_data=axis_data, backend=backend)
+
+        # (3) merge margin deltas across feature blocks (paper step 6)
+        xdb = psum_compressed(xdb_local, axis_model, config.compress_margin)
+
+        # (4) line search
+        grad_dot_dir = _psum(-jnp.sum(s * xdb), axis_data)
+        quad_local = _psum(jnp.sum(w * xdb_local * xdb_local), axis_data)
+        quad_form = (mu * _psum(quad_local, axis_model)
+                     + config.nu * _psum(jnp.sum(dbeta * dbeta), axis_model))
+        ls = linesearch.search(
+            y, xb, xdb, beta, dbeta, family=fam,
+            lam1=config.lam1, lam2=config.lam2, mu=mu, nu=config.nu,
+            f_current=f_cur, grad_dot_dir=grad_dot_dir, quad_form=quad_form,
+            sigma=config.sigma, b=config.backtrack_b, gamma=config.gamma,
+            delta=config.ls_delta, grid_size=config.ls_grid_size,
+            max_backtracks=config.max_backtracks,
+            axis_data=axis_data, axis_model=axis_model, backend=backend)
+
+        # (5) apply the step; adapt μ (Algorithm 1 lines 8–12)
+        beta_new = beta + ls.alpha * dbeta
+        xb_new = xb + ls.alpha * xdb
+        if config.adaptive_mu:
+            mu_new = jnp.where(ls.alpha < 1.0, config.eta1 * mu,
+                               jnp.maximum(1.0, mu / config.eta2))
+        else:
+            mu_new = mu
+
+        # (6) ALB cursor rotation (Section 7)
+        cursor_new = jnp.remainder(cursor + tiles_done, n_tiles_local)
+
+        nnz = _psum(jnp.sum((beta_new != 0.0).astype(jnp.int32)), axis_model)
+        metrics = {
+            "f": ls.f_new, "f_before": f_cur, "loss": L,
+            "alpha": ls.alpha, "mu": mu_new, "nnz": nnz,
+            "accepted_unit": ls.accepted_unit.astype(jnp.int32),
+            "D": ls.D,
+        }
+        return FitState(beta_new, xb_new, mu_new, cursor_new, step + 1), metrics
+
+    return superstep
+
+
+# ---------------------------------------------------------------------------
+# single-device convenience driver
+# ---------------------------------------------------------------------------
+
+def fit(X, y, config: DGLMNETConfig, *, beta0=None, verbose=False) -> FitResult:
+    """Fit on one device. X: (n, p) dense array-like."""
+    X = jnp.asarray(X, jnp.float32)
+    y = jnp.asarray(y, jnp.float32)
+    n, p = X.shape
+    X, p_pad = cd_lib.pad_features(X, tile_size=config.tile_size)
+    beta = jnp.zeros((p_pad,), jnp.float32)
+    if beta0 is not None:
+        beta = beta.at[:p].set(jnp.asarray(beta0, jnp.float32))
+    mask = jnp.ones((n,), jnp.float32)
+    n_tiles = p_pad // config.tile_size
+
+    state = FitState(beta=beta, xb=X @ beta, mu=jnp.float32(config.mu_init),
+                     cursor=jnp.zeros((1,), jnp.int32),
+                     step=jnp.int32(0))
+    budget = jnp.full((1,), n_tiles, jnp.int32)
+    superstep = jax.jit(make_superstep(config, n_tiles_local=n_tiles))
+
+    history = {k: [] for k in ("f", "alpha", "mu", "nnz", "accepted_unit")}
+    f_prev, converged, it = np.inf, False, 0
+    for it in range(1, config.max_outer + 1):
+        state, m = superstep(X, y, mask, budget, state)
+        f = float(m["f"])
+        for k in history:
+            history[k].append(float(m[k]))
+        if verbose:
+            print(f"[dglmnet] it={it} f={f:.8f} alpha={float(m['alpha']):.4f} "
+                  f"mu={float(m['mu']):.3f} nnz={int(m['nnz'])}")
+        if np.isfinite(f_prev) and abs(f_prev - f) <= config.tol * max(1.0, abs(f)):
+            converged = True
+            break
+        f_prev = f
+    return FitResult(np.asarray(state.beta)[:p], history, it, converged)
+
+
+# ---------------------------------------------------------------------------
+# sharded driver (1-D feature split = paper; 2-D data × feature = extension)
+# ---------------------------------------------------------------------------
+
+def fit_sharded(X, y, config: DGLMNETConfig, mesh, *,
+                axis_data: Optional[str] = "data",
+                axis_model: str = "model",
+                speeds=None, seed: int = 0, verbose=False,
+                ckpt_manager=None, ckpt_every: int = 10) -> FitResult:
+    """Fit with X sharded (rows over ``axis_data``, features over
+    ``axis_model``).  ``speeds``: optional per-feature-shard relative node
+    speeds for ALB straggler simulation (None = homogeneous).
+    ``ckpt_manager``: optional CheckpointManager — superstep-boundary
+    checkpoints of (β, Xβ, μ, cursors, step); on start, the latest
+    checkpoint is restored (elastically, onto THIS mesh) and the outer loop
+    resumes from its iteration.
+    """
+    from repro.core import alb as alb_lib
+
+    X = np.asarray(X, np.float32)
+    y = np.asarray(y, np.float32)
+    n, p = X.shape
+    D = mesh.shape[axis_data] if axis_data else 1
+    M = mesh.shape[axis_model]
+    T = config.tile_size
+
+    # pad rows to D, features to M*T multiples
+    n_pad = (-n) % D
+    p_pad = (-p) % (M * T)
+    Xp = np.pad(X, ((0, n_pad), (0, p_pad)))
+    yp = np.pad(y, (0, n_pad), constant_values=1.0)
+    maskp = np.pad(np.ones((n,), np.float32), (0, n_pad))
+    n_tot, p_tot = Xp.shape
+    p_loc = p_tot // M
+    n_tiles_local = p_loc // T
+
+    x_spec = P(axis_data, axis_model)
+    row_spec = P(axis_data)
+    feat_spec = P(axis_model)
+
+    Xs = jax.device_put(Xp, NamedSharding(mesh, x_spec))
+    ys = jax.device_put(yp, NamedSharding(mesh, row_spec))
+    masks = jax.device_put(maskp, NamedSharding(mesh, row_spec))
+
+    # ALB budgets: fraction-κ completion rule (paper Section 7)
+    if config.alb:
+        rng = np.random.default_rng(seed)
+        base_speeds = np.asarray(speeds, np.float32) if speeds is not None \
+            else np.ones((M,), np.float32)
+        max_budget = int(alb_lib.max_budget(n_tiles_local))
+    else:
+        base_speeds = np.ones((M,), np.float32)
+        max_budget = n_tiles_local
+
+    superstep_fn = make_superstep(config, axis_data=axis_data,
+                                  axis_model=axis_model,
+                                  n_tiles_local=n_tiles_local,
+                                  max_budget=max_budget)
+
+    state_specs = FitState(beta=feat_spec, xb=row_spec, mu=P(),
+                           cursor=feat_spec, step=P())
+    metric_spec = P()
+    mapped = jax.jit(jax.shard_map(
+        superstep_fn, mesh=mesh,
+        in_specs=(x_spec, row_spec, row_spec, feat_spec, state_specs),
+        out_specs=(state_specs, {k: metric_spec for k in
+                                 ("f", "f_before", "loss", "alpha", "mu",
+                                  "nnz", "accepted_unit", "D")}),
+        check_vma=False,
+    ))
+
+    state = FitState(
+        beta=jax.device_put(np.zeros((p_tot,), np.float32),
+                            NamedSharding(mesh, feat_spec)),
+        xb=jax.device_put(np.zeros((n_tot,), np.float32),
+                          NamedSharding(mesh, row_spec)),
+        mu=jnp.float32(config.mu_init),
+        cursor=jax.device_put(np.zeros((M,), np.int32),
+                              NamedSharding(mesh, feat_spec)),
+        step=jnp.int32(0),
+    )
+
+    history = {k: [] for k in ("f", "alpha", "mu", "nnz", "accepted_unit")}
+    f_prev, converged, it = np.inf, False, 0
+    start_it = 1
+    if ckpt_manager is not None and ckpt_manager.latest_step() is not None:
+        # elastic resume: cursors are per-feature-shard; when M changed,
+        # restart cursors at 0 (coverage guarantee unaffected)
+        saved, md = ckpt_manager.restore(
+            {"beta": state.beta, "xb": state.xb, "mu": state.mu},
+        )
+        state = state._replace(beta=saved["beta"], xb=saved["xb"],
+                               mu=saved["mu"],
+                               step=jnp.int32(md["next_it"] - 1))
+        f_prev = md.get("f_prev", np.inf)
+        start_it = int(md["next_it"])
+    rng = np.random.default_rng(seed)
+    for it in range(start_it, config.max_outer + 1):
+        if config.alb:
+            budgets = alb_lib.alb_budgets(
+                alb_lib.sample_speeds(rng, base_speeds),
+                n_tiles_local, config.alb_kappa, max_budget)
+        else:
+            budgets = np.full((M,), n_tiles_local, np.int32)
+        budgets_dev = jax.device_put(budgets.astype(np.int32),
+                                     NamedSharding(mesh, feat_spec))
+        state, m = mapped(Xs, ys, masks, budgets_dev, state)
+        f = float(m["f"])
+        for k in history:
+            history[k].append(float(m[k]))
+        if verbose:
+            print(f"[dglmnet/{D}x{M}] it={it} f={f:.8f} "
+                  f"alpha={float(m['alpha']):.4f} nnz={int(m['nnz'])}")
+        if ckpt_manager is not None and it % ckpt_every == 0:
+            ckpt_manager.save(it, {"beta": state.beta, "xb": state.xb,
+                                   "mu": state.mu},
+                              metadata={"next_it": it + 1, "f_prev": f})
+        if np.isfinite(f_prev) and abs(f_prev - f) <= config.tol * max(1.0, abs(f)):
+            converged = True
+            break
+        f_prev = f
+    if ckpt_manager is not None:
+        ckpt_manager.wait()
+    beta_full = np.asarray(state.beta)[:p]
+    return FitResult(beta_full, history, it, converged)

@@ -1,0 +1,62 @@
+"""GLM head probes on frozen LM features — where the paper's technique plugs
+into the assigned LM architectures (DESIGN.md §Arch-applicability).
+
+The workload: extract pooled features Φ ∈ R^{n×d} from a frozen backbone,
+then fit an elastic-net GLM readout with d-GLMNET, feature-splitting Φ's
+columns over the ``model`` mesh axis exactly as the paper splits its design
+matrix.  This is the classic calibration / linear-probe / CTR-readout setting
+the paper targets (text classification, clickstream), fed by LM embeddings.
+
+Multi-class is one-vs-rest: each class is an independent binary GLM, so
+classes × feature-blocks give two levels of embarrassing parallelism; we
+vmap classes and shard features.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dglmnet
+from repro.core.dglmnet import DGLMNETConfig
+
+
+def extract_features(apply_fn: Callable, params, token_batches,
+                     *, pool: str = "mean") -> np.ndarray:
+    """Run the frozen backbone over batches; mean/last-token pool the final
+    hidden states. ``apply_fn(params, tokens) -> (B, S, d) hidden states``."""
+    feats = []
+    for tokens in token_batches:
+        h = apply_fn(params, tokens)
+        if pool == "mean":
+            feats.append(np.asarray(jnp.mean(h, axis=1)))
+        elif pool == "last":
+            feats.append(np.asarray(h[:, -1, :]))
+        else:
+            raise ValueError(f"unknown pool {pool!r}")
+    return np.concatenate(feats, axis=0)
+
+
+def fit_probe(features, labels, config: DGLMNETConfig, *, mesh=None,
+              **fit_kwargs) -> dglmnet.FitResult:
+    """Binary probe: labels in {-1, +1}. Features are the GLM design matrix."""
+    if mesh is None:
+        return dglmnet.fit(features, labels, config, **fit_kwargs)
+    return dglmnet.fit_sharded(features, labels, config, mesh, **fit_kwargs)
+
+
+def fit_probe_multiclass(features, labels_int, n_classes: int,
+                         config: DGLMNETConfig, *, mesh=None):
+    """One-vs-rest multi-class probe. Returns (n_classes, d) weight matrix."""
+    betas = []
+    for c in range(n_classes):
+        y = np.where(np.asarray(labels_int) == c, 1.0, -1.0).astype(np.float32)
+        res = fit_probe(features, y, config, mesh=mesh)
+        betas.append(res.beta)
+    return np.stack(betas, axis=0)
+
+
+def predict_proba(features, beta):
+    return jax.nn.sigmoid(jnp.asarray(features) @ jnp.asarray(beta))

@@ -1,0 +1,1 @@
+from repro.data import synthetic, sparse  # noqa: F401

@@ -1,0 +1,66 @@
+"""Pallas TPU kernel: K-candidate line-search objective sweep.
+
+Evaluates losses[k] = sum_i l(y_i, xb_i + alpha_k * xdb_i) for a whole grid
+of step sizes in ONE streaming pass over the examples.  The d-GLMNET line
+search (Algorithm 3) needs f(beta + alpha*dbeta) at the alpha_init pre-search
+grid and at every Armijo backtracking candidate; evaluating them together
+turns O(K) HBM sweeps of the margin vectors into one.
+
+Grid iterates over example blocks; the (1, K) output block is revisited by
+every grid step and accumulated in VMEM (initialized at step 0).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.glm_stats import _STATS
+
+
+def _kernel(y_ref, xb_ref, xdb_ref, mask_ref, alphas_ref, out_ref, *, family):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    y = y_ref[...]            # (B, C)
+    xb = xb_ref[...]
+    xdb = xdb_ref[...]
+    mask = mask_ref[...]
+    alphas = alphas_ref[...]  # (1, K)
+
+    K = alphas.shape[-1]
+
+    def per_alpha(k, acc):
+        a = jax.lax.dynamic_index_in_dim(alphas[0], k, keepdims=False)
+        loss, _, _ = _STATS[family](y, xb + a * xdb)
+        acc = jax.lax.dynamic_update_index_in_dim(
+            acc, jnp.sum(loss * mask), k, axis=0)
+        return acc
+
+    partial = jax.lax.fori_loop(0, K, per_alpha, jnp.zeros((K,), jnp.float32))
+    out_ref[...] += partial[None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("family", "block_rows", "interpret"))
+def alpha_search_pallas(y2, xb2, xdb2, mask2, alphas, *, family,
+                        block_rows=256, interpret=True):
+    """y2/xb2/xdb2/mask2: (R, 128); alphas: (K,). Returns (K,) losses."""
+    R, C = y2.shape
+    K = alphas.shape[0]
+    grid = (R // block_rows,)
+    dspec = pl.BlockSpec((block_rows, C), lambda i: (i, 0))
+    f32 = jnp.float32
+    out = pl.pallas_call(
+        functools.partial(_kernel, family=family),
+        grid=grid,
+        in_specs=[dspec, dspec, dspec, dspec,
+                  pl.BlockSpec((1, K), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((1, K), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, K), f32),
+        interpret=interpret,
+    )(y2.astype(f32), xb2.astype(f32), xdb2.astype(f32), mask2.astype(f32),
+      alphas.astype(f32)[None, :])
+    return out[0]

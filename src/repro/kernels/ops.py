@@ -1,0 +1,100 @@
+"""Public jit'd entry points for the kernels package.
+
+Each op dispatches between:
+  * the Pallas kernel, compiled (TPU) or interpret mode (CPU validation),
+  * the pure-jnp oracle in ref.py (``backend="ref"``) — also the path used
+    inside shard_map'd distributed code where the vectors are already tiled
+    by the partitioner and XLA fusion is adequate.
+
+The default is chosen per jax backend; tests exercise both and assert they
+agree.
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.alpha_search import alpha_search_pallas
+from repro.kernels.cd_tile_solve import cd_tile_solve_pallas
+from repro.kernels.glm_stats import glm_stats_pallas
+
+_LANES = 128
+
+
+def default_backend() -> str:
+    env = os.environ.get("REPRO_KERNEL_BACKEND")
+    if env:
+        return env
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pack_2d(*vecs, block_rows):
+    """Pad 1-D vectors to (R, 128) with R % block_rows == 0, plus a mask."""
+    n = vecs[0].shape[0]
+    per_block = block_rows * _LANES
+    n_pad = (-n) % per_block
+    total = n + n_pad
+    mask = jnp.concatenate([jnp.ones((n,), jnp.float32),
+                            jnp.zeros((n_pad,), jnp.float32)])
+    packed = [jnp.concatenate([v.astype(jnp.float32),
+                               jnp.zeros((n_pad,), jnp.float32)]).reshape(-1, _LANES)
+              for v in vecs]
+    return packed, mask.reshape(-1, _LANES), total
+
+
+# ---------------------------------------------------------------------------
+
+
+def cd_tile_solve(G, g, h, beta_t, dbeta_t, mu, nu, lam1, lam2, *, backend=None):
+    """Exact sequential tile solve; see kernels/cd_tile_solve.py."""
+    backend = backend or default_backend()
+    if backend == "ref":
+        return ref.cd_tile_solve(G, g, h, beta_t, dbeta_t, mu, nu, lam1, lam2)
+    params = jnp.stack([jnp.asarray(mu, jnp.float32),
+                        jnp.asarray(nu, jnp.float32),
+                        jnp.asarray(lam1, jnp.float32),
+                        jnp.asarray(lam2, jnp.float32)])
+    return cd_tile_solve_pallas(G, g, h, beta_t, dbeta_t, params,
+                                interpret=_interpret())
+
+
+def glm_stats(y, xb, family, *, mask=None, backend=None, block_rows=256):
+    """(loss_i, s_i, w_i) per example. 1-D in, 1-D out."""
+    backend = backend or default_backend()
+    n = y.shape[0]
+    if mask is None:
+        mask = jnp.ones((n,), jnp.float32)
+    if backend == "ref":
+        return ref.glm_stats(y, xb, mask, family)
+    packed, pad_mask, _ = _pack_2d(y, xb, mask, block_rows=block_rows)
+    y2, xb2, mask_user = packed
+    mask2 = mask_user * pad_mask  # combine user mask with padding mask
+    loss2, s2, w2 = glm_stats_pallas(y2, xb2, mask2, family=family,
+                                     block_rows=block_rows,
+                                     interpret=_interpret())
+    flat = lambda a: a.reshape(-1)[:n]
+    return flat(loss2), flat(s2), flat(w2)
+
+
+def alpha_search(y, xb, xdb, alphas, family, *, mask=None, backend=None,
+                 block_rows=256):
+    """losses[k] = sum_i l(y_i, xb_i + alphas[k]*xdb_i)."""
+    backend = backend or default_backend()
+    n = y.shape[0]
+    if mask is None:
+        mask = jnp.ones((n,), jnp.float32)
+    if backend == "ref":
+        return ref.alpha_search(y, xb, xdb, mask, alphas, family)
+    packed, pad_mask, _ = _pack_2d(y, xb, xdb, mask, block_rows=block_rows)
+    y2, xb2, xdb2, mask2 = packed
+    mask2 = mask2 * pad_mask
+    return alpha_search_pallas(y2, xb2, xdb2, mask2, alphas, family=family,
+                               block_rows=block_rows, interpret=_interpret())

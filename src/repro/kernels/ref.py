@@ -1,0 +1,82 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the semantics contract: tests sweep shapes/dtypes and assert the
+pallas kernels (interpret mode on CPU, compiled on TPU) match these to float
+tolerance.  They are also the fallback implementation on backends without
+Pallas support.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import glm as glm_lib
+
+
+# ---------------------------------------------------------------------------
+# cd_tile_solve: sequential Gauss-Seidel soft-threshold pass over one feature
+# tile, using the tile Gram matrix (GLMNET "covariance updates" re-blocked).
+# ---------------------------------------------------------------------------
+
+def cd_tile_solve(G, g, h, beta_t, dbeta_t, mu, nu, lam1, lam2):
+    """One cyclic pass of exact coordinate minimization over a feature tile.
+
+    Args:
+      G: (T, T)  tile Gram block  X_t^T diag(w) X_t  (row-psummed upstream).
+      g: (T,)    g_k = sum_i x_ik [ s_i - mu * w_i * (X dbeta)_i ]   at tile
+                 entry, where (X dbeta) is the *local block's* current margin
+                 delta (Gauss-Seidel across tiles).
+      h: (T,)    diag(G) = sum_i w_i x_ik^2.
+      beta_t:  (T,) current outer-iterate weights for the tile (FIXED).
+      dbeta_t: (T,) current accumulated step for the tile (updated).
+      mu, nu, lam1, lam2: scalars (see DESIGN.md update rule).
+
+    Returns:
+      (T,) new dbeta_t.
+
+    Invariant used: updating coordinate j by delta changes
+    g_k by  -mu * delta * G[k, j]  for every k — no re-touch of X needed.
+    """
+    T = g.shape[0]
+    den = mu * h + nu + lam2
+
+    def body(j, carry):
+        g_c, d_c = carry
+        num = g_c[j] + mu * h[j] * (beta_t[j] + d_c[j]) + nu * beta_t[j]
+        u = glm_lib.soft_threshold(num, lam1) / jnp.maximum(den[j], 1e-30)
+        # dead coordinate (all-zero column, nu == lam2 == 0): keep at 0
+        u = jnp.where(den[j] > 0, u, beta_t[j])
+        d_new = u - beta_t[j]
+        delta = d_new - d_c[j]
+        g_c = g_c - mu * delta * G[:, j]
+        d_c = d_c.at[j].set(d_new)
+        return g_c, d_c
+
+    _, dbeta_new = jax.lax.fori_loop(0, T, body, (g, dbeta_t))
+    return dbeta_new
+
+
+# ---------------------------------------------------------------------------
+# glm_stats: fused per-example link statistics.
+# ---------------------------------------------------------------------------
+
+def glm_stats(y, xb, mask, family: str):
+    """(loss_i, s_i, w_i) for margin xb, masked (padding rows -> 0)."""
+    fam = glm_lib.get_family(family)
+    loss, s, w = fam.stats(y, xb)
+    return loss * mask, s * mask, w * mask
+
+
+# ---------------------------------------------------------------------------
+# alpha_search: K-candidate line-search objective sweep in one data pass.
+# ---------------------------------------------------------------------------
+
+def alpha_search(y, xb, xdb, mask, alphas, family: str):
+    """losses[k] = sum_i mask_i * l(y_i, xb_i + alphas[k] * xdb_i).
+
+    Shapes: y, xb, xdb, mask: (n,);  alphas: (K,);  out: (K,).
+    """
+    fam = glm_lib.get_family(family)
+    m = xb[None, :] + alphas[:, None] * xdb[None, :]        # (K, n)
+    loss, _, _ = fam.stats(y[None, :], m)
+    return jnp.sum(loss * mask[None, :], axis=-1)

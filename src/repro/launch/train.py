@@ -1,0 +1,62 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+Selects any registry architecture (full or smoke-reduced), builds/loads the
+mesh, and drives the fault-tolerant trainer.  On this CPU host use
+``--smoke`` (reduced configs) or ``--devices N`` for simulated meshes; on a
+real TPU slice the same flags address the production meshes in mesh.py.
+"""
+import argparse
+import os
+import sys
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced smoke config (CPU-friendly)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default="checkpoints")
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--devices", type=int, default=0,
+                    help="simulate N devices on CPU (mesh (1, N))")
+    ap.add_argument("--parallelism", default="tp", choices=["tp", "fsdp"])
+    args = ap.parse_args()
+
+    if args.devices:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.devices}")
+
+    import jax
+    from repro.configs.registry import get_arch, smoke_variant
+    from repro.optim import adamw
+    from repro.runtime.trainer import Trainer, TrainerConfig
+
+    cfg = smoke_variant(args.arch) if args.smoke else get_arch(args.arch)
+    cfg = cfg.replace(parallelism=args.parallelism)
+    mesh = None
+    if args.devices:
+        mesh = jax.make_mesh((1, args.devices), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+    trainer = Trainer(
+        cfg,
+        adamw.AdamWConfig(lr=args.lr, warmup_steps=max(args.steps // 20, 1),
+                          total_steps=args.steps),
+        TrainerConfig(steps=args.steps, ckpt_every=args.ckpt_every,
+                      ckpt_dir=args.ckpt_dir, batch=args.batch,
+                      seq_len=args.seq_len,
+                      microbatches=args.microbatches,
+                      log_path=os.path.join(args.ckpt_dir, "train.jsonl")),
+        mesh=mesh)
+    _, _, losses = trainer.run()
+    print(f"final loss: {losses[-1]:.4f} over {len(losses)} steps")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

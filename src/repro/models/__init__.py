@@ -1,0 +1,8 @@
+"""LM model zoo hosting the 10 assigned architectures.
+
+Pure-functional JAX models: parameters are nested dicts of arrays; every
+parameter is declared once with its shape AND its mesh PartitionSpec
+(models/common.ParamDef), so the same definitions drive random init (smoke
+tests), abstract init (dry-run lowering), and checkpointing.
+"""
+from repro.models import lm  # noqa: F401

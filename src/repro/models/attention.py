@@ -1,0 +1,208 @@
+"""Attention blocks: GQA (+RoPE, sliding-window, softcap, QKV bias),
+DeepSeek-style MLA with compressed-latent KV cache, and cross-attention.
+
+Every block provides ``defs(cfg)`` (ParamDef tree with shardings) and
+``apply`` for full-sequence (train / prefill) and single-token decode modes.
+TP sharding: heads over the ``model`` axis (Q and KV; GSPMD pads when the
+head count does not divide the axis — see DESIGN.md), output projection
+row-sharded so the block ends in one psum.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import common
+from repro.models.common import ParamDef, chunked_attention, decode_attention, rope
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+def gqa_defs(cfg):
+    d, H, Hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    defs = {
+        "wq": ParamDef((d, H, hd), P(None, "model", None)),
+        "wk": ParamDef((d, Hkv, hd), P(None, "model", None)),
+        "wv": ParamDef((d, Hkv, hd), P(None, "model", None)),
+        "wo": ParamDef((H, hd, d), P("model", None, None)),
+    }
+    if cfg.qkv_bias:
+        defs["bq"] = ParamDef((H, hd), P("model", None), init_scale=0.0)
+        defs["bk"] = ParamDef((Hkv, hd), P("model", None), init_scale=0.0)
+        defs["bv"] = ParamDef((Hkv, hd), P("model", None), init_scale=0.0)
+    return defs
+
+
+def gqa_cache_defs(cfg, batch, s_max):
+    Hkv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    return {
+        "k": ParamDef((batch, s_max, Hkv, hd), P("data", None, "model", None)),
+        "v": ParamDef((batch, s_max, Hkv, hd), P("data", None, "model", None)),
+    }
+
+
+def _qkv(p, x, cfg):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    return q, k, v
+
+
+def gqa_full(p, x, cfg, *, window=None, theta=None, cache=None, positions=None):
+    """Train / prefill. x: (B, S, d). Returns (out, cache')."""
+    B, S, _ = x.shape
+    q, k, v = _qkv(p, x, cfg)
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+    th = theta if theta is not None else cfg.rope_theta
+    q = rope(q, positions, th)
+    k = rope(k, positions, th)
+    out = chunked_attention(q, k, v, causal=True, window=window,
+                            chunk=cfg.attn_chunk, softcap=cfg.attn_softcap,
+                            impl=getattr(cfg, "attn_impl", "flash"))
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    if cache is not None:
+        s_max = cache["k"].shape[1]
+        kp = jnp.pad(k, ((0, 0), (0, s_max - S), (0, 0), (0, 0)))
+        vp = jnp.pad(v, ((0, 0), (0, s_max - S), (0, 0), (0, 0)))
+        cache = {"k": kp.astype(cache["k"].dtype),
+                 "v": vp.astype(cache["v"].dtype)}
+    return y, cache
+
+
+def gqa_decode(p, x, cfg, cache, cache_len, *, window=None, theta=None):
+    """x: (B, 1, d); cache_len: () current valid length. Returns (out, cache')."""
+    q, k, v = _qkv(p, x, cfg)
+    pos = jnp.full((x.shape[0], 1), cache_len, jnp.int32)
+    th = theta if theta is not None else cfg.rope_theta
+    q = rope(q, pos, th)
+    k = rope(k, pos, th)
+    k_cache = jax.lax.dynamic_update_slice(
+        cache["k"], k.astype(cache["k"].dtype), (0, cache_len, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(
+        cache["v"], v.astype(cache["v"].dtype), (0, cache_len, 0, 0))
+    out = decode_attention(q, k_cache, v_cache, cache_len + 1, window=window,
+                           softcap=cfg.attn_softcap)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return y, {"k": k_cache, "v": v_cache}
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2): low-rank compressed KV latent; cache stores the latent.
+# ---------------------------------------------------------------------------
+
+def mla_defs(cfg):
+    d, H = cfg.d_model, cfg.n_heads
+    r, dn, dr, dv = (cfg.kv_lora_rank, cfg.qk_nope_dim, cfg.qk_rope_dim,
+                     cfg.v_head_dim)
+    return {
+        "wq": ParamDef((d, H, dn + dr), P(None, "model", None)),
+        "w_dkv": ParamDef((d, r + dr), P(None, None)),
+        "kv_norm": ParamDef((r,), P(None), init_scale=0.0),
+        "w_uk": ParamDef((r, H, dn), P(None, "model", None)),
+        "w_uv": ParamDef((r, H, dv), P(None, "model", None)),
+        "wo": ParamDef((H, dv, d), P("model", None, None)),
+    }
+
+
+def mla_cache_defs(cfg, batch, s_max):
+    r, dr = cfg.kv_lora_rank, cfg.qk_rope_dim
+    return {"ckv": ParamDef((batch, s_max, r), P("data", None, None)),
+            "kpe": ParamDef((batch, s_max, dr), P("data", None, None))}
+
+
+def _mla_qkv(p, x, cfg, positions):
+    dn, dr = cfg.qk_nope_dim, cfg.qk_rope_dim
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    q_nope, q_pe = q[..., :dn], q[..., dn:]
+    q_pe = rope(q_pe, positions, cfg.rope_theta)
+    dkv = x @ p["w_dkv"]                       # (B, S, r + dr)
+    ckv, kpe = dkv[..., :cfg.kv_lora_rank], dkv[..., cfg.kv_lora_rank:]
+    ckv = common.rms_norm(ckv, p["kv_norm"], cfg.norm_eps)
+    kpe = rope(kpe[..., None, :], positions, cfg.rope_theta)[..., 0, :]
+    return q_nope, q_pe, ckv, kpe
+
+
+def _mla_attend(p, q_nope, q_pe, ckv, kpe, cfg):
+    """Expand latent to per-head K/V and run chunked attention with the
+    rope channel appended (decoupled-RoPE trick)."""
+    k_nope = jnp.einsum("bsr,rhk->bshk", ckv, p["w_uk"])
+    v = jnp.einsum("bsr,rhk->bshk", ckv, p["w_uv"])
+    H = k_nope.shape[2]
+    kpe_h = jnp.broadcast_to(kpe[:, :, None, :],
+                             kpe.shape[:2] + (H, kpe.shape[-1]))
+    q_full = jnp.concatenate([q_nope, q_pe], axis=-1)
+    k_full = jnp.concatenate([k_nope, kpe_h], axis=-1)
+    import math
+    scale = 1.0 / math.sqrt(cfg.qk_nope_dim + cfg.qk_rope_dim)
+    return q_full, k_full, v, scale
+
+
+def mla_full(p, x, cfg, *, cache=None, positions=None, **_):
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+    q_nope, q_pe, ckv, kpe = _mla_qkv(p, x, cfg, positions)
+    q_full, k_full, v, scale = _mla_attend(p, q_nope, q_pe, ckv, kpe, cfg)
+    out = chunked_attention(q_full, k_full, v, causal=True,
+                            chunk=cfg.attn_chunk, scale=scale,
+                            impl=getattr(cfg, "attn_impl", "flash"))
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    if cache is not None:
+        s_max = cache["ckv"].shape[1]
+        cache = {
+            "ckv": jnp.pad(ckv, ((0, 0), (0, s_max - S), (0, 0)))
+            .astype(cache["ckv"].dtype),
+            "kpe": jnp.pad(kpe, ((0, 0), (0, s_max - S), (0, 0)))
+            .astype(cache["kpe"].dtype),
+        }
+    return y, cache
+
+
+def mla_decode(p, x, cfg, cache, cache_len, **_):
+    pos = jnp.full((x.shape[0], 1), cache_len, jnp.int32)
+    q_nope, q_pe, ckv, kpe = _mla_qkv(p, x, cfg, pos)
+    ckv_c = jax.lax.dynamic_update_slice(
+        cache["ckv"], ckv.astype(cache["ckv"].dtype), (0, cache_len, 0))
+    kpe_c = jax.lax.dynamic_update_slice(
+        cache["kpe"], kpe.astype(cache["kpe"].dtype), (0, cache_len, 0))
+    q_full, k_full, v, scale = _mla_attend(
+        p, q_nope, q_pe, ckv_c.astype(x.dtype), kpe_c.astype(x.dtype), cfg)
+    B = x.shape[0]
+    out = decode_attention(q_full, k_full, v, cache_len + 1, scale=scale)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return y, {"ckv": ckv_c, "kpe": kpe_c}
+
+
+# ---------------------------------------------------------------------------
+# cross-attention (VLM image layers, whisper decoder)
+# ---------------------------------------------------------------------------
+
+def cross_defs(cfg, kv_dim=None):
+    d, H, Hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    kd = kv_dim or d
+    return {
+        "wq": ParamDef((d, H, hd), P(None, "model", None)),
+        "wk": ParamDef((kd, Hkv, hd), P(None, "model", None)),
+        "wv": ParamDef((kd, Hkv, hd), P(None, "model", None)),
+        "wo": ParamDef((H, hd, d), P("model", None, None)),
+    }
+
+
+def cross_apply(p, x, kv_src, cfg):
+    """kv_src: (B, S_kv, kd) encoder/image states. No mask, no rope."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", kv_src, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", kv_src, p["wv"])
+    out = chunked_attention(q, k, v, causal=False, chunk=cfg.attn_chunk,
+                            impl=getattr(cfg, "attn_impl", "flash"))
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])

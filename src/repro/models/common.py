@@ -1,0 +1,347 @@
+"""Shared model machinery: parameter definitions with shardings, norms,
+rotary embeddings, and memory-efficient (chunked online-softmax) attention.
+
+Every parameter is a ``ParamDef(shape, spec)``; ``init_params`` materializes
+random arrays (smoke tests), ``abstract_params`` materializes
+ShapeDtypeStructs carrying NamedShardings (dry-run lowering — zero bytes
+allocated).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: tuple
+    spec: P
+    dtype: Any = jnp.float32
+    init_scale: float = 1.0   # stddev multiplier over 1/sqrt(fan_in)
+
+
+def tree_defs_map(fn, defs):
+    return jax.tree.map(fn, defs,
+                        is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def init_params(defs, key, dtype=None):
+    leaves, treedef = jax.tree.flatten(
+        defs, is_leaf=lambda x: isinstance(x, ParamDef))
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for k, d in zip(keys, leaves):
+        fan_in = d.shape[-2] if len(d.shape) >= 2 else max(d.shape[-1], 1)
+        std = d.init_scale / math.sqrt(max(fan_in, 1))
+        dt = dtype or d.dtype
+        if d.init_scale == 0.0:
+            out.append(jnp.zeros(d.shape, dt))
+        else:
+            out.append((jax.random.normal(k, d.shape, jnp.float32) * std)
+                       .astype(dt))
+    return jax.tree.unflatten(treedef, out)
+
+
+def abstract_params(defs, mesh, dtype=None):
+    def mk(d: ParamDef):
+        return jax.ShapeDtypeStruct(d.shape, dtype or d.dtype,
+                                    sharding=NamedSharding(mesh, d.spec))
+    return tree_defs_map(mk, defs)
+
+
+def param_count(defs) -> int:
+    leaves = jax.tree.leaves(defs, is_leaf=lambda x: isinstance(x, ParamDef))
+    return int(sum(np.prod(d.shape) for d in leaves))
+
+
+# ---------------------------------------------------------------------------
+# norms / activations
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, scale, eps=1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)).astype(x.dtype) \
+        * (1.0 + scale.astype(x.dtype))
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    return (jax.nn.silu(x @ w_gate) * (x @ w_up)) @ w_down
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope(x, positions, theta=10000.0):
+    """x: (..., S, H, hd); positions: (..., S) int32."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(angles)[..., :, None, :]
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# chunked online-softmax attention (flash-style in pure JAX)
+# ---------------------------------------------------------------------------
+
+def _mask_bias(q_pos, k_pos, *, causal, window, dtype):
+    """(Sq, Sk) additive bias from position vectors."""
+    ok = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        ok &= k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        ok &= k_pos[None, :] > q_pos[:, None] - window
+    return jnp.where(ok, 0.0, jnp.finfo(dtype).min).astype(dtype)
+
+
+_BIG_WINDOW = jnp.int32(2**30)
+
+
+def _mask_bias_arr(q_pos, k_pos, *, causal, window):
+    """(Sq, Sk) additive f32 bias; ``window`` is a traced int32 scalar."""
+    ok = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        ok &= k_pos[None, :] <= q_pos[:, None]
+    ok &= k_pos[None, :] > q_pos[:, None] - window
+    return jnp.where(ok, 0.0, jnp.finfo(jnp.float32).min)
+
+
+def _flash_fwd_impl(causal, q_offset, chunk, softcap, scale, q_raw, k_raw,
+                    v_raw, window):
+    """Online-softmax forward from RAW inputs (original dtype, unrepeated
+    GQA kv).  Returns (out_f32 (B,H,Sq,hd_v), lse (B,H,Sq)).
+
+    Keeping the raw inputs as the only custom_vjp residuals matters: remat
+    cannot see through custom_vjp, so whatever the vjp saves is pinned in
+    HBM across the whole layer scan — f32/repeated copies of q,k,v (or the
+    f32 out) would cost tens of GB per chip at mistral-123B scale
+    (EXPERIMENTS.md §Perf, iteration 3).
+    """
+    rep = q_raw.shape[2] // k_raw.shape[2]
+    q = (q_raw * scale).astype(jnp.float32)
+    k = k_raw.astype(jnp.float32)
+    v = v_raw.astype(jnp.float32)
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    B, Sq, H, hd = q.shape
+    Sk = k.shape[1]
+    hd_v = v.shape[-1]
+    q_pos = q_offset + jnp.arange(Sq)
+    n_chunks = max(1, (Sk + chunk - 1) // chunk)
+    pad = n_chunks * chunk - Sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(B, n_chunks, chunk, H, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, n_chunks, chunk, H, hd_v).transpose(1, 0, 2, 3, 4)
+
+    def step(carry, xs):
+        m_prev, l_prev, acc = carry
+        kb, vb, c_idx = xs
+        k_pos = c_idx * chunk + jnp.arange(chunk)
+        logits = jnp.einsum("bqhd,bkhd->bhqk", q, kb)
+        if softcap is not None:
+            logits = softcap * jnp.tanh(logits / softcap)
+        bias = _mask_bias_arr(q_pos, k_pos, causal=causal, window=window)
+        bias = jnp.where((k_pos < Sk)[None, :], bias,
+                         jnp.finfo(jnp.float32).min)
+        logits = logits + bias[None, None, :, :]
+        m_new = jnp.maximum(m_prev, jnp.max(logits, axis=-1))
+        p = jnp.exp(logits - m_new[..., None])
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum("bhqk,bkhd->bhqd", p, vb)
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((B, H, Sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, H, Sq), jnp.float32)
+    acc0 = jnp.zeros((B, H, Sq, hd_v), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, acc0),
+                                  (kc, vc, jnp.arange(n_chunks)))
+    l_safe = jnp.maximum(l, 1e-30)
+    out = acc / l_safe[..., None]
+    lse = m + jnp.log(l_safe)
+    return out, lse
+
+
+def _flash(causal, q_offset, chunk, softcap, scale, q_raw, k_raw, v_raw,
+           window):
+    out, _ = _flash_fwd_impl(causal, q_offset, chunk, softcap, scale,
+                             q_raw, k_raw, v_raw, window)
+    # cast to the input dtype INSIDE the custom_vjp: remat cannot recompute
+    # through custom_vjp, so the primal output is pinned in HBM across the
+    # layer scan — bf16 halves that (EXPERIMENTS.md §Perf)
+    return out.astype(v_raw.dtype)
+
+
+def _flash_vjp_fwd(causal, q_offset, chunk, softcap, scale, q_raw, k_raw,
+                   v_raw, window):
+    out, _ = _flash_fwd_impl(causal, q_offset, chunk, softcap, scale,
+                             q_raw, k_raw, v_raw, window)
+    # residuals: ONLY the raw inputs — out/lse are recomputed in bwd (one
+    # extra forward; ~1% of total step FLOPs, tens of GB of pinned HBM saved)
+    return out.astype(v_raw.dtype), (q_raw, k_raw, v_raw, window)
+
+
+def _flash_vjp_bwd(causal, q_offset, chunk, softcap, scale, res, dout):
+    """Flash-style backward: recompute (out, lse) then per-KV-chunk logits —
+    O(S) residual memory instead of O(S·n_chunks) scan saves."""
+    q_raw, k_raw, v_raw, window = res
+    rep = q_raw.shape[2] // k_raw.shape[2]
+    dout = dout.astype(jnp.float32)
+    out, lse = _flash_fwd_impl(causal, q_offset, chunk, softcap, scale,
+                               q_raw, k_raw, v_raw, window)
+    q = (q_raw * scale).astype(jnp.float32)
+    k = k_raw.astype(jnp.float32)
+    v = v_raw.astype(jnp.float32)
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    B, Sq, H, hd = q.shape
+    Sk = k.shape[1]
+    hd_v = v.shape[-1]
+    q_pos = q_offset + jnp.arange(Sq)
+    n_chunks = max(1, (Sk + chunk - 1) // chunk)
+    pad = n_chunks * chunk - Sk
+    kp = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))) if pad else k
+    vp = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))) if pad else v
+    kc = kp.reshape(B, n_chunks, chunk, H, hd).transpose(1, 0, 2, 3, 4)
+    vc = vp.reshape(B, n_chunks, chunk, H, hd_v).transpose(1, 0, 2, 3, 4)
+
+    # delta_i = rowsum(dout ⊙ out)   (B, H, Sq)
+    delta = jnp.sum(dout * out, axis=-1)
+
+    def step(dq_acc, xs):
+        kb, vb, c_idx = xs
+        k_pos = c_idx * chunk + jnp.arange(chunk)
+        s0 = jnp.einsum("bqhd,bkhd->bhqk", q, kb)
+        if softcap is not None:
+            t = jnp.tanh(s0 / softcap)
+            s = softcap * t
+        else:
+            s = s0
+        bias = _mask_bias_arr(q_pos, k_pos, causal=causal, window=window)
+        bias = jnp.where((k_pos < Sk)[None, :], bias,
+                         jnp.finfo(jnp.float32).min)
+        p = jnp.exp(s + bias[None, None, :, :] - lse[..., None])
+        dv = jnp.einsum("bhqk,bhqd->bkhd", p, dout)
+        dp = jnp.einsum("bhqd,bkhd->bhqk", dout, vb)
+        ds = p * (dp - delta[..., None])
+        if softcap is not None:
+            ds = ds * (1.0 - t * t)
+        dq_acc = dq_acc + jnp.einsum("bhqk,bkhd->bqhd", ds, kb)
+        dk = jnp.einsum("bhqk,bqhd->bkhd", ds, q)
+        return dq_acc, (dk, dv)
+
+    dq0 = jnp.zeros((B, Sq, H, hd), jnp.float32)
+    dq, (dks, dvs) = jax.lax.scan(step, dq0,
+                                  (kc, vc, jnp.arange(n_chunks)))
+    dk = dks.transpose(1, 0, 2, 3, 4).reshape(B, n_chunks * chunk, H, hd)
+    dv = dvs.transpose(1, 0, 2, 3, 4).reshape(B, n_chunks * chunk, H, hd_v)
+    if pad:
+        dk, dv = dk[:, :Sk], dv[:, :Sk]
+    # un-scale dq; fold GQA head groups back for dk/dv
+    dq = (dq * scale).astype(q_raw.dtype)
+    Hkv = k_raw.shape[2]
+    if rep > 1:
+        dk = dk.reshape(B, Sk, Hkv, rep, hd).sum(axis=3)
+        dv = dv.reshape(B, Sk, Hkv, rep, hd_v).sum(axis=3)
+    return dq, dk.astype(k_raw.dtype), dv.astype(v_raw.dtype), None
+
+
+_flash_attn = jax.custom_vjp(_flash, nondiff_argnums=(0, 1, 2, 3, 4))
+_flash_attn.defvjp(_flash_vjp_fwd, _flash_vjp_bwd)
+
+
+def naive_attention(q, k, v, *, causal=True, window=None, q_offset=0,
+                    softcap=None, scale=None):
+    """Materialized-logits attention.  Counter-intuitively the BEST choice
+    for short-context training under remat: everything here is plain jax,
+    so jax.checkpoint recomputes it all in backward and the per-layer saved
+    state is just the residual stream — whereas custom_vjp flash pins its
+    residuals+outputs across the whole layer scan (remat cannot see through
+    custom_vjp).  Logits are transient (B,H,S,S); only viable while S is
+    small (train_4k), which is exactly when it's selected."""
+    B, Sq, H, hd = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    rep = H // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    kf, vf = k, v
+    if rep > 1:
+        kf = jnp.repeat(kf, rep, axis=2)
+        vf = jnp.repeat(vf, rep, axis=2)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", (q * scale), kf)
+    logits = logits.astype(jnp.float32)
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    q_pos = q_offset + jnp.arange(Sq)
+    k_pos = jnp.arange(Sk)
+    win = _BIG_WINDOW if window is None else jnp.asarray(window, jnp.int32)
+    bias = _mask_bias_arr(q_pos, k_pos, causal=causal, window=win)
+    p = jax.nn.softmax(logits + bias[None, None], axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p.astype(vf.dtype), vf)
+    return out.astype(v.dtype)
+
+
+def chunked_attention(q, k, v, *, causal=True, window=None, q_offset=0,
+                      chunk=1024, softcap=None, scale=None, impl="flash"):
+    """Memory-O(S) attention: online-softmax forward + flash-style custom
+    backward (logits recomputed per KV chunk; residuals = raw inputs only).
+    ``impl="naive"`` switches to materialized-logits attention (see
+    naive_attention for when that wins).
+
+    q: (B, Sq, H, hd);  k, v: (B, Sk, Hkv, hd[_v]) with H % Hkv == 0.
+    ``window`` may be None, a Python int, or a traced int32 scalar (mixed
+    local/global stacks scan over per-layer window values).
+    ``q_offset``: absolute position of q[0] (prefill continuation).
+    """
+    if impl == "naive":
+        return naive_attention(q, k, v, causal=causal, window=window,
+                               q_offset=q_offset, softcap=softcap,
+                               scale=scale)
+    hd = q.shape[-1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    win = _BIG_WINDOW if window is None else jnp.asarray(window, jnp.int32)
+    out = _flash_attn(causal, q_offset, chunk, softcap, scale, q, k, v, win)
+    return out.transpose(0, 2, 1, 3).astype(v.dtype)   # (B, Sq, H, hd_v)
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, *, window=None,
+                     softcap=None, scale=None):
+    """Single-token decode: q (B, 1, H, hd) vs cache (B, S_max, Hkv, hd).
+
+    ``cache_len``: number of valid cache entries (scalar or (B,)).
+    """
+    B, _, H, hd = q.shape
+    S_max, Hkv = k_cache.shape[1], k_cache.shape[2]
+    rep = H // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    qf = (q[:, 0] * scale).astype(jnp.float32)           # (B, H, hd)
+    kf = k_cache.astype(jnp.float32)
+    vf = v_cache.astype(jnp.float32)
+    if rep > 1:
+        kf = jnp.repeat(kf, rep, axis=2)
+        vf = jnp.repeat(vf, rep, axis=2)
+    logits = jnp.einsum("bhd,bshd->bhs", qf, kf)
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    pos = jnp.arange(S_max)
+    valid = pos[None, :] < jnp.reshape(cache_len, (-1, 1))
+    if window is not None:
+        valid &= pos[None, :] > jnp.reshape(cache_len, (-1, 1)) - 1 - window
+    logits = jnp.where(valid[:, None, :], logits, jnp.finfo(jnp.float32).min)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhs,bshd->bhd", p, vf)
+    return out[:, None].astype(v_cache.dtype)            # (B, 1, H, hd)

@@ -1,0 +1,446 @@
+"""Train / serve step builders over the model zoo.
+
+``build_model`` maps an ArchConfig to its model; ``make_train_step`` /
+``make_prefill_step`` / ``make_decode_step`` build the jittable SPMD
+programs that launch/dryrun.py lowers on the production meshes and that
+runtime/trainer.py drives for real.
+
+Batch layout (input_specs): tokens/targets/loss_mask (B, S) with B sharded
+over the DP axes (("pod","data") on the multi-pod mesh); modality stubs
+(image_embeds / audio_embeds) are provided as precomputed embeddings per the
+assignment.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import common
+from repro.models.transformer import DecoderModel
+from repro.models.whisper import EncDecModel
+from repro.optim import adamw
+
+
+def build_model(cfg):
+    if cfg.family == "audio":
+        return EncDecModel(cfg)
+    return DecoderModel(cfg)
+
+
+def _dp_axes(mesh, cfg=None) -> tuple:
+    """Axes that carry the batch. Under FSDP the TP axis becomes a second
+    data axis (params are gathered per use instead of activations being
+    TP-sharded)."""
+    names = mesh.axis_names if mesh is not None else ("data",)
+    axes = ("pod", "data", "model") \
+        if (cfg is not None and getattr(cfg, "parallelism", "tp") == "fsdp") \
+        else ("pod", "data")
+    return tuple(a for a in axes if a in names) or (None,)
+
+
+def fsdp_param_sharding(shape, mesh):
+    """ZeRO-3 spec: shard the first dim divisible by the largest available
+    axis group; cascade to smaller groups; replicate tiny tensors."""
+    names = mesh.axis_names
+    candidates = []
+    full = tuple(a for a in ("pod", "data", "model") if a in names)
+    for k in range(len(full), 0, -1):
+        candidates.append(full[-k:])
+    for axes in candidates:
+        ext = 1
+        for a in axes:
+            ext *= mesh.shape[a]
+        for i, dim in enumerate(shape):
+            if dim % ext == 0 and dim >= ext:
+                spec = [None] * len(shape)
+                spec[i] = axes if len(axes) > 1 else axes[0]
+                return NamedSharding(mesh, P(*spec))
+    return NamedSharding(mesh, P())
+
+
+# ---------------------------------------------------------------------------
+# loss
+# ---------------------------------------------------------------------------
+
+def next_token_loss(logits, targets, loss_mask):
+    """Mean CE over masked positions; logits may be vocab-sharded (GSPMD
+    inserts the cross-shard reductions)."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    tgt = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = (logz - tgt) * loss_mask
+    return jnp.sum(nll) / jnp.maximum(jnp.sum(loss_mask), 1.0)
+
+
+def vocab_parallel_ce(h, w, transpose_w, targets, loss_mask):
+    """Megatron-style vocab-parallel cross-entropy.
+
+    Each chip computes logits ONLY against its vocab shard, takes a local
+    max / sum-exp, and combines with pmax/psum over the ``model`` axis; the
+    target logit is fetched by whichever shard owns that vocab id.  Per-chip
+    logits footprint: (local_tokens × V/TP) instead of (tokens × V) — at a
+    262k vocab this removes a ~16 GB all-gather + multi-GB temps that the
+    naive h @ W formulation costs (EXPERIMENTS.md §Perf).
+
+    Falls back to the plain computation when no mesh is active (CPU smoke
+    tests) or shapes don't align with the mesh.
+    """
+    from jax._src import mesh as mesh_lib
+    from jax.sharding import PartitionSpec as P
+
+    mesh = mesh_lib.thread_resources.env.physical_mesh
+    B, S, d = h.shape
+    V = w.shape[0] if transpose_w else w.shape[1]
+    dp = tuple(a for a in ("pod", "data") if a in getattr(mesh, "axis_names",
+                                                         ()))
+    usable = (not mesh.empty and "model" in mesh.axis_names and dp
+              and S % mesh.shape["model"] == 0
+              and B % math.prod(mesh.shape[a] for a in dp) == 0
+              and V % mesh.shape["model"] == 0)
+    if not usable:
+        logits = (jnp.einsum("bsd,vd->bsv", h, w.astype(h.dtype))
+                  if transpose_w else h @ w.astype(h.dtype))
+        return next_token_loss(logits, targets, loss_mask)
+
+    tp = mesh.shape["model"]
+    v_loc = V // tp
+    chunk_t = 8192  # tokens per local CE chunk (bounds logits to ~0.5 GB)
+
+    def local(h_l, w_l, t_l, m_l):
+        # NOTE: tokens are REPLICATED over the model axis here (the shard_map
+        # boundary all-gathers h — the Megatron sequence-parallel gather);
+        # only the vocab is model-sharded.  Sharding tokens and vocab on the
+        # SAME axis would mix different tokens' partial logsumexps — a real
+        # bug caught by tests/progs/dist_ce.py.
+        bl, sl, _ = h_l.shape
+        T = bl * sl
+        hf = h_l.reshape(T, d)
+        tf = t_l.reshape(T)
+        mf = m_l.reshape(T)
+        nc = max(1, (T + chunk_t - 1) // chunk_t)
+        pad = nc * chunk_t - T
+        if pad:
+            hf = jnp.pad(hf, ((0, pad), (0, 0)))
+            tf = jnp.pad(tf, (0, pad))
+            mf = jnp.pad(mf, (0, pad))
+        v0 = jax.lax.axis_index("model") * v_loc
+
+        @jax.checkpoint
+        def step(acc, xs):
+            hb, tb, mb = xs
+            logits = (jnp.einsum("td,vd->tv", hb, w_l.astype(hb.dtype))
+                      if transpose_w else hb @ w_l.astype(hb.dtype))
+            logits = logits.astype(jnp.float32)          # (chunk, V/tp)
+            # stabilizer is gradient-free (standard logsumexp trick) — pmax
+            # has no differentiation rule, so it sees a stopped operand
+            mx = jax.lax.pmax(
+                jnp.max(jax.lax.stop_gradient(logits), axis=-1), "model")
+            se = jax.lax.psum(
+                jnp.sum(jnp.exp(logits - mx[:, None]), axis=-1), "model")
+            lse = jnp.log(se) + mx
+            # target logit lives on exactly one vocab shard:
+            owned = (tb >= v0) & (tb < v0 + v_loc)
+            idx = jnp.clip(tb - v0, 0, v_loc - 1)
+            tgt_l = jnp.take_along_axis(logits, idx[:, None], axis=-1)[:, 0]
+            tgt = jax.lax.psum(jnp.where(owned, tgt_l, 0.0), "model")
+            return acc + jnp.sum((lse - tgt) * mb), None
+
+        total, _ = jax.lax.scan(
+            step, jnp.float32(0.0),
+            (hf.reshape(nc, chunk_t, d), tf.reshape(nc, chunk_t),
+             mf.reshape(nc, chunk_t)))
+        return jax.lax.psum(total, dp)[None]
+
+    w_spec = P("model", None) if transpose_w else P(None, "model")
+    loss_sum = jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(P(dp, None, None), w_spec, P(dp, None), P(dp, None)),
+        out_specs=P(None), check_vma=False,
+    )(h, w, targets, loss_mask)[0]
+    return loss_sum / jnp.maximum(jnp.sum(loss_mask), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# step builders
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg, opt_cfg: adamw.AdamWConfig, *, microbatches: int = 1):
+    model = build_model(cfg)
+
+    def loss_fn(params, batch):
+        kwargs = {}
+        if cfg.family == "vlm":
+            kwargs["image_embeds"] = batch["image_embeds"]
+        if cfg.family == "audio":
+            kwargs["audio_embeds"] = batch["audio_embeds"]
+        h, _ = model.forward(params, batch["tokens"], mode="train",
+                             return_hidden=True, **kwargs)
+        w, transpose_w = model.unembed_weights(params)
+        if getattr(cfg, "parallelism", "tp") == "fsdp":
+            # FSDP: no vocab sharding — plain CE (unembed weights get
+            # all-gathered per use like every other parameter)
+            logits = (jnp.einsum("bsd,vd->bsv", h, w.astype(h.dtype))
+                      if transpose_w else h @ w.astype(h.dtype))
+            return next_token_loss(logits, batch["targets"],
+                                   batch["loss_mask"])
+        return vocab_parallel_ce(h, w, transpose_w, batch["targets"],
+                                 batch["loss_mask"])
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            def split(x):
+                return x.reshape((microbatches, x.shape[0] // microbatches)
+                                 + x.shape[1:])
+            mb = jax.tree.map(split, batch)
+
+            def acc_body(carry, mb_i):
+                g_acc, l_acc = carry
+                l, g = jax.value_and_grad(loss_fn)(params, mb_i)
+                g_acc = jax.tree.map(lambda a, b: a + b, g_acc, g)
+                return (g_acc, l_acc + l), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params)
+            (grads, loss), _ = jax.lax.scan(acc_body, (g0, 0.0), mb)
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            loss = loss / microbatches
+        params, opt_state, om = adamw.adamw_update(opt_cfg, grads, opt_state,
+                                                   params)
+        return params, opt_state, {"loss": loss, **om}
+
+    return train_step, model
+
+
+def make_prefill_step(cfg):
+    model = build_model(cfg)
+
+    def prefill_step(params, caches, batch):
+        kwargs = {}
+        if cfg.family == "vlm":
+            kwargs["image_embeds"] = batch["image_embeds"]
+        if cfg.family == "audio":
+            kwargs["audio_embeds"] = batch["audio_embeds"]
+        h, caches = model.forward(params, batch["tokens"], mode="prefill",
+                                  caches=caches, cache_len=None,
+                                  return_hidden=True, **kwargs)
+        # unembed ONLY the last position: (B, 1, d) @ (d, V), not (B, S, V)
+        return model.unembed(params, h[:, -1:])[:, 0], caches
+
+    return prefill_step, model
+
+
+def make_decode_step(cfg):
+    model = build_model(cfg)
+
+    def decode_step(params, caches, token, cache_len, batch):
+        kwargs = {}
+        if cfg.family == "vlm":
+            kwargs["image_embeds"] = batch["image_embeds"]
+        if cfg.family == "audio":
+            kwargs["audio_embeds"] = batch["audio_embeds"]
+        logits, caches = model.forward(params, token, mode="decode",
+                                       caches=caches, cache_len=cache_len,
+                                       **kwargs)
+        return logits[:, -1], caches
+
+    return decode_step, model
+
+
+def init_cache(cfg, batch: int, s_max: int, dtype=jnp.float32):
+    """Concrete empty decode state.  Zeros everywhere except the xLSTM gate
+    stabilizers ``m`` which must start at -inf (an 'empty' exponential-gated
+    memory), matching the None-cache initialization inside the blocks."""
+    model = build_model(cfg)
+    defs = model.cache_defs(batch, s_max)
+
+    def mk(path, d):
+        leaf = path[-1].key if hasattr(path[-1], "key") else None
+        if leaf == "m" and cfg.family in ("ssm",):
+            return jnp.full(d.shape, -1e30, dtype)
+        return jnp.zeros(d.shape, dtype)
+
+    return jax.tree_util.tree_map_with_path(
+        mk, defs, is_leaf=lambda x: isinstance(x, common.ParamDef))
+
+
+# ---------------------------------------------------------------------------
+# abstract inputs for the dry-run
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg, shape, mesh):
+    """ShapeDtypeStruct stand-ins for every model input of a cell.
+
+    Returns (batch dict, caches or None, cache_len or None, token or None).
+    """
+    dp = _dp_axes(mesh, cfg)
+    B, S = shape.global_batch, shape.seq_len
+    dp_size = 1
+    for a in dp:
+        if a is not None:
+            dp_size *= mesh.shape[a]
+    # batch sharding: largest suffix of the dp axes that divides B
+    dp_b = None
+    for k in range(len(dp), 0, -1):
+        axes = dp[-k:]
+        ext = 1
+        for a in axes:
+            if a is not None:
+                ext *= mesh.shape[a]
+        if ext and B % ext == 0:
+            dp_b = axes if len(axes) > 1 else axes[0]
+            break
+    tok_sharding = NamedSharding(mesh, P(dp_b, None))
+
+    def tok(shape_):
+        return jax.ShapeDtypeStruct(shape_, jnp.int32, sharding=tok_sharding)
+
+    def f32(shape_, spec):
+        return jax.ShapeDtypeStruct(shape_, jnp.float32,
+                                    sharding=NamedSharding(mesh, spec))
+
+    batch = {}
+    model = build_model(cfg)
+    kind = shape.kind
+
+    if cfg.family == "vlm":
+        batch["image_embeds"] = f32((B, cfg.n_image_tokens, cfg.d_model),
+                                    P(dp_b, None, None))
+    if cfg.family == "audio":
+        batch["audio_embeds"] = f32((B, cfg.n_audio_frames, cfg.d_model),
+                                    P(dp_b, None, None))
+
+    if kind == "train":
+        batch["tokens"] = tok((B, S))
+        batch["targets"] = tok((B, S))
+        batch["loss_mask"] = f32((B, S), P(dp_b, None))
+        return batch, None, None, None
+
+    if kind == "prefill":
+        batch["tokens"] = tok((B, S))
+        cache_defs = sanitize_specs(model.cache_defs(B, S), mesh)
+        caches = common.abstract_params(cache_defs, mesh, dtype=jnp.bfloat16)
+        return batch, caches, None, None
+
+    # decode: one new token against an S-long cache
+    cache_defs = model.cache_defs(B, S)
+    dp_size = 1
+    for a in dp:
+        if a is not None:
+            dp_size *= mesh.shape[a]
+    if B < dp_size:
+        # long-context decode with tiny batch: shard the SEQUENCE dim of the
+        # caches over the data axes instead of the (unshardable) batch dim.
+        cache_defs = _reshard_cache_seq(cache_defs, S, dp)
+    cache_defs = sanitize_specs(cache_defs, mesh)
+    caches = common.abstract_params(cache_defs, mesh, dtype=jnp.bfloat16)
+    token = tok((B, 1))
+    cache_len = jax.ShapeDtypeStruct((), jnp.int32)
+    return batch, caches, cache_len, token
+
+
+def _reshard_cache_seq(cache_defs, s_max: int, dp):
+    """Move the 'data' sharding from the batch dim to the s_max dim for every
+    cache tensor that has one (KV caches; recurrent states are untouched)."""
+    from repro.models.common import ParamDef
+
+    def rewrite(d: ParamDef):
+        if s_max not in d.shape:
+            return d
+        i = d.shape.index(s_max)
+        spec = list(d.spec) + [None] * (len(d.shape) - len(d.spec))
+        spec = [None if s == "data" or s == dp else s for s in spec]
+        spec[i] = dp
+        from jax.sharding import PartitionSpec as P
+        return ParamDef(d.shape, P(*spec), d.dtype, d.init_scale)
+
+    return jax.tree.map(rewrite, cache_defs,
+                        is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def sanitize_specs(defs, mesh):
+    """Drop sharding on any dim the mesh extent doesn't divide (e.g. the
+    batch dim of recurrent state caches when global_batch < data axis)."""
+    from repro.models.common import ParamDef
+    from jax.sharding import PartitionSpec as P
+
+    def extent(entry):
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        n = 1
+        for a in axes:
+            n *= mesh.shape[a]
+        return n
+
+    def fix(d: ParamDef):
+        spec = list(d.spec) + [None] * (len(d.shape) - len(d.spec))
+        out = [None if (s is not None and dim % extent(s) != 0) else s
+               for dim, s in zip(d.shape, spec)]
+        return ParamDef(d.shape, P(*out), d.dtype, d.init_scale)
+
+    return jax.tree.map(fix, defs,
+                        is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def zero1_sharding(sds, mesh):
+    """ZeRO-1: additionally shard an optimizer-moment tensor over the DP
+    axes (first free dim divisible by the DP extent).  Without this the f32
+    moments are DP-replicated and a >10B model cannot fit 16 GB/chip — the
+    dry-run's memory_analysis is what caught it (EXPERIMENTS.md §Perf)."""
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    if not dp:
+        return sds.sharding
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    spec = list(sds.sharding.spec) if sds.sharding is not None else []
+    spec = spec + [None] * (len(sds.shape) - len(spec))
+    for i, (dim, s) in enumerate(zip(sds.shape, spec)):
+        if s is None and dim % dp_size == 0 and dim > 1:
+            spec[i] = dp
+            return NamedSharding(mesh, P(*spec))
+    # fall back: shard over 'data' only if that divides
+    d_size = mesh.shape.get("data", 1)
+    for i, (dim, s) in enumerate(zip(sds.shape, spec)):
+        if s is None and dim % d_size == 0 and dim > 1:
+            spec[i] = "data"
+            return NamedSharding(mesh, P(*spec))
+    return sds.sharding
+
+
+def abstract_state(cfg, mesh, *, with_opt=True, dtype=None, zero1=True):
+    """Abstract (params, opt_state) for lowering train_step."""
+    model = build_model(cfg)
+    defs = model.param_defs()
+    pdt = dtype or (jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32)
+    fsdp = getattr(cfg, "parallelism", "tp") == "fsdp"
+    if fsdp:
+        from repro.models.common import ParamDef
+
+        def mk(d: ParamDef):
+            return jax.ShapeDtypeStruct(
+                d.shape, pdt, sharding=fsdp_param_sharding(d.shape, mesh))
+        params = jax.tree.map(mk, defs,
+                              is_leaf=lambda x: isinstance(x, ParamDef))
+    else:
+        params = common.abstract_params(defs, mesh, dtype=pdt)
+    if not with_opt:
+        return params, None
+
+    def moment_like(sds):
+        # fsdp params are already fully sharded — moments inherit the layout
+        sharding = (sds.sharding if fsdp else
+                    (zero1_sharding(sds, mesh) if zero1 else sds.sharding))
+        return jax.ShapeDtypeStruct(sds.shape, jnp.float32, sharding=sharding)
+    m = jax.tree.map(moment_like, params)
+    v = jax.tree.map(moment_like, params)
+    opt_state = adamw.AdamWState(m=m, v=v,
+                                 count=jax.ShapeDtypeStruct((), jnp.int32))
+    return params, opt_state

@@ -1,0 +1,35 @@
+"""Feed-forward blocks: SwiGLU (all assigned LMs) and GELU (whisper)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import ParamDef
+
+
+def swiglu_defs(cfg, d_ff=None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    return {
+        "w_gate": ParamDef((d, f), P(None, "model")),
+        "w_up": ParamDef((d, f), P(None, "model")),
+        "w_down": ParamDef((f, d), P("model", None)),
+    }
+
+
+def swiglu_apply(p, x):
+    return (jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]
+
+
+def gelu_defs(cfg, d_ff=None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    return {
+        "w_in": ParamDef((d, f), P(None, "model")),
+        "b_in": ParamDef((f,), P("model"), init_scale=0.0),
+        "w_out": ParamDef((f, d), P("model", None)),
+        "b_out": ParamDef((d,), P(None), init_scale=0.0),
+    }
+
+
+def gelu_apply(p, x):
+    return jax.nn.gelu(x @ p["w_in"] + p["b_in"]) @ p["w_out"] + p["b_out"]

@@ -1,0 +1,129 @@
+"""Mixture-of-Experts FFN with Switch/GSPMD-style grouped capacity dispatch.
+
+Tokens are processed in groups of ``group_size``; within a group each token's
+top-k experts get a capacity slot (position = running count of that expert in
+the group, computed with a local cumsum — groups align with the batch/data
+sharding so the cumsum never crosses devices).  Dispatch/combine are one-hot
+einsums, the canonical TPU MoE formulation (Lepikhin et al., GShard): the
+dispatch tensor is (n_g, E, C) per group with C = n_g·k·capacity_factor/E,
+and the expert einsum re-shards tokens onto the expert-sharded ``model`` axis
+— GSPMD lowers that to the expected all-to-all.
+
+Sharding regimes (DESIGN.md §4):
+  * E >= model-axis size (deepseek, 64): experts sharded over ``model``
+    (true expert parallelism, 4 experts/device on the 16-way axis);
+  * E <  model-axis size (mixtral, 8): experts replicated, d_ff sharded
+    (tensor parallelism inside every expert).
+
+Overflowing tokens beyond capacity are dropped (standard); the shared
+experts (deepseek) are an ordinary dense SwiGLU added to every token.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import ParamDef
+from repro.models import mlp
+
+GROUP_SIZE = 256
+CAPACITY_FACTOR = 1.5
+
+
+def moe_defs(cfg):
+    d, f, E = cfg.d_model, cfg.moe_d_ff or cfg.d_ff, cfg.n_experts
+    if E >= 16:     # expert-parallel over the model axis
+        specs = (P("model", None, None),) * 3
+    else:           # TP inside each expert
+        specs = (P(None, None, "model"), P(None, None, "model"),
+                 P(None, "model", None))
+    defs = {
+        "router": ParamDef((d, E), P(None, None)),
+        "w_gate": ParamDef((E, d, f), specs[0]),
+        "w_up": ParamDef((E, d, f), specs[1]),
+        "w_down": ParamDef((E, f, d), specs[2]),
+    }
+    if cfg.n_shared_experts:
+        defs["shared"] = mlp.swiglu_defs(
+            cfg, d_ff=(cfg.moe_d_ff or cfg.d_ff) * cfg.n_shared_experts)
+    return defs
+
+
+def _shard_moe(t, *, expert_sharded: bool, ff_last: bool = False):
+    """Sharding constraints on the (G, E, C, d/f) expert-dispatch tensors:
+    groups over the DP axes; the expert dim over ``model`` when experts are
+    sharded (this constraint is what makes GSPMD emit the EP all-to-all),
+    else the trailing d_ff dim when experts are TP-internal."""
+    from jax._src import mesh as mesh_lib
+    mesh = mesh_lib.thread_resources.env.physical_mesh
+    if mesh.empty:
+        return t
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    if not dp or "model" not in mesh.axis_names:
+        return t
+    e_ax = "model" if expert_sharded else None
+    last_ax = "model" if (ff_last and not expert_sharded) else None
+    return jax.lax.with_sharding_constraint(t, P(dp, e_ax, None, last_ax))
+
+
+def _capacity(n_g: int, E: int, k: int) -> int:
+    c = int(n_g * k * CAPACITY_FACTOR / E)
+    return max(4, min(c, n_g))
+
+
+def moe_apply(p, x, cfg):
+    """x: (B, S, d) -> (B, S, d)."""
+    B, S, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    N = B * S
+    n_g = min(GROUP_SIZE, N)
+    G = N // n_g
+    xg = x.reshape(G, n_g, d)
+
+    logits = xg @ p["router"]                          # (G, n, E)
+    gate_vals, idx = jax.lax.top_k(logits, k)          # (G, n, k)
+    gates = jax.nn.softmax(gate_vals, axis=-1).astype(x.dtype)
+
+    C = _capacity(n_g, E, k)
+    onehot_k = jax.nn.one_hot(idx, E, dtype=jnp.int32)      # (G, n, k, E)
+    # collapse the k dim first: each (token, expert) pair appears at most
+    # once in a top-k list, so sums are selections.
+    expert_mask = jnp.sum(onehot_k, axis=2)                 # (G, n, E) 0/1
+    gates_e = jnp.einsum("gnk,gnke->gne", gates,
+                         onehot_k.astype(x.dtype))          # (G, n, E)
+    # slot position of each assignment within its group (local cumsum):
+    pos = jnp.cumsum(expert_mask, axis=1) - 1               # (G, n, E)
+    keep = ((pos < C) & (expert_mask > 0)).astype(x.dtype)
+    dispatch = jax.nn.one_hot(pos, C, dtype=x.dtype) \
+        * keep[..., None]                                   # (G, n, E, C)
+    combine = dispatch * gates_e[..., None]
+
+    tp_mode = getattr(cfg, "parallelism", "tp") == "tp"
+    x_e = jnp.einsum("gnec,gnd->gecd", dispatch, xg)   # (G, E, C, d)
+    if tp_mode:
+        x_e = _shard_moe(x_e, expert_sharded=E >= 16)  # the EP all-to-all
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", x_e, p["w_gate"])) \
+        * jnp.einsum("gecd,edf->gecf", x_e, p["w_up"])
+    if tp_mode:
+        h = _shard_moe(h, expert_sharded=E >= 16, ff_last=E < 16)
+    y_e = jnp.einsum("gecf,efd->gecd", h, p["w_down"])
+    if tp_mode:
+        y_e = _shard_moe(y_e, expert_sharded=E >= 16)
+    y = jnp.einsum("gnec,gecd->gnd", combine, y_e)
+
+    y = y.reshape(B, S, d)
+    if cfg.n_shared_experts:
+        y = y + mlp.swiglu_apply(p["shared"], x)
+    return y
+
+
+def moe_aux_loss(p, x, cfg):
+    """Load-balancing auxiliary loss (Switch/Mixtral style)."""
+    logits = x @ p["router"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    _, idx = jax.lax.top_k(logits, cfg.top_k)
+    onehot = jax.nn.one_hot(idx, cfg.n_experts, dtype=probs.dtype)
+    frac_tokens = jnp.mean(jnp.sum(onehot, axis=-2), axis=tuple(range(idx.ndim - 1)))
+    frac_probs = jnp.mean(probs, axis=tuple(range(probs.ndim - 1)))
+    return cfg.n_experts * jnp.sum(frac_tokens * frac_probs)

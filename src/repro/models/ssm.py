@@ -1,0 +1,138 @@
+"""Mamba2-style selective SSM block (zamba2 hybrid's recurrent core).
+
+Structure per block: RMSNorm → {z, x, B, C, dt} projections → causal
+depthwise conv on x → selective state-space recurrence (scalar-A-per-head,
+Mamba2) → SiLU(z) gating → output projection.
+
+Full-sequence mode runs the recurrence with ``lax.scan`` over time (the
+TPU-optimal chunked SSD formulation is an acknowledged further optimization —
+EXPERIMENTS.md §Perf discusses it; the scan is semantically exact).  Decode
+mode is the O(1) single-step update, which is what qualifies the hybrid archs
+for the long_500k cell.
+
+State cache: {"conv": (B, K-1, d_inner), "state": (B, H, hd, ds)}.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import ParamDef
+
+
+def ssm_dims(cfg):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    n_heads = d_inner // cfg.ssm_head_dim
+    return d_inner, n_heads
+
+
+def mamba_defs(cfg):
+    d = cfg.d_model
+    d_inner, H = ssm_dims(cfg)
+    ds, K = cfg.ssm_state, cfg.ssm_conv
+    return {
+        "w_z": ParamDef((d, d_inner), P(None, "model")),
+        "w_x": ParamDef((d, d_inner), P(None, "model")),
+        "w_B": ParamDef((d, ds), P(None, None)),
+        "w_C": ParamDef((d, ds), P(None, None)),
+        "w_dt": ParamDef((d, H), P(None, "model")),
+        "dt_bias": ParamDef((H,), P("model"), init_scale=0.0),
+        "conv_w": ParamDef((K, d_inner), P(None, "model")),
+        "A_log": ParamDef((H,), P("model"), init_scale=1.0),
+        "D": ParamDef((H,), P("model"), init_scale=1.0),
+        "w_out": ParamDef((d_inner, d), P("model", None)),
+    }
+
+
+def _ssm_scan(xh, Bm, Cm, dt, A, D, state0):
+    """xh: (B,S,H,hd); Bm/Cm: (B,S,ds); dt: (B,S,H); A: (H,) > 0.
+    Returns (y (B,S,H,hd), final state (B,H,hd,ds))."""
+
+    def step(h, inp):
+        xt, Bt, Ct, dtt = inp              # (B,H,hd), (B,ds), (B,ds), (B,H)
+        decay = jnp.exp(-dtt * A)          # (B, H)
+        upd = jnp.einsum("bhp,bs->bhps", xt * dtt[..., None], Bt)
+        h = h * decay[..., None, None] + upd
+        yt = jnp.einsum("bhps,bs->bhp", h, Ct) + D[None, :, None] * xt
+        return h, yt
+
+    xs = (xh.transpose(1, 0, 2, 3), Bm.transpose(1, 0, 2),
+          Cm.transpose(1, 0, 2), dt.transpose(1, 0, 2))
+    h_final, ys = jax.lax.scan(step, state0, xs)
+    return ys.transpose(1, 0, 2, 3), h_final
+
+
+def _conv_causal(x, conv_w, conv_state=None):
+    """Depthwise causal conv; x: (B, S, d_inner); conv_w: (K, d_inner)."""
+    K = conv_w.shape[0]
+    if conv_state is None:
+        hist = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    else:
+        hist = conv_state.astype(x.dtype)
+    xp = jnp.concatenate([hist, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * conv_w[i] for i in range(K))
+    new_state = xp[:, -(K - 1):] if K > 1 else hist
+    return jax.nn.silu(out), new_state
+
+
+def mamba_full(p, x, cfg, cache=None):
+    """x: (B, S, d). Returns (y, cache')."""
+    B, S, d = x.shape
+    d_inner, H = ssm_dims(cfg)
+    hd, ds = cfg.ssm_head_dim, cfg.ssm_state
+    z = x @ p["w_z"]
+    xin = x @ p["w_x"]
+    # full-sequence mode always starts from an empty history (train / fresh
+    # prefill); the returned conv state supports subsequent decode steps.
+    xc, conv_state = _conv_causal(xin, p["conv_w"], None)
+    Bm = x @ p["w_B"]
+    Cm = x @ p["w_C"]
+    dt = jax.nn.softplus(x @ p["w_dt"] + p["dt_bias"])
+    A = jnp.exp(p["A_log"].astype(jnp.float32))
+    xh = xc.reshape(B, S, H, hd)
+    state0 = jnp.zeros((B, H, hd, ds), jnp.float32)
+    y, h_final = _ssm_scan(xh.astype(jnp.float32), Bm.astype(jnp.float32),
+                           Cm.astype(jnp.float32), dt.astype(jnp.float32),
+                           A, p["D"].astype(jnp.float32), state0)
+    y = (y.reshape(B, S, d_inner).astype(x.dtype) * jax.nn.silu(z))
+    out = y @ p["w_out"]
+    if cache is not None:
+        cache = {"conv": conv_state.astype(cache["conv"].dtype),
+                 "state": h_final.astype(cache["state"].dtype)}
+    return out, cache
+
+
+def mamba_decode(p, x, cfg, cache):
+    """x: (B, 1, d); cache: {"conv", "state"}. O(1) per token."""
+    B, _, d = x.shape
+    d_inner, H = ssm_dims(cfg)
+    hd = cfg.ssm_head_dim
+    z = x @ p["w_z"]
+    xin = x @ p["w_x"]
+    xc, conv_state = _conv_causal(xin, p["conv_w"], cache["conv"])
+    Bm = x @ p["w_B"]
+    Cm = x @ p["w_C"]
+    dt = jax.nn.softplus(x @ p["w_dt"] + p["dt_bias"])
+    A = jnp.exp(p["A_log"].astype(jnp.float32))
+    xh = xc.reshape(B, 1, H, hd).astype(jnp.float32)[:, 0]
+    decay = jnp.exp(-dt.astype(jnp.float32)[:, 0] * A)
+    upd = jnp.einsum("bhp,bs->bhps", xh * dt.astype(jnp.float32)[:, 0, :, None],
+                     Bm.astype(jnp.float32)[:, 0])
+    h = cache["state"].astype(jnp.float32) * decay[..., None, None] + upd
+    yt = jnp.einsum("bhps,bs->bhp", h, Cm.astype(jnp.float32)[:, 0]) \
+        + p["D"].astype(jnp.float32)[None, :, None] * xh
+    y = yt.reshape(B, 1, d_inner).astype(x.dtype) * jax.nn.silu(z)
+    out = y @ p["w_out"]
+    return out, {"conv": conv_state.astype(cache["conv"].dtype),
+                 "state": h.astype(cache["state"].dtype)}
+
+
+def mamba_cache_defs(cfg, batch):
+    d_inner, H = ssm_dims(cfg)
+    return {
+        "conv": ParamDef((batch, cfg.ssm_conv - 1, d_inner),
+                         P("data", None, "model")),
+        "state": ParamDef((batch, H, cfg.ssm_head_dim, cfg.ssm_state),
+                          P("data", "model", None, None)),
+    }

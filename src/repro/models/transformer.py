@@ -1,0 +1,465 @@
+"""Decoder-only model assembly for the dense / moe / hybrid / ssm-like /
+vlm families.
+
+Layer stacks are scanned over stacked parameters (keeps the HLO size
+layer-count-independent — essential for compiling 80 dry-run cells), with
+``jax.checkpoint`` (remat) around each scan body.  Heterogeneous stacks
+(zamba's shared attention, llama-vision's cross-attention, xlstm's sLSTM)
+are expressed as *segmented scans*: the homogeneous layers are scanned in
+static segments and the special block is applied between segments from its
+own (small) parameter stack — no ragged scan carries, no wasted cache slots.
+
+Activation sharding: between blocks the hidden states are constrained to
+P(("pod","data"), None, None); inside attention/MLP GSPMD re-shards onto the
+TP axis.  (A sequence-parallel constraint is one of the §Perf experiments.)
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.models import attention, mlp, moe, ssm, xlstm
+from repro.models.common import ParamDef, rms_norm
+
+
+def segment_bounds(n_layers: int, every: int):
+    """[(lo, hi)] covering all layers in chunks of ``every`` (last ragged)."""
+    return [(lo, min(lo + every, n_layers))
+            for lo in range(0, n_layers, every)]
+
+
+def stack_defs(defs, n: int):
+    def bump(d: ParamDef):
+        return ParamDef((n,) + d.shape, P(None, *d.spec), d.dtype,
+                        d.init_scale)
+    return jax.tree.map(bump, defs,
+                        is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def _norm_def(cfg):
+    return ParamDef((cfg.d_model,), P(None), init_scale=0.0)
+
+
+def _shard_h(h, cfg):
+    """Activation sharding constraint between blocks: batch over the DP
+    axes, and — when ``cfg.seq_shard`` (default) — the sequence dim over the
+    TP axis (sequence parallelism: the per-layer residual stream saved for
+    backward shrinks by the TP degree; see EXPERIMENTS.md §Perf)."""
+    from jax._src import mesh as mesh_lib
+    mesh = mesh_lib.thread_resources.env.physical_mesh
+    if mesh.empty:
+        return h  # no mesh in context (plain CPU smoke tests)
+    fsdp = getattr(cfg, "parallelism", "tp") == "fsdp"
+    axes = ("pod", "data", "model") if fsdp else ("pod", "data")
+    dp = tuple(a for a in axes if a in mesh.axis_names)
+    if not dp:
+        return h
+    seq_axis = None
+    if (not fsdp and h.ndim == 3 and getattr(cfg, "seq_shard", True)
+            and "model" in mesh.axis_names and h.shape[1] > 1
+            and h.shape[1] % mesh.shape["model"] == 0):
+        seq_axis = "model"
+    spec = P(dp, seq_axis, None) if h.ndim == 3 else P(dp, None)
+    return jax.lax.with_sharding_constraint(h, spec)
+
+
+# ---------------------------------------------------------------------------
+# per-family layer definitions
+# ---------------------------------------------------------------------------
+
+def dense_layer_defs(cfg):
+    return {"ln1": _norm_def(cfg), "attn": attention.gqa_defs(cfg),
+            "ln2": _norm_def(cfg), "ffn": mlp.swiglu_defs(cfg)}
+
+
+def moe_layer_defs(cfg):
+    return {"ln1": _norm_def(cfg),
+            "attn": (attention.mla_defs(cfg) if cfg.kv_lora_rank
+                     else attention.gqa_defs(cfg)),
+            "ln2": _norm_def(cfg), "ffn": moe.moe_defs(cfg)}
+
+
+def mamba_layer_defs(cfg):
+    return {"ln": _norm_def(cfg), "mixer": ssm.mamba_defs(cfg)}
+
+
+def mlstm_layer_defs(cfg):
+    return {"ln": _norm_def(cfg), "mixer": xlstm.mlstm_defs(cfg)}
+
+
+def slstm_layer_defs(cfg):
+    return {"ln": _norm_def(cfg), "mixer": xlstm.slstm_defs(cfg)}
+
+
+def attn_block_defs(cfg):
+    """Standalone attention(+MLP) block (zamba's shared block)."""
+    return {"ln1": _norm_def(cfg), "attn": attention.gqa_defs(cfg),
+            "ln2": _norm_def(cfg), "ffn": mlp.swiglu_defs(cfg)}
+
+
+def cross_block_defs(cfg):
+    return {"ln1": _norm_def(cfg), "attn": attention.cross_defs(cfg),
+            "ln2": _norm_def(cfg), "ffn": mlp.swiglu_defs(cfg)}
+
+
+# ---------------------------------------------------------------------------
+# model
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class DecoderModel:
+    cfg: Any
+
+    # ---------------- parameter / cache declarations
+
+    def param_defs(self):
+        cfg = self.cfg
+        d = {
+            "embed": ParamDef((cfg.vocab_size, cfg.d_model),
+                              P("model", None)),
+            "final_norm": _norm_def(cfg),
+        }
+        if not cfg.tie_embeddings:
+            d["head"] = ParamDef((cfg.d_model, cfg.vocab_size),
+                                 P(None, "model"))
+        fam = cfg.family
+        if fam == "dense" or fam == "vlm":
+            n_self = cfg.n_layers
+            d["layers"] = stack_defs(dense_layer_defs(cfg), n_self)
+            if fam == "vlm":
+                n_cross = cfg.n_layers // cfg.cross_attn_period
+                d["cross"] = stack_defs(cross_block_defs(cfg), n_cross)
+                d["img_proj"] = ParamDef((cfg.d_model, cfg.d_model),
+                                         P(None, "model"))
+        elif fam == "moe":
+            n_moe = cfg.n_layers - cfg.first_dense_layers
+            if cfg.first_dense_layers:
+                d["dense_layers"] = stack_defs(dense_layer_defs(cfg),
+                                               cfg.first_dense_layers)
+            d["layers"] = stack_defs(moe_layer_defs(cfg), n_moe)
+        elif fam == "hybrid":
+            d["layers"] = stack_defs(mamba_layer_defs(cfg), cfg.n_layers)
+            d["shared_attn"] = attn_block_defs(cfg)
+        elif fam == "ssm":   # xlstm
+            period = cfg.slstm_period
+            n_groups = cfg.n_layers // period
+            d["layers"] = stack_defs(mlstm_layer_defs(cfg),
+                                     n_groups * (period - 1))
+            d["slstm"] = stack_defs(slstm_layer_defs(cfg), n_groups)
+        else:
+            raise ValueError(f"family {fam} not handled by DecoderModel")
+        return d
+
+    def cache_defs(self, batch: int, s_max: int):
+        cfg = self.cfg
+        fam = cfg.family
+        if fam in ("dense", "vlm"):
+            c = {"layers": stack_defs(
+                attention.gqa_cache_defs(cfg, batch, s_max), cfg.n_layers)}
+        elif fam == "moe":
+            base = (attention.mla_cache_defs(cfg, batch, s_max)
+                    if cfg.kv_lora_rank
+                    else attention.gqa_cache_defs(cfg, batch, s_max))
+            c = {"layers": stack_defs(base,
+                                      cfg.n_layers - cfg.first_dense_layers)}
+            if cfg.first_dense_layers:
+                c["dense_layers"] = stack_defs(
+                    attention.gqa_cache_defs(cfg, batch, s_max),
+                    cfg.first_dense_layers)
+        elif fam == "hybrid":
+            n_apps = len(segment_bounds(cfg.n_layers, cfg.shared_attn_every))
+            c = {"layers": stack_defs(ssm.mamba_cache_defs(cfg, batch),
+                                      cfg.n_layers),
+                 "shared_attn": stack_defs(
+                     attention.gqa_cache_defs(cfg, batch, s_max), n_apps)}
+        elif fam == "ssm":
+            period = cfg.slstm_period
+            n_groups = cfg.n_layers // period
+            c = {"layers": stack_defs(xlstm.mlstm_cache_defs(cfg, batch),
+                                      n_groups * (period - 1)),
+                 "slstm": stack_defs(xlstm.slstm_cache_defs(cfg, batch),
+                                     n_groups)}
+        else:
+            raise ValueError(fam)
+        return c
+
+    # ---------------- scanned segments
+
+    def _gemma_flags(self):
+        """(is_global, window, theta) per layer for local:global patterns.
+        Layer i is global when (i % (ratio+1)) == ratio; local layers use the
+        sliding window + local rope theta."""
+        cfg = self.cfg
+        L, ratio = cfg.n_layers, cfg.local_global_ratio
+        is_global = np.array([(i % (ratio + 1)) == ratio for i in range(L)])
+        big = np.int32(2**30)
+        win = np.where(is_global, big, np.int32(cfg.sliding_window or big))
+        theta = np.where(is_global, cfg.rope_theta, cfg.local_rope_theta)
+        return (jnp.asarray(is_global), jnp.asarray(win),
+                jnp.asarray(theta, jnp.float32))
+
+    def _attn_layer_apply(self, lp, h, cfg, mode, cache, cache_len,
+                          window, theta, is_moe):
+        ln_in = rms_norm(h, lp["ln1"], cfg.norm_eps)
+        if cfg.kv_lora_rank and is_moe:
+            if mode == "decode":
+                a, cache = attention.mla_decode(lp["attn"], ln_in, cfg,
+                                                cache, cache_len)
+            else:
+                a, cache = attention.mla_full(lp["attn"], ln_in, cfg,
+                                              cache=cache)
+        else:
+            if mode == "decode":
+                a, cache = attention.gqa_decode(lp["attn"], ln_in, cfg,
+                                                cache, cache_len,
+                                                window=window, theta=theta)
+            else:
+                a, cache = attention.gqa_full(lp["attn"], ln_in, cfg,
+                                              window=window, theta=theta,
+                                              cache=cache)
+        h = h + a
+        ln2 = rms_norm(h, lp["ln2"], cfg.norm_eps)
+        if is_moe:
+            h = h + moe.moe_apply(lp["ffn"], ln2, cfg)
+        else:
+            h = h + mlp.swiglu_apply(lp["ffn"], ln2)
+        return _shard_h(h, cfg), cache
+
+    def _scan_attn_layers(self, params_stack, h, mode, caches, cache_len,
+                          flags=None, is_moe=False):
+        cfg = self.cfg
+
+        def body(carry, xs):
+            h = carry
+            if flags is not None:
+                lp, cache, (win, theta) = xs
+            else:
+                lp, cache = xs
+                win, theta = cfg.sliding_window, None
+            h, cache = self._attn_layer_apply(lp, h, cfg, mode, cache,
+                                              cache_len, win, theta, is_moe)
+            return h, cache
+
+        n_layers = jax.tree.leaves(params_stack)[0].shape[0]
+        G = cfg.remat_group
+        # grouped remat (train only): save the residual stream every G
+        # layers; backward recomputes G-layer segments — saved-activation
+        # memory drops ~G× for ~(1+1/G)× extra compute.
+        if (mode == "train" and caches is None and cfg.remat and G > 1
+                and n_layers % G == 0):
+            def regroup(x):
+                return x.reshape((n_layers // G, G) + x.shape[1:])
+            params_g = jax.tree.map(regroup, params_stack)
+            flags_g = jax.tree.map(regroup, flags) if flags is not None \
+                else None
+
+            @jax.checkpoint
+            def group_body(carry, xs_g):
+                lp_g, fl_g = xs_g
+
+                def inner(carry_h, i_xs):
+                    if fl_g is not None:
+                        lp, fl = i_xs
+                        return body(carry_h, (lp, None, fl))
+                    lp = i_xs
+                    return body(carry_h, (lp, None))
+                h_out, _ = jax.lax.scan(
+                    inner, carry,
+                    (lp_g, fl_g) if fl_g is not None else lp_g)
+                return h_out, None
+
+            h, _ = jax.lax.scan(group_body, h,
+                                (params_g, flags_g) if flags_g is not None
+                                else (params_g, None))
+            return h, None
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        xs = (params_stack, caches)
+        if flags is not None:
+            xs = xs + (flags,)
+        h, caches = jax.lax.scan(body, h, xs)
+        return h, caches
+
+    def _scan_mamba(self, params_stack, h, mode, caches):
+        cfg = self.cfg
+
+        def body(carry, xs):
+            h = carry
+            lp, cache = xs
+            ln = rms_norm(h, lp["ln"], cfg.norm_eps)
+            if mode == "decode":
+                y, cache = ssm.mamba_decode(lp["mixer"], ln, cfg, cache)
+            else:
+                y, cache = ssm.mamba_full(lp["mixer"], ln, cfg, cache=cache)
+            return _shard_h(h + y, cfg), cache
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        return jax.lax.scan(body, h, (params_stack, caches))
+
+    def _scan_mlstm(self, params_stack, h, mode, caches):
+        cfg = self.cfg
+
+        def body(carry, xs):
+            h = carry
+            lp, cache = xs
+            ln = rms_norm(h, lp["ln"], cfg.norm_eps)
+            y, cache = xlstm.mlstm_apply(lp["mixer"], ln, cfg, cache=cache,
+                                         decode=(mode == "decode"))
+            return _shard_h(h + y, cfg), cache
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        return jax.lax.scan(body, h, (params_stack, caches))
+
+    # ---------------- forward
+
+    def forward(self, params, tokens, *, mode="train", caches=None,
+                cache_len=None, image_embeds=None, return_hidden=False):
+        """tokens: (B, S) int32 (S=1 for decode).
+        Returns (logits — or final hidden states with return_hidden — ,
+        caches')."""
+        cfg = self.cfg
+        h = params["embed"].astype(jnp.bfloat16 if cfg.dtype == "bfloat16"
+                                   else jnp.float32)[tokens]
+        if getattr(cfg, "embed_scale", False):   # gemma-style sqrt(d) scaling
+            h = h * jnp.asarray(np.sqrt(cfg.d_model), h.dtype)
+        h = _shard_h(h, cfg)
+        fam = cfg.family
+        new_caches = {} if caches is not None else None
+
+        def take(name):
+            return caches[name] if caches is not None else None
+
+        if fam == "dense":
+            flags = None
+            if cfg.local_global_ratio:
+                _, win, theta = self._gemma_flags()
+                flags = (win, theta)
+            h, c = self._scan_attn_layers(params["layers"], h, mode,
+                                          take("layers"), cache_len,
+                                          flags=flags)
+            if new_caches is not None:
+                new_caches["layers"] = c
+
+        elif fam == "moe":
+            if cfg.first_dense_layers:
+                h, c = self._scan_attn_layers(params["dense_layers"], h,
+                                              mode, take("dense_layers"),
+                                              cache_len, is_moe=False)
+                if new_caches is not None:
+                    new_caches["dense_layers"] = c
+            h, c = self._scan_attn_layers(params["layers"], h, mode,
+                                          take("layers"), cache_len,
+                                          is_moe=True)
+            if new_caches is not None:
+                new_caches["layers"] = c
+
+        elif fam == "hybrid":
+            shared_c = take("shared_attn")
+            out_shared, seg_out = [], []
+            for a, (lo, hi) in enumerate(segment_bounds(cfg.n_layers,
+                                                        cfg.shared_attn_every)):
+                # shared attention block (same weights every application)
+                sc = (jax.tree.map(lambda x: x[a], shared_c)
+                      if shared_c is not None else None)
+                h, sc = self._attn_layer_apply(
+                    params["shared_attn"], h, cfg, mode, sc, cache_len,
+                    None, None, False)
+                out_shared.append(sc)
+                seg = jax.tree.map(lambda x: x[lo:hi], params["layers"])
+                seg_c = (jax.tree.map(lambda x: x[lo:hi], take("layers"))
+                         if caches is not None else None)
+                h, seg_c = self._scan_mamba(seg, h, mode, seg_c)
+                seg_out.append(seg_c)
+            if new_caches is not None:
+                new_caches["shared_attn"] = jax.tree.map(
+                    lambda *xs: jnp.stack(xs), *out_shared)
+                new_caches["layers"] = jax.tree.map(
+                    lambda *xs: jnp.concatenate(xs), *seg_out)
+
+        elif fam == "ssm":
+            period = cfg.slstm_period
+            n_groups = cfg.n_layers // period
+            per_seg = period - 1
+            sl_out = []
+            seg_out = []
+            for g in range(n_groups):
+                seg = jax.tree.map(
+                    lambda x: x[g * per_seg:(g + 1) * per_seg],
+                    params["layers"])
+                seg_c = (jax.tree.map(
+                    lambda x: x[g * per_seg:(g + 1) * per_seg],
+                    take("layers")) if caches is not None else None)
+                h, seg_c = self._scan_mlstm(seg, h, mode, seg_c)
+                seg_out.append(seg_c)
+                slp = jax.tree.map(lambda x: x[g], params["slstm"])
+                slc = (jax.tree.map(lambda x: x[g], take("slstm"))
+                       if caches is not None else None)
+                ln = rms_norm(h, slp["ln"], cfg.norm_eps)
+                y, slc = xlstm.slstm_apply(slp["mixer"], ln, cfg, cache=slc,
+                                           decode=(mode == "decode"))
+                h = _shard_h(h + y, cfg)
+                sl_out.append(slc)
+            if new_caches is not None:
+                new_caches["layers"] = jax.tree.map(
+                    lambda *xs: jnp.concatenate(xs), *seg_out)
+                new_caches["slstm"] = jax.tree.map(
+                    lambda *xs: jnp.stack(xs), *sl_out)
+
+        elif fam == "vlm":
+            period = cfg.cross_attn_period
+            n_cross = cfg.n_layers // period
+            img = None
+            if image_embeds is not None:
+                img = image_embeds.astype(h.dtype) @ params["img_proj"]
+            seg_out = []
+            for ci in range(n_cross):
+                cp = jax.tree.map(lambda x: x[ci], params["cross"])
+                if img is not None:
+                    ln = rms_norm(h, cp["ln1"], cfg.norm_eps)
+                    h = h + attention.cross_apply(cp["attn"], ln, img, cfg)
+                    ln2 = rms_norm(h, cp["ln2"], cfg.norm_eps)
+                    h = h + mlp.swiglu_apply(cp["ffn"], ln2)
+                    h = _shard_h(h, cfg)
+                seg = jax.tree.map(
+                    lambda x: x[ci * period:(ci + 1) * period],
+                    params["layers"])
+                seg_c = (jax.tree.map(
+                    lambda x: x[ci * period:(ci + 1) * period],
+                    take("layers")) if caches is not None else None)
+                h, seg_c = self._scan_attn_layers(seg, h, mode, seg_c,
+                                                  cache_len)
+                seg_out.append(seg_c)
+            if new_caches is not None:
+                new_caches["layers"] = jax.tree.map(
+                    lambda *xs: jnp.concatenate(xs), *seg_out)
+        else:
+            raise ValueError(fam)
+
+        h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+        if return_hidden:
+            return h, new_caches
+        return self.unembed(params, h), new_caches
+
+    def unembed(self, params, h):
+        cfg = self.cfg
+        if cfg.tie_embeddings:
+            logits = jnp.einsum("bsd,vd->bsv", h,
+                                params["embed"].astype(h.dtype))
+        else:
+            logits = h @ params["head"].astype(h.dtype)
+        return logits.astype(jnp.float32)
+
+    def unembed_weights(self, params):
+        """(W, transpose) such that logits = h @ (W.T if transpose else W)."""
+        if self.cfg.tie_embeddings:
+            return params["embed"], True
+        return params["head"], False

@@ -1,0 +1,250 @@
+"""xLSTM blocks: mLSTM (matrix memory, exponential gating) and sLSTM
+(scalar memory with recurrent gate connections), per Beck et al. 2024.
+
+The 48-block xlstm-1.3b stack interleaves one sLSTM block per
+``slstm_period`` mLSTM blocks (xLSTM[7:1]); the stack is scanned in groups of
+(period-1 mLSTM + 1 sLSTM) so the layer params stay homogeneous for scan.
+
+mLSTM state: C (B, H, hd, hd) matrix memory, n (B, H, hd) normalizer,
+m (B, H) gate stabilizer.  sLSTM state: c, n, h (B, H, hd), m (B, H).
+Both are O(1) per decoded token — these archs run the long_500k cell.
+
+Full-sequence mode uses lax.scan over time (exact recurrent form).  A
+chunkwise-parallel mLSTM (linear-attention style) is the documented perf
+upgrade path for TPU (EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import ParamDef
+
+
+def _heads(cfg):
+    return cfg.n_heads, cfg.d_model // cfg.n_heads
+
+
+def mlstm_defs(cfg):
+    d = cfg.d_model
+    H, hd = _heads(cfg)
+    return {
+        "wq": ParamDef((d, H, hd), P(None, None, "model")),
+        "wk": ParamDef((d, H, hd), P(None, None, "model")),
+        "wv": ParamDef((d, H, hd), P(None, None, "model")),
+        "wi": ParamDef((d, H), P(None, None), init_scale=0.1),
+        "wf": ParamDef((d, H), P(None, None), init_scale=0.1),
+        "wo": ParamDef((d, d), P(None, "model")),
+        "w_out": ParamDef((d, d), P("model", None)),
+    }
+
+
+def mlstm_cache_defs(cfg, batch):
+    H, hd = _heads(cfg)
+    return {
+        "C": ParamDef((batch, H, hd, hd), P("data", None, None, "model")),
+        "n": ParamDef((batch, H, hd), P("data", None, "model")),
+        "m": ParamDef((batch, H), P("data", None)),
+    }
+
+
+def _mlstm_step(state, inp):
+    C, n, m = state
+    q, k, v, i_pre, f_pre = inp            # (B,H,hd) ×3, (B,H) ×2
+    log_f = -jax.nn.softplus(-f_pre)       # log sigmoid(f)
+    m_new = jnp.maximum(log_f + m, i_pre)
+    i_g = jnp.exp(i_pre - m_new)
+    f_g = jnp.exp(log_f + m - m_new)
+    C = C * f_g[..., None, None] + i_g[..., None, None] \
+        * jnp.einsum("bhk,bhv->bhkv", k, v)
+    n = n * f_g[..., None] + i_g[..., None] * k
+    num = jnp.einsum("bhk,bhkv->bhv", q, C)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", q, n)),
+                      jnp.exp(-m_new))
+    h = num / den[..., None]
+    return (C, n, m_new), h
+
+
+def _mlstm_core(q, k, v, i_pre, f_pre, state):
+    """Scan over time. q/k/v: (B,S,H,hd); gates (B,S,H)."""
+    hd = q.shape[-1]
+    k = k / jnp.sqrt(jnp.float32(hd))
+    xs = tuple(a.transpose(1, 0, 2, 3) for a in (q, k, v)) + \
+        tuple(a.transpose(1, 0, 2) for a in (i_pre, f_pre))
+    state, hs = jax.lax.scan(_mlstm_step, state, xs)
+    return hs.transpose(1, 0, 2, 3), state
+
+
+def _mlstm_chunkwise(q, k, v, i_pre, f_pre, state, chunk: int):
+    """Chunkwise-parallel mLSTM — mathematically identical to the step
+    recurrence (same per-position stabilizer m_t, verified in tests), but
+    the per-token outer products become per-chunk MXU matmuls and the
+    matrix memory hits HBM once per CHUNK instead of once per token: the
+    xlstm-1.3b × train_4k memory roofline term drops ~an order of magnitude
+    (EXPERIMENTS.md §Perf).
+
+    Derivation: with b_j = Σ_{l≤j} log σ(f_l) (within-chunk cumsum),
+      m_j   = b_j + max(m_in, cummax_j(i - b))                 (= scan's m_t)
+      h_j   = [e^{b_j+m_in-m_j}·q_j C_in + Σ_{l≤j} S_jl v_l] / den_j
+      S_jl  = (q_j·k_l) e^{b_j-b_l+i_l-m_j}
+      den_j = max(|e^{b_j+m_in-m_j}·q_j n_in + Σ_l S_jl|, e^{-m_j})
+    and the chunk-final (C,n,m) update uses the same weights at j = L.
+    """
+    B, S, H, hd = q.shape
+    hd_v = v.shape[-1]
+    k = k / jnp.sqrt(jnp.float32(hd))
+    nc = S // chunk
+
+    def to_chunks(a):
+        return a.reshape((B, nc, chunk) + a.shape[2:]).transpose(
+            (1, 0, 2) + tuple(range(3, a.ndim + 1)))
+    qc, kc, vc = map(to_chunks, (q, k, v))            # (nc,B,L,H,·)
+    ic, fc = map(to_chunks, (i_pre, f_pre))           # (nc,B,L,H)
+
+    neg_inf = jnp.float32(-1e30)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def step(carry, xs):
+        C_in, n_in, m_in = carry
+        qb, kb, vb, ib, fb = xs
+        log_f = -jax.nn.softplus(-fb)                 # (B,L,H)
+        b = jnp.cumsum(log_f, axis=1)
+        a = ib - b                                    # i_l - b_l
+        run = jax.lax.cummax(a, axis=1)               # cummax_j(i-b)
+        m = b + jnp.maximum(m_in[:, None, :], run)    # (B,L,H) == scan m_t
+        inter = jnp.exp(b + m_in[:, None, :] - m)     # (B,L,H)
+
+        # intra-chunk decay matrix: log D_jl = b_j - b_l + i_l - m_j (l<=j)
+        logD = (b[:, :, None, :] - b[:, None, :, :] + ib[:, None, :, :]
+                - m[:, :, None, :])                   # (B,j,l,H)
+        logD = jnp.where(tri[None, :, :, None], logD, neg_inf)
+        S_mat = jnp.einsum("bjhd,blhd->bjlh", qb, kb) * jnp.exp(logD)
+
+        num = (inter[..., None] * jnp.einsum("bjhd,bhdv->bjhv", qb, C_in)
+               + jnp.einsum("bjlh,blhv->bjhv", S_mat, vb))
+        qn = (inter * jnp.einsum("bjhd,bhd->bjh", qb, n_in)
+              + jnp.sum(S_mat, axis=2))
+        den = jnp.maximum(jnp.abs(qn), jnp.exp(-m))
+        h = num / den[..., None]                      # (B,L,H,hd_v)
+
+        # chunk-final state (weights at j = L)
+        b_tot = b[:, -1, :]                           # (B,H)
+        m_out = b_tot + jnp.maximum(m_in, run[:, -1, :])
+        w_state = jnp.exp(b_tot[:, None, :] - b + ib - m_out[:, None, :])
+        C_out = (jnp.exp(b_tot + m_in - m_out)[..., None, None] * C_in
+                 + jnp.einsum("blh,blhd,blhv->bhdv", w_state, kb, vb))
+        n_out = (jnp.exp(b_tot + m_in - m_out)[..., None] * n_in
+                 + jnp.einsum("blh,blhd->bhd", w_state, kb))
+        return (C_out, n_out, m_out), h
+
+    state, hs = jax.lax.scan(step, state, (qc, kc, vc, ic, fc))
+    hs = hs.transpose(1, 0, 2, 3, 4).reshape(B, S, H, hd_v)
+    return hs, state
+
+
+def mlstm_apply(p, x, cfg, cache=None, decode=False):
+    B, S, d = x.shape
+    H, hd = _heads(cfg)
+    f32 = jnp.float32
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"]).astype(f32)
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"]).astype(f32)
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"]).astype(f32)
+    i_pre = (x @ p["wi"]).astype(f32)
+    f_pre = (x @ p["wf"]).astype(f32)
+
+    if cache is not None:
+        state = (cache["C"].astype(f32), cache["n"].astype(f32),
+                 cache["m"].astype(f32))
+    else:
+        state = (jnp.zeros((B, H, hd, hd), f32), jnp.zeros((B, H, hd), f32),
+                 jnp.full((B, H), -1e30, f32))
+
+    if decode:
+        state, h = _mlstm_step(state, (q[:, 0], k[:, 0] / jnp.sqrt(f32(hd)),
+                                       v[:, 0], i_pre[:, 0], f_pre[:, 0]))
+        hs = h[:, None]
+    else:
+        cw = getattr(cfg, "ssm_chunk", 0)
+        if cw and S % cw == 0 and S > cw:
+            hs, state = _mlstm_chunkwise(q, k, v, i_pre, f_pre, state, cw)
+        else:
+            hs, state = _mlstm_core(q, k, v, i_pre, f_pre, state)
+
+    hs = hs.reshape(B, S, d).astype(x.dtype)
+    out = (hs * jax.nn.sigmoid(x @ p["wo"])) @ p["w_out"]
+    new_cache = None
+    if cache is not None:
+        new_cache = {"C": state[0].astype(cache["C"].dtype),
+                     "n": state[1].astype(cache["n"].dtype),
+                     "m": state[2].astype(cache["m"].dtype)}
+    return out, new_cache
+
+
+def slstm_defs(cfg):
+    d = cfg.d_model
+    H, hd = _heads(cfg)
+    return {
+        "w_gates": ParamDef((d, 4, H, hd), P(None, None, None, "model")),
+        "r_gates": ParamDef((H, 4, hd, hd), P(None, None, None, "model"),
+                            init_scale=0.3),
+        "w_out": ParamDef((d, d), P("model", None)),
+    }
+
+
+def slstm_cache_defs(cfg, batch):
+    H, hd = _heads(cfg)
+    return {
+        "c": ParamDef((batch, H, hd), P("data", None, "model")),
+        "n": ParamDef((batch, H, hd), P("data", None, "model")),
+        "h": ParamDef((batch, H, hd), P("data", None, "model")),
+        "m": ParamDef((batch, H), P("data", None)),
+    }
+
+
+def _slstm_step(p_r, state, g_in):
+    c, n, h, m = state
+    rec = jnp.einsum("bhk,hgkv->bghv", h, p_r)     # (B, 4, H, hd)
+    z_pre, i_pre, f_pre, o_pre = [g_in[:, i] + rec[:, i] for i in range(4)]
+    i_sc = jnp.mean(i_pre, axis=-1)                # head-level stabilization
+    f_sc = jnp.mean(f_pre, axis=-1)
+    log_f = -jax.nn.softplus(-f_sc)
+    m_new = jnp.maximum(log_f + m, i_sc)
+    i_g = jnp.exp(i_pre - m_new[..., None])
+    f_g = jnp.exp(log_f[..., None] + (m - m_new)[..., None])
+    z = jnp.tanh(z_pre)
+    o = jax.nn.sigmoid(o_pre)
+    c = f_g * c + i_g * z
+    n = f_g * n + i_g
+    h = o * c / jnp.maximum(n, 1e-6)
+    return (c, n, h, m_new), h
+
+
+def slstm_apply(p, x, cfg, cache=None, decode=False):
+    B, S, d = x.shape
+    H, hd = _heads(cfg)
+    f32 = jnp.float32
+    gates_in = jnp.einsum("bsd,dghk->bsghk", x, p["w_gates"]).astype(f32)
+
+    if cache is not None:
+        state = tuple(cache[k].astype(f32) for k in ("c", "n", "h", "m"))
+    else:
+        state = (jnp.zeros((B, H, hd), f32), jnp.zeros((B, H, hd), f32),
+                 jnp.zeros((B, H, hd), f32), jnp.full((B, H), -1e30, f32))
+
+    p_r = p["r_gates"].astype(f32)
+    if decode:
+        state, h = _slstm_step(p_r, state, gates_in[:, 0])
+        hs = h[:, None]
+    else:
+        def step(st, g):
+            return _slstm_step(p_r, st, g)
+        state, hs = jax.lax.scan(step, state, gates_in.transpose(1, 0, 2, 3, 4))
+        hs = hs.transpose(1, 0, 2, 3)
+
+    out = hs.reshape(B, S, d).astype(x.dtype) @ p["w_out"]
+    new_cache = None
+    if cache is not None:
+        new_cache = {k: s.astype(cache[k].dtype)
+                     for k, s in zip(("c", "n", "h", "m"), state)}
+    return out, new_cache

@@ -1,0 +1,65 @@
+"""Roofline terms + analytic MODEL_FLOPS (6·N·D accounting)."""
+from __future__ import annotations
+
+from repro.launch.mesh import PEAK_FLOPS_BF16, HBM_BW, ICI_BW_PER_LINK
+
+
+def roofline_terms(stats, n_chips: int):
+    """stats are PER-PARTITION (SPMD module); terms in seconds.
+
+    compute   = FLOPs_per_chip / peak
+    memory    = bytes_per_chip / HBM_bw
+    collective= collective_bytes_per_chip / link_bw
+    """
+    compute = stats.flops / PEAK_FLOPS_BF16
+    memory = stats.bytes_accessed / HBM_BW
+    collective = stats.collective_bytes / ICI_BW_PER_LINK
+    dominant = max(("compute", compute), ("memory", memory),
+                   ("collective", collective), key=lambda kv: kv[1])[0]
+    return {
+        "compute_s": compute,
+        "memory_s": memory,
+        "collective_s": collective,
+        "dominant": dominant,
+        "bound_s": max(compute, memory, collective),
+    }
+
+
+def count_params(cfg) -> tuple[int, int]:
+    """(total params, active params) from the model's own param defs."""
+    from repro.models import lm
+    from repro.models.common import param_count
+    import numpy as np
+    import jax
+
+    model = lm.build_model(cfg)
+    defs = model.param_defs()
+    total = param_count(defs)
+    if cfg.family != "moe":
+        return total, total
+    # active = total - (inactive routed expert fraction)
+    from repro.models.common import ParamDef
+    leaves = jax.tree_util.tree_flatten_with_path(
+        defs, is_leaf=lambda x: isinstance(x, ParamDef))[0]
+    expert_params = sum(
+        int(np.prod(d.shape)) for path, d in leaves
+        if any(getattr(k, "key", None) in ("w_gate", "w_up", "w_down")
+               and any(getattr(kk, "key", None) == "ffn" for kk in path)
+               for k in path))
+    frac_active = cfg.top_k / max(cfg.n_experts, 1)
+    active = total - int(expert_params * (1.0 - frac_active))
+    return total, active
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS = 6·N·D (train) / 2·N·D (inference forward), with N =
+    active params, D = tokens processed this step."""
+    _, active = count_params(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * active * tokens
+    # decode: one token per sequence
+    return 2.0 * active * shape.global_batch

@@ -1,0 +1,1 @@
+from repro.runtime.trainer import Trainer, TrainerConfig  # noqa: F401

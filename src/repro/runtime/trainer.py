@@ -1,0 +1,123 @@
+"""LM training runtime: jitted SPMD step + fault tolerance.
+
+Responsibilities:
+  * build (params, opt_state) on the mesh (or restore from the latest
+    checkpoint — crash/preemption recovery is just "run the same command");
+  * drive the jitted train step over the deterministic pipeline;
+  * checkpoint every ``ckpt_every`` steps (async, atomic, keep-k);
+  * metrics log (loss/grad-norm/lr/step-time) as JSONL for the benchmarks.
+
+Elasticity: because restore() re-places host arrays with the CURRENT mesh's
+shardings and the pipeline is a pure function of step, a checkpoint taken on
+one mesh resumes on another (tested with device-count changes in
+tests/test_checkpoint.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.checkpoint import CheckpointManager
+from repro.data.pipeline import TokenPipeline
+from repro.models import lm
+from repro.models.common import init_params
+from repro.optim import adamw
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    steps: int = 100
+    ckpt_every: int = 25
+    ckpt_dir: str = "checkpoints"
+    keep_last: int = 3
+    async_save: bool = True
+    log_path: Optional[str] = None
+    seed: int = 0
+    batch: int = 8
+    seq_len: int = 128
+    microbatches: int = 1
+
+
+class Trainer:
+    def __init__(self, arch_cfg, opt_cfg: adamw.AdamWConfig,
+                 tcfg: TrainerConfig, mesh=None):
+        self.cfg = arch_cfg
+        self.opt_cfg = opt_cfg
+        self.tcfg = tcfg
+        self.mesh = mesh
+        self.pipeline = TokenPipeline(arch_cfg.vocab_size, tcfg.batch,
+                                      tcfg.seq_len, seed=tcfg.seed)
+        self.ckpt = CheckpointManager(tcfg.ckpt_dir,
+                                      keep_last=tcfg.keep_last,
+                                      async_save=tcfg.async_save)
+        step_fn, self.model = lm.make_train_step(
+            arch_cfg, opt_cfg, microbatches=tcfg.microbatches)
+        self.train_step = jax.jit(step_fn, donate_argnums=(0, 1))
+
+    # ------------------------------------------------------------ state
+
+    def init_state(self, key=None):
+        key = key if key is not None else jax.random.PRNGKey(self.tcfg.seed)
+        params = init_params(self.model.param_defs(), key)
+        if self.mesh is not None:
+            from repro.models.common import abstract_params
+            sds = abstract_params(self.model.param_defs(), self.mesh,
+                                  dtype=None)
+            params = jax.tree.map(
+                lambda x, s: jax.device_put(x, s.sharding), params, sds)
+        opt_state = adamw.adamw_init(params)
+        return params, opt_state, 0
+
+    def restore_or_init(self):
+        if self.ckpt.latest_step() is not None:
+            params, opt_state, _ = self.init_state()
+            like = {"params": params, "opt": opt_state}
+            tree, md = self.ckpt.restore(like)
+            return tree["params"], tree["opt"], int(md["next_step"])
+        return self.init_state()
+
+    # ------------------------------------------------------------- run
+
+    def _put_batch(self, batch):
+        if self.mesh is None:
+            return {k: jnp.asarray(v) for k, v in batch.items()}
+        dp = tuple(a for a in ("pod", "data") if a in self.mesh.axis_names)
+        sh = NamedSharding(self.mesh, P(dp, None))
+        return {k: jax.device_put(v, sh) for k, v in batch.items()}
+
+    def run(self):
+        params, opt_state, start = self.restore_or_init()
+        log_f = open(self.tcfg.log_path, "a") if self.tcfg.log_path else None
+        losses = []
+        for step in range(start, self.tcfg.steps):
+            t0 = time.time()
+            batch = self._put_batch(self.pipeline.batch_at(step))
+            params, opt_state, metrics = self.train_step(params, opt_state,
+                                                         batch)
+            loss = float(metrics["loss"])
+            losses.append(loss)
+            rec = {"step": step, "loss": loss,
+                   "grad_norm": float(metrics["grad_norm"]),
+                   "lr": float(metrics["lr"]),
+                   "step_s": round(time.time() - t0, 4)}
+            if log_f:
+                log_f.write(json.dumps(rec) + "\n")
+                log_f.flush()
+            if (step + 1) % self.tcfg.ckpt_every == 0 \
+                    or step + 1 == self.tcfg.steps:
+                self.ckpt.save(step + 1,
+                               {"params": params, "opt": opt_state},
+                               metadata={"next_step": step + 1,
+                                         "loss": loss})
+        self.ckpt.wait()
+        if log_f:
+            log_f.close()
+        return params, opt_state, losses

@@ -1,0 +1,44 @@
+"""Subprocess: vocab-parallel CE == plain CE, values and gradients."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import lm
+
+
+def main():
+    mesh = jax.make_mesh((2, 4), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    rng = np.random.default_rng(0)
+    B, S, d, V = 4, 16, 32, 64
+    h = rng.normal(size=(B, S, d)).astype(np.float32)
+    w = rng.normal(size=(d, V)).astype(np.float32) * 0.3
+    t = rng.integers(0, V, size=(B, S)).astype(np.int32)
+    m = (rng.random((B, S)) > 0.1).astype(np.float32)
+
+    def plain(h, w):
+        logits = h @ w
+        return lm.next_token_loss(logits, jnp.asarray(t), jnp.asarray(m))
+
+    def dist(h, w):
+        return lm.vocab_parallel_ce(h, w, False, jnp.asarray(t),
+                                    jnp.asarray(m))
+
+    with mesh:
+        hd = jax.device_put(h, NamedSharding(mesh, P("data", "model", None)))
+        wd = jax.device_put(w, NamedSharding(mesh, P(None, "model")))
+        l1, (g1h, g1w) = jax.value_and_grad(plain, argnums=(0, 1))(
+            jnp.asarray(h), jnp.asarray(w))
+        l2, (g2h, g2w) = jax.jit(
+            jax.value_and_grad(dist, argnums=(0, 1)))(hd, wd)
+    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(g1h), np.asarray(g2h),
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(g1w), np.asarray(g2w),
+                               rtol=1e-4, atol=1e-5)
+    print("DIST_CE_OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,78 @@
+"""GLM loss-family unit + property tests: analytic (s, w) must equal the
+autodiff derivatives of the loss for every family, across the whole margin
+range (hypothesis)."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import glm
+
+FAMS = ["logistic", "squared", "probit", "poisson"]
+
+
+def _y_for(family, rng, n):
+    if family == "poisson":
+        return rng.poisson(2.0, n).astype(np.float32)
+    if family == "squared":
+        return rng.normal(size=n).astype(np.float32)
+    return rng.choice([-1.0, 1.0], n).astype(np.float32)
+
+
+@pytest.mark.parametrize("family", FAMS)
+def test_stats_match_autodiff(family, rng):
+    fam = glm.get_family(family)
+    n = 64
+    y = _y_for(family, rng, n)
+    m = rng.normal(size=n).astype(np.float32) * 3.0
+
+    loss, s, w = fam.stats(jnp.asarray(y), jnp.asarray(m))
+    # s = -dl/dm, w = d2l/dm2 via autodiff
+    def li(mi, yi):
+        return fam.stats(yi, mi)[0]
+    g = jax.vmap(jax.grad(li))(jnp.asarray(m), jnp.asarray(y))
+    h = jax.vmap(jax.grad(jax.grad(li)))(jnp.asarray(m), jnp.asarray(y))
+    np.testing.assert_allclose(np.asarray(s), -np.asarray(g),
+                               rtol=2e-4, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(w), np.asarray(h),
+                               rtol=2e-3, atol=2e-4)
+
+
+@pytest.mark.parametrize("family", ["logistic", "squared", "probit"])
+def test_curvature_bound(family, rng):
+    """Paper Appendix B: bounded second derivatives."""
+    fam = glm.get_family(family)
+    m = np.linspace(-30, 30, 4001).astype(np.float32)
+    for yv in (-1.0, 1.0):
+        _, _, w = fam.stats(jnp.full_like(jnp.asarray(m), yv), jnp.asarray(m))
+        assert float(jnp.max(w)) <= fam.curvature_bound + 1e-3
+        assert float(jnp.min(w)) >= 0.0
+
+
+@hypothesis.given(x=st.floats(-1e6, 1e6), a=st.floats(0, 1e6))
+@hypothesis.settings(deadline=None, max_examples=200)
+def test_soft_threshold_properties(x, a):
+    t = float(glm.soft_threshold(jnp.float32(x), jnp.float32(a)))
+    eps = 1e-3 + 1e-5 * abs(x)              # f32 rounding slack
+    assert abs(t) <= abs(x) + eps           # shrinkage
+    if abs(x) <= a:
+        assert t == 0.0                      # dead zone is exact zero
+    elif abs(x) - a > 1e-30:                 # above f32 underflow
+        assert np.sign(t) == np.sign(x) or t == 0.0  # sign never flips
+        # |x| - a suffers catastrophic cancellation in f32 when x ≈ a:
+        # allow one ulp of |x| on top of the nominal tolerance
+        np.testing.assert_allclose(abs(t), abs(x) - a, rtol=1e-4,
+                                   atol=1e-2 + 2e-7 * abs(x))
+
+
+def test_probit_tail_stability():
+    """probit stats must stay finite deep into the mispredicted tail."""
+    fam = glm.get_family("probit")
+    m = jnp.asarray([-40.0, -20.0, 20.0, 40.0])
+    y = jnp.ones_like(m)
+    loss, s, w = fam.stats(y, m)
+    assert np.isfinite(np.asarray(loss)).all()
+    assert np.isfinite(np.asarray(s)).all()
+    assert np.isfinite(np.asarray(w)).all()

@@ -1,0 +1,90 @@
+"""Static HLO profiler: trip-count handling must be exact (this is the
+correctness bedrock of the whole roofline analysis)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.roofline.hlo import analyze_hlo
+
+
+def test_scan_trip_count_exact():
+    def scanned(x, ws):
+        def body(c, w):
+            return c @ w, None
+        y, _ = jax.lax.scan(body, x, ws)
+        return y
+
+    x = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+    ws = jax.ShapeDtypeStruct((12, 256, 256), jnp.float32)
+    c = jax.jit(scanned).lower(x, ws).compile()
+    st = analyze_hlo(c.as_text())
+    expected = 12 * 2 * 256 ** 3
+    assert abs(st.flops - expected) / expected < 0.01
+    # XLA's own analysis undercounts the loop — make sure we beat it
+    assert st.flops > 5 * c.cost_analysis()["flops"]
+
+
+def test_backward_scan_counted():
+    def f(x, ws):
+        def body(c, w):
+            return jnp.tanh(c @ w), None
+        y, _ = jax.lax.scan(body, x, ws)
+        return jnp.sum(y)
+
+    x = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    ws = jax.ShapeDtypeStruct((10, 128, 128), jnp.float32)
+    c = jax.jit(jax.grad(f, argnums=(0, 1))).lower(x, ws).compile()
+    st = analyze_hlo(c.as_text())
+    # fwd 10 matmuls + bwd dc 10 + bwd dw 10 >= ~28 matmul equivalents
+    per_mm = 2 * 128 ** 3
+    assert st.flops >= 28 * per_mm, st.flops / per_mm
+
+
+def test_loop_free_matches_cost_analysis():
+    def plain(a, b):
+        return jax.nn.relu(a @ b) @ b
+
+    a = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+    c = jax.jit(plain).lower(a, a).compile()
+    st = analyze_hlo(c.as_text())
+    xla = c.cost_analysis()["flops"]
+    assert abs(st.flops - xla) / xla < 0.02
+
+
+def test_dynamic_slice_not_charged_full_buffer():
+    """A scan body that slices a big xs array must be charged per-slice
+    bytes, not the whole array per step (else bytes go quadratic in S)."""
+    def f(xs):
+        def body(c, i):
+            return c + jax.lax.dynamic_slice(xs, (i * 4, 0), (4, 128)), None
+        out, _ = jax.lax.scan(body, jnp.zeros((4, 128)),
+                              jnp.arange(256))
+        return out
+
+    xs = jax.ShapeDtypeStruct((1024, 128), jnp.float32)
+    c = jax.jit(f).lower(xs).compile()
+    st = analyze_hlo(c.as_text())
+    full = 1024 * 128 * 4
+    # 256 steps × O(slice) bytes — must be way below 256 × full buffer
+    assert st.bytes_accessed < 40 * full, st.bytes_accessed / full
+
+
+def test_collectives_detected():
+    """psum inside shard_map must show up as all-reduce bytes (uses 1 device
+    — the collective still appears in the partitioned HLO as a no-op variant;
+    skip silently if XLA elides it at world size 1)."""
+    mesh = jax.make_mesh((1,), ("m",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+
+    def f(x):
+        return jax.lax.psum(x, "m")
+
+    g = jax.shard_map(f, mesh=mesh,
+                      in_specs=jax.sharding.PartitionSpec("m"),
+                      out_specs=jax.sharding.PartitionSpec(),
+                      check_vma=False)
+    c = jax.jit(g).lower(jax.ShapeDtypeStruct((64,), jnp.float32)).compile()
+    st = analyze_hlo(c.as_text())
+    # with 1 device XLA may fold the collective; just assert no crash and
+    # non-negative accounting
+    assert st.collective_bytes >= 0.0

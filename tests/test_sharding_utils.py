@@ -1,0 +1,100 @@
+"""Sharding/scale utilities: compression error bounds, ALB budget rule,
+TP padding rules for every assigned arch."""
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import tp_pad_config
+from repro.configs.registry import ARCHS
+from repro.core import alb
+from repro.sharding.compress import psum_compressed
+
+
+def test_compress_none_axis_is_identity():
+    x = jnp.asarray(np.random.default_rng(0).normal(size=100).astype(np.float32))
+    for mode in (None, "bf16", "int8"):
+        np.testing.assert_array_equal(np.asarray(psum_compressed(x, None,
+                                                                 mode)),
+                                      np.asarray(x))
+
+
+@hypothesis.given(seed=st.integers(0, 1000), scale=st.floats(1e-3, 1e3))
+@hypothesis.settings(deadline=None, max_examples=50)
+def test_int8_quantization_error_bound(seed, scale):
+    """|dequant(quant(x)) - x| <= amax/127 per element (pre-psum)."""
+    rng = np.random.default_rng(seed)
+    x = (rng.normal(size=256) * scale).astype(np.float32)
+    amax = np.abs(x).max()
+    s = max(amax, 1e-30) / 127.0
+    q = np.clip(np.round(x / s), -127, 127) * s
+    assert np.max(np.abs(q - x)) <= s * 0.5 + 1e-12 + amax * 1e-6
+
+
+class TestALB:
+    def test_kappa_rule(self):
+        """At least a (1-kappa)-quantile node completes exactly one cycle;
+        faster nodes get bigger budgets, slower smaller."""
+        speeds = np.array([1.0, 1.0, 1.0, 0.25, 2.0, 1.0, 1.0, 1.0])
+        b = alb.alb_budgets(speeds, n_tiles=100, kappa=0.75)
+        assert b.min() >= 1
+        # the straggler gets ~quarter of a cycle
+        assert b[3] < 50
+        # the fast node exceeds one cycle
+        assert b[4] > 100
+        # at least 75% of nodes complete >= one full cycle
+        assert (b >= 100).mean() >= 0.5
+
+    def test_budget_cap_and_floor(self):
+        speeds = np.array([1e-3, 1.0, 1e3])
+        b = alb.alb_budgets(speeds, n_tiles=10, kappa=0.5)
+        assert b.min() >= 1
+        assert b.max() <= alb.max_budget(10)
+
+    def test_homogeneous_is_one_cycle(self):
+        b = alb.alb_budgets(np.ones(8), n_tiles=64, kappa=0.75)
+        np.testing.assert_array_equal(b, np.full(8, 64))
+
+    def test_rejects_nonpositive(self):
+        with pytest.raises(ValueError):
+            alb.alb_budgets(np.array([1.0, 0.0]), 10, 0.75)
+
+    def test_speed_sampler_positive(self):
+        rng = np.random.default_rng(0)
+        s = alb.sample_speeds(rng, np.ones(64))
+        assert (s > 0).all()
+
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_tp_padding_rules(name):
+    """Padded configs must divide the 16-way axis and keep integer GQA
+    grouping; unpadded dims stay untouched."""
+    cfg = ARCHS[name]
+    padded, pads = tp_pad_config(cfg, 16)
+    assert padded.n_heads % 16 == 0 or 16 % padded.n_heads == 0
+    assert (padded.n_kv_heads % 16 == 0 or 16 % padded.n_kv_heads == 0)
+    assert padded.n_heads % padded.n_kv_heads == 0
+    assert padded.vocab_size % 16 == 0
+    assert padded.n_heads >= cfg.n_heads
+    assert padded.vocab_size >= cfg.vocab_size
+    for field in ("d_model", "d_ff", "n_layers"):
+        assert getattr(padded, field) == getattr(cfg, field)
+
+
+def test_zero1_and_fsdp_sharding_choices():
+    import jax
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.models.lm import fsdp_param_sharding, zero1_sharding
+
+    mesh = jax.make_mesh((1,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    # zero1 picks the first free divisible dim
+    sds = jax.ShapeDtypeStruct((4, 7), jnp.float32,
+                               sharding=NamedSharding(mesh, P(None, None)))
+    sh = zero1_sharding(sds, mesh)
+    assert sh.spec[0] in (("data",), "data")
+    # fsdp falls back to replication when nothing divides
+    sh2 = fsdp_param_sharding((3, 5), mesh)
+    # data axis has size 1 -> everything divides; first dim chosen
+    assert sh2.spec[0] in (("data",), "data")
