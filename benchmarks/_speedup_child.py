@@ -9,6 +9,7 @@ from repro.core import dglmnet, glm, prox_ref
 from repro.core.dglmnet import DGLMNETConfig
 from repro.data import synthetic
 from repro.data.sparse import to_dense_blocks
+from repro.sharding import compat
 
 import jax.numpy as jnp
 
@@ -25,8 +26,7 @@ def main():
 
     per_m = []
     for M in (1, 2, 4, 8):
-        mesh = jax.make_mesh((1, M), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = compat.make_mesh((1, M), ("data", "model"))
         cfg = DGLMNETConfig(lam1=lam1, lam2=0.0, tile_size=128,
                             coupling="jacobi", alb=True, max_outer=60,
                             tol=0.0)

@@ -54,4 +54,28 @@ def run():
     rows.append({"name": f"alpha_search_K21_n{n}",
                  "us_per_call": round(us, 1),
                  "derived": f"loss_evals~{21*n}"})
+
+    # dense-vs-sparse occupancy sweep: per-tile Gram+gradient through the
+    # dense tile matmul vs the brick-gather tile_gram at decreasing brick
+    # occupancy.  Compute (and on TPU, DMA traffic) scales with the brick
+    # population; the crossover occupancy is the bricks-beat-dense threshold
+    # of DESIGN.md §2.
+    rb, n_rb = 256, n // 256
+    w2 = jnp.asarray(w.reshape(n_rb, rb))
+    r2 = jnp.asarray(s.reshape(n_rb, rb))
+    us_dense = _time(
+        lambda Xt, wv, rv: ((Xt * wv[:, None]).T @ Xt, Xt.T @ rv),
+        jnp.asarray(X), jnp.asarray(w), jnp.asarray(s))
+    rows.append({"name": f"tile_gram_dense_T{T}", "us_per_call":
+                 round(us_dense, 1), "derived": f"flops~{2*n*T*T}"})
+    for occ in (1.0, 0.5, 0.25, 0.05):
+        nb = max(1, int(round(occ * n_rb)))
+        bricks = jnp.asarray(
+            rng.normal(size=(nb, rb, T)).astype(np.float32))
+        brick_rows = jnp.asarray(np.arange(nb, dtype=np.int32) % n_rb)
+        us = _time(ops.tile_gram, bricks, brick_rows, jnp.int32(nb),
+                   w2, r2, backend="ref")
+        rows.append({"name": f"tile_gram_bricks_T{T}_occ{occ:g}",
+                     "us_per_call": round(us, 1),
+                     "derived": f"flops~{2*nb*rb*T*T}"})
     return {"figure": "kernels", "rows": rows}

@@ -20,33 +20,32 @@ import numpy as np
 from repro.core import dglmnet, glm
 from repro.core.dglmnet import DGLMNETConfig
 from repro.data import synthetic
-from repro.data.sparse import to_dense_blocks
+from repro.data.design import brick_occupancy
+from repro.sharding import compat
 
 
 def main():
     ds = synthetic.make_sparse(n=4000, p=8000, avg_nnz=50, seed=3)
-    X, _, occ = to_dense_blocks(ds.train.X, 128)
-    y = ds.train.y
-    print(f"sparse design: nnz={ds.train.X.nnz}, brick occupancy={occ:.2f}")
+    X, y = ds.train.X, ds.train.y       # SparseCOO — never densified
+    occ = brick_occupancy(X, 128)
+    print(f"sparse design: nnz={X.nnz}, brick occupancy={occ:.2f}")
 
     base = DGLMNETConfig(lam1=1.0, lam2=0.1, tile_size=128,
                          coupling="jacobi", max_outer=40, tol=1e-10)
 
     def obj(beta):
-        return float(glm.objective(glm.LOGISTIC, jnp.asarray(y),
-                                   jnp.asarray(X), jnp.asarray(beta),
-                                   base.lam1, base.lam2))
+        return float(glm.negloglik(glm.LOGISTIC, jnp.asarray(y),
+                                   jnp.asarray(X.matvec(beta)))
+                     + glm.penalty(jnp.asarray(beta), base.lam1, base.lam2))
 
     # the paper's layout: 8 feature blocks, every node holds all rows
-    mesh_1d = jax.make_mesh((1, 8), ("data", "model"),
-                            axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh_1d = compat.make_mesh((1, 8), ("data", "model"))
     res = dglmnet.fit_sharded(X, y, base, mesh_1d, verbose=False)
     print(f"1-D (paper) split : f={obj(res.beta):.5f} "
           f"iters={res.n_iter} nnz={(res.beta != 0).sum()}")
 
     # 2-D: rows × features (beyond-paper scale-out)
-    mesh_2d = jax.make_mesh((2, 4), ("data", "model"),
-                            axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh_2d = compat.make_mesh((2, 4), ("data", "model"))
     res = dglmnet.fit_sharded(X, y, base, mesh_2d)
     print(f"2-D rows×features : f={obj(res.beta):.5f} iters={res.n_iter}")
 

@@ -25,7 +25,7 @@ from repro.checkpoint import CheckpointManager
 from repro.core import dglmnet
 from repro.core.dglmnet import DGLMNETConfig
 from repro.data import synthetic
-from repro.data.sparse import to_dense_blocks
+from repro.sharding import compat
 
 
 def main():
@@ -41,11 +41,10 @@ def main():
     print(f"generating sparse data: n={args.examples} p={args.features}")
     ds = synthetic.make_sparse(n=args.examples, p=args.features,
                                avg_nnz=40, k_true=500, seed=11)
-    X, perm, occ = to_dense_blocks(ds.train.X, 256)
-    print(f"nnz={ds.train.X.nnz/1e6:.1f}M  brick occupancy={occ:.3f}")
+    X = ds.train.X                      # SparseCOO — the dense (n, p) matrix
+    print(f"nnz={X.nnz/1e6:.1f}M")      # is never materialized on host
 
-    mesh = jax.make_mesh((1, 8), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = compat.make_mesh((1, 8), ("data", "model"))
     cfg = DGLMNETConfig(lam1=2.0, lam2=0.1, tile_size=256,
                         coupling="jacobi", alb=True,
                         max_outer=args.steps, tol=1e-9)
@@ -60,9 +59,8 @@ def main():
     print(f"\ndone in {dt:.1f}s  ({res.n_iter} supersteps, "
           f"converged={res.converged})")
     print(f"nnz={(res.beta != 0).sum()} of {len(res.beta)}")
-    # undo the frequency reordering applied by to_dense_blocks
-    scores = ds.test.X.permute_cols(perm).matvec(
-        res.beta[:ds.test.X.shape[1]])
+    # beta comes back in the original feature order
+    scores = ds.test.X.matvec(res.beta)
     print(f"test auPRC = {synthetic.au_prc(ds.test.y, scores):.4f}")
 
 

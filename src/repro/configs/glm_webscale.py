@@ -15,6 +15,10 @@ class GLMShape:
     n_examples: int
     n_features: int
     tile_size: int
+    # brick occupancy of the CSR-of-bricks layout (DESIGN.md §2): 1.0 lowers
+    # the dense design path, < 1.0 the blocked-sparse BlockSparseDesign path
+    # with brick storage sized to this occupancy.
+    occupancy: float = 1.0
 
 
 GLM_SHAPES = {
@@ -22,4 +26,9 @@ GLM_SHAPES = {
                         tile_size=512),
     "glm_tall": GLMShape("glm_tall", n_examples=1 << 22, n_features=1 << 17,
                          tile_size=512),
+    # webspam/clickstream-regime sparsity: 5% of bricks carry nonzeros —
+    # per-chip design bytes drop ~20x vs glm_web's dense 8.6 GiB
+    "glm_sparse": GLMShape("glm_sparse", n_examples=1 << 19,
+                           n_features=1 << 20, tile_size=512,
+                           occupancy=0.05),
 }

@@ -1,11 +1,18 @@
 """Block coordinate-descent sweeps over a local feature block.
 
 This is the compute core of d-GLMNET's Algorithm 2, re-blocked for TPU as
-described in DESIGN.md §2: features are processed in tiles of ``tile_size``;
-per tile, the gradient vector ``g`` and the Gram block ``G`` are produced by
-MXU matmuls (with a psum over the ``data`` mesh axis when examples are
-sharded), and the strictly sequential chain of exact coordinate updates runs
-in the ``cd_tile_solve`` kernel with everything VMEM-resident.
+described in DESIGN.md §2: features are processed in tiles of the design's
+``tile_size``; per tile, the gradient vector ``g`` and the Gram block ``G``
+are produced through the ``DesignMatrix`` operator interface (MXU matmuls for
+``DenseDesign``, the brick-gather ``ops.tile_gram`` kernel for
+``BlockSparseDesign`` — with a psum over the ``data`` mesh axis when examples
+are sharded), and the strictly sequential chain of exact coordinate updates
+runs in the ``cd_tile_solve`` kernel with everything VMEM-resident.
+
+The sweeps never touch a raw (n, p) array: every access to the design matrix
+goes through ``design.tile_gram`` / ``design.tile_matvec`` /
+``design.all_tile_grams`` / ``design.matvec``, so the same sweep code drives
+dense and blocked-sparse layouts (DESIGN.md §2).
 
 Two tile-coupling modes:
 
@@ -39,14 +46,14 @@ def _psum(x, axis: Optional[str]):
     return jax.lax.psum(x, axis) if axis is not None else x
 
 
-def sweep_gauss_seidel(X, s, w, beta, dbeta, xdb, *, mu, nu, lam1, lam2,
-                       tile_size: int, start_tile=0, num_tiles=None,
+def sweep_gauss_seidel(design, s, w, beta, dbeta, xdb, *, mu, nu, lam1, lam2,
+                       start_tile=0, num_tiles=None,
                        max_num_tiles: Optional[int] = None,
                        axis_data: Optional[str] = None,
                        backend: Optional[str] = None):
     """Cyclic tile sweep; returns (dbeta, xdb, tiles_done).
 
-    X: (n_loc, p_loc) dense local block, p_loc % tile_size == 0.
+    design: local DesignMatrix block, shape (n_loc, p_loc).
     s, w: (n_loc,) link stats at the outer iterate (FIXED during the sweep).
     beta, dbeta: (p_loc,); xdb: (n_loc,) = X @ dbeta (local block only).
     num_tiles: how many tiles this node is budgeted to process this superstep
@@ -55,9 +62,8 @@ def sweep_gauss_seidel(X, s, w, beta, dbeta, xdb, *, mu, nu, lam1, lam2,
       (masked work beyond the local budget) — required because collectives
       inside the loop must be executed in lockstep.
     """
-    n_loc, p_loc = X.shape
-    T = tile_size
-    n_tiles_total = p_loc // T
+    T = design.tile_size
+    n_tiles_total = design.n_tiles
     if num_tiles is None:
         num_tiles = n_tiles_total
     num_tiles = jnp.asarray(num_tiles, jnp.int32)
@@ -68,17 +74,16 @@ def sweep_gauss_seidel(X, s, w, beta, dbeta, xdb, *, mu, nu, lam1, lam2,
         active = t < num_tiles
         tid = jax.lax.rem(jnp.asarray(start_tile, jnp.int32) + t, n_tiles_total)
         col0 = tid * T
-        Xt = jax.lax.dynamic_slice(X, (0, col0), (n_loc, T))
-        Xw = Xt * w[:, None]
-        G = _psum(Xw.T @ Xt, axis_data)                    # (T, T)
-        g = _psum(Xt.T @ (s - mu * (w * xdb_c)), axis_data)
+        r = s - mu * (w * xdb_c)
+        G, g = design.tile_gram(tid, w, r, backend=backend)
+        G, g = _psum((G, g), axis_data)
         h = jnp.diagonal(G)
         bt = jax.lax.dynamic_slice(beta, (col0,), (T,))
         dt = jax.lax.dynamic_slice(dbeta_c, (col0,), (T,))
         dt_new = ops.cd_tile_solve(G, g, h, bt, dt, mu, nu, lam1, lam2,
                                    backend=backend)
         dt_new = jnp.where(active, dt_new, dt)
-        xdb_c = xdb_c + Xt @ (dt_new - dt)
+        xdb_c = xdb_c + design.tile_matvec(tid, dt_new - dt)
         dbeta_c = jax.lax.dynamic_update_slice(dbeta_c, dt_new, (col0,))
         return dbeta_c, xdb_c
 
@@ -86,8 +91,8 @@ def sweep_gauss_seidel(X, s, w, beta, dbeta, xdb, *, mu, nu, lam1, lam2,
     return dbeta, xdb, jnp.minimum(num_tiles, static_bound)
 
 
-def sweep_jacobi(X, s, w, beta, dbeta, xdb, *, mu, nu, lam1, lam2,
-                 tile_size: int, start_tile=0, num_tiles=None,
+def sweep_jacobi(design, s, w, beta, dbeta, xdb, *, mu, nu, lam1, lam2,
+                 start_tile=0, num_tiles=None,
                  max_num_tiles: Optional[int] = None,
                  axis_data: Optional[str] = None,
                  backend: Optional[str] = None):
@@ -97,17 +102,15 @@ def sweep_jacobi(X, s, w, beta, dbeta, xdb, *, mu, nu, lam1, lam2,
     ``xdb`` must be zero on entry (start of an outer iteration) — asserted by
     the driver.  ALB budgeting masks whole tiles.
     """
-    n_loc, p_loc = X.shape
-    T = tile_size
-    n_tiles_total = p_loc // T
+    T = design.tile_size
+    n_loc, p_loc = design.shape
+    n_tiles_total = design.n_tiles
     if num_tiles is None:
         num_tiles = n_tiles_total
     num_tiles = jnp.asarray(num_tiles, jnp.int32)
 
-    Xr = X.reshape(n_loc, n_tiles_total, T)
     # Fused Gram blocks + gradient: ONE collective for the entire sweep.
-    G_all = jnp.einsum("nti,ntj->tij", Xr * w[:, None, None], Xr)
-    g_all = (X.T @ s).reshape(n_tiles_total, T)
+    G_all, g_all = design.all_tile_grams(w, s, backend=backend)
     G_all, g_all = _psum((G_all, g_all), axis_data)
     h_all = jnp.diagonal(G_all, axis1=-2, axis2=-1)
 
@@ -128,23 +131,8 @@ def sweep_jacobi(X, s, w, beta, dbeta, xdb, *, mu, nu, lam1, lam2,
     d_new = jnp.where(active[:, None], d_new, 0.0)
 
     dbeta_out = d_new.reshape(p_loc)
-    xdb_out = X @ dbeta_out
+    xdb_out = design.matvec(dbeta_out)
     return dbeta_out, xdb_out, jnp.minimum(num_tiles, n_tiles_total)
 
 
 SWEEPS = {"gauss-seidel": sweep_gauss_seidel, "jacobi": sweep_jacobi}
-
-
-def pad_features(X, beta=None, *, tile_size: int):
-    """Pad feature dim to a multiple of tile_size with zero columns.
-
-    Zero columns have h=0 and num=ν·β=0, so the solve leaves them at exactly
-    0 forever — padding is inert by construction (tested).
-    """
-    p = X.shape[1]
-    pad = (-p) % tile_size
-    if pad:
-        X = jnp.pad(X, ((0, 0), (0, pad)))
-        if beta is not None:
-            beta = jnp.pad(beta, (0, pad))
-    return (X, beta, p + pad) if beta is not None else (X, p + pad)

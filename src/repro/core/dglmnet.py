@@ -31,7 +31,10 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import cd as cd_lib
 from repro.core import linesearch
+from repro.data import design as design_lib
+from repro.data.design import BlockSparseDesign, DesignMatrix, SparseCOO
 from repro.kernels import ops
+from repro.sharding import compat
 from repro.sharding.compress import psum_compressed
 
 
@@ -90,7 +93,10 @@ def make_superstep(config: DGLMNETConfig, *, axis_data=None, axis_model=None,
                    n_tiles_local: int, max_budget: Optional[int] = None):
     """Build the jittable superstep closure.
 
-    Shapes (per device): X (n_loc, p_loc), y/mask (n_loc,), budget (1,) int32.
+    ``X`` may be a raw (n_loc, p_loc) dense array (wrapped into a
+    ``DenseDesign`` on the fly) or any ``DesignMatrix`` pytree — e.g. the
+    sharded ``BlockSparseDesign`` whose leaves the partitioner has already
+    localized.  y/mask are (n_loc,), budget (1,) int32 per feature shard.
     """
     sweep = cd_lib.SWEEPS[config.coupling]
     backend = config.kernel_backend
@@ -98,8 +104,8 @@ def make_superstep(config: DGLMNETConfig, *, axis_data=None, axis_model=None,
     static_bound = int(max_budget if max_budget is not None else n_tiles_local)
 
     def superstep(X, y, mask, budget, state: FitState):
+        design = design_lib.as_local_design(X, config.tile_size)
         beta, xb, mu, cursor, step = state
-        n_loc, p_loc = X.shape
 
         # (1) link statistics at the current iterate
         loss_i, s, w = ops.glm_stats(y, xb, fam, mask=mask, backend=backend)
@@ -113,9 +119,9 @@ def make_superstep(config: DGLMNETConfig, *, axis_data=None, axis_model=None,
         dbeta0 = jnp.zeros_like(beta)
         xdb0 = jnp.zeros_like(xb)
         dbeta, xdb_local, tiles_done = sweep(
-            X, s, w, beta, dbeta0, xdb0,
+            design, s, w, beta, dbeta0, xdb0,
             mu=mu, nu=config.nu, lam1=config.lam1, lam2=config.lam2,
-            tile_size=config.tile_size, start_tile=cursor[0],
+            start_tile=cursor[0],
             num_tiles=budget[0], max_num_tiles=static_bound,
             axis_data=axis_data, backend=backend)
 
@@ -133,7 +139,7 @@ def make_superstep(config: DGLMNETConfig, *, axis_data=None, axis_model=None,
             f_current=f_cur, grad_dot_dir=grad_dot_dir, quad_form=quad_form,
             sigma=config.sigma, b=config.backtrack_b, gamma=config.gamma,
             delta=config.ls_delta, grid_size=config.ls_grid_size,
-            max_backtracks=config.max_backtracks,
+            max_backtracks=config.max_backtracks, mask=mask,
             axis_data=axis_data, axis_model=axis_model, backend=backend)
 
         # (5) apply the step; adapt μ (Algorithm 1 lines 8–12)
@@ -164,19 +170,32 @@ def make_superstep(config: DGLMNETConfig, *, axis_data=None, axis_model=None,
 # single-device convenience driver
 # ---------------------------------------------------------------------------
 
-def fit(X, y, config: DGLMNETConfig, *, beta0=None, verbose=False) -> FitResult:
-    """Fit on one device. X: (n, p) dense array-like."""
-    X = jnp.asarray(X, jnp.float32)
-    y = jnp.asarray(y, jnp.float32)
-    n, p = X.shape
-    X, p_pad = cd_lib.pad_features(X, tile_size=config.tile_size)
-    beta = jnp.zeros((p_pad,), jnp.float32)
-    if beta0 is not None:
-        beta = beta.at[:p].set(jnp.asarray(beta0, jnp.float32))
-    mask = jnp.ones((n,), jnp.float32)
-    n_tiles = p_pad // config.tile_size
+def fit(X, y, config: DGLMNETConfig, *, beta0=None, verbose=False,
+        design_info=None) -> FitResult:
+    """Fit on one device.
 
-    state = FitState(beta=beta, xb=X @ beta, mu=jnp.float32(config.mu_init),
+    X: (n, p) dense array-like, a ``SparseCOO`` (trained through the
+    blocked-sparse brick layout without densifying the full matrix), or a
+    pre-built ``DesignMatrix`` (a ``BlockSparseDesign`` requires the
+    builder's ``DesignInfo`` as ``design_info`` so β can be mapped back to
+    the original feature order).
+    """
+    design, info = design_lib.as_design(X, config.tile_size,
+                                        info=design_info)
+    y = np.asarray(y, np.float32)
+    n = y.shape[0]
+    n_rows, p_pad = design.shape
+    p = info.shape[1]
+
+    beta = jnp.asarray(info.pack_beta(np.asarray(beta0, np.float32), p_pad)
+                       if beta0 is not None
+                       else np.zeros((p_pad,), np.float32))
+    yj = jnp.asarray(np.pad(y, (0, n_rows - n), constant_values=1.0))
+    mask = jnp.asarray(np.pad(np.ones((n,), np.float32), (0, n_rows - n)))
+    n_tiles = design.n_tiles
+
+    state = FitState(beta=beta, xb=design.matvec(beta),
+                     mu=jnp.float32(config.mu_init),
                      cursor=jnp.zeros((1,), jnp.int32),
                      step=jnp.int32(0))
     budget = jnp.full((1,), n_tiles, jnp.int32)
@@ -185,7 +204,7 @@ def fit(X, y, config: DGLMNETConfig, *, beta0=None, verbose=False) -> FitResult:
     history = {k: [] for k in ("f", "alpha", "mu", "nnz", "accepted_unit")}
     f_prev, converged, it = np.inf, False, 0
     for it in range(1, config.max_outer + 1):
-        state, m = superstep(X, y, mask, budget, state)
+        state, m = superstep(design, yj, mask, budget, state)
         f = float(m["f"])
         for k in history:
             history[k].append(float(m[k]))
@@ -196,7 +215,8 @@ def fit(X, y, config: DGLMNETConfig, *, beta0=None, verbose=False) -> FitResult:
             converged = True
             break
         f_prev = f
-    return FitResult(np.asarray(state.beta)[:p], history, it, converged)
+    beta_out = info.unpack_beta(np.asarray(state.beta))[:p]
+    return FitResult(beta_out, history, it, converged)
 
 
 # ---------------------------------------------------------------------------
@@ -207,10 +227,20 @@ def fit_sharded(X, y, config: DGLMNETConfig, mesh, *,
                 axis_data: Optional[str] = "data",
                 axis_model: str = "model",
                 speeds=None, seed: int = 0, verbose=False,
-                ckpt_manager=None, ckpt_every: int = 10) -> FitResult:
-    """Fit with X sharded (rows over ``axis_data``, features over
-    ``axis_model``).  ``speeds``: optional per-feature-shard relative node
-    speeds for ALB straggler simulation (None = homogeneous).
+                ckpt_manager=None, ckpt_every: int = 10,
+                row_block: int = 256, reorder: bool = True,
+                design_info=None) -> FitResult:
+    """Fit with the design sharded (rows over ``axis_data``, features over
+    ``axis_model``).
+
+    X: dense (n, p) array-like — sharded as a dense 2-D array — or a
+    ``SparseCOO`` / leading-axes ``BlockSparseDesign``, in which case the
+    CSR-of-bricks structure itself is sharded over the (data × model) mesh
+    and the dense matrix is never materialized on host (DESIGN.md §2).
+    ``row_block``/``reorder`` only apply to the sparse path.
+
+    ``speeds``: optional per-feature-shard relative node speeds for ALB
+    straggler simulation (None = homogeneous).
     ``ckpt_manager``: optional CheckpointManager — superstep-boundary
     checkpoints of (β, Xβ, μ, cursors, step); on start, the latest
     checkpoint is restored (elastically, onto THIS mesh) and the outer loop
@@ -218,34 +248,64 @@ def fit_sharded(X, y, config: DGLMNETConfig, mesh, *,
     """
     from repro.core import alb as alb_lib
 
-    X = np.asarray(X, np.float32)
     y = np.asarray(y, np.float32)
-    n, p = X.shape
+    n = y.shape[0]
     D = mesh.shape[axis_data] if axis_data else 1
     M = mesh.shape[axis_model]
     T = config.tile_size
 
-    # pad rows to D, features to M*T multiples
-    n_pad = (-n) % D
-    p_pad = (-p) % (M * T)
-    Xp = np.pad(X, ((0, n_pad), (0, p_pad)))
-    yp = np.pad(y, (0, n_pad), constant_values=1.0)
-    maskp = np.pad(np.ones((n,), np.float32), (0, n_pad))
-    n_tot, p_tot = Xp.shape
-    p_loc = p_tot // M
-    n_tiles_local = p_loc // T
-
-    x_spec = P(axis_data, axis_model)
     row_spec = P(axis_data)
     feat_spec = P(axis_model)
 
-    Xs = jax.device_put(Xp, NamedSharding(mesh, x_spec))
+    if isinstance(X, (SparseCOO, BlockSparseDesign)):
+        if isinstance(X, SparseCOO):
+            design_g, info = design_lib.build_block_sparse_sharded(
+                X, D=D, M=M, tile_size=T, row_block=row_block,
+                reorder=reorder)
+        else:
+            if X.leading != 2 or X.tile_size != T:
+                raise ValueError("pre-built BlockSparseDesign must carry "
+                                 "(D, M) leading axes and match tile_size")
+            if design_info is None:
+                raise ValueError(
+                    "pre-built BlockSparseDesign requires the DesignInfo "
+                    "returned by build_block_sparse_sharded (pass "
+                    "design_info=...); the brick layout reorders columns "
+                    "and beta must be unpacked with it")
+            design_g, info = X, design_info
+        n_loc, p_loc = design_g.shape              # per-shard (static)
+        n_tot, p_tot = D * n_loc, M * p_loc
+        x_specs = design_g.partition_specs(axis_data, axis_model)
+        Xs = jax.tree.map(
+            lambda a, s: jax.device_put(a, NamedSharding(mesh, s)),
+            design_g, x_specs)
+        # brick column packing + row padding are functions of (D, M, T, rb):
+        # checkpoints record this layout so a resume onto a different mesh
+        # fails loudly instead of continuing from a permuted iterate
+        design_layout = {"kind": "bricks", "D": D, "M": M, "tile": T,
+                         "row_block": design_g.row_block,
+                         "reorder": bool(reorder)}
+    else:
+        X = np.asarray(X, np.float32)
+        _, p = X.shape
+        info = design_lib.DesignInfo(shape=(n, p))
+        # pad rows to D, features to M*T multiples
+        Xp = np.pad(X, ((0, (-n) % D), (0, (-p) % (M * T))))
+        n_tot, p_tot = Xp.shape
+        p_loc = p_tot // M
+        x_specs = P(axis_data, axis_model)
+        Xs = jax.device_put(Xp, NamedSharding(mesh, x_specs))
+        design_layout = None       # dense layout is mesh-invariant (elastic)
+    n_tiles_local = p_loc // T
+
+    yp = np.pad(y, (0, n_tot - n), constant_values=1.0)
+    maskp = np.pad(np.ones((n,), np.float32), (0, n_tot - n))
     ys = jax.device_put(yp, NamedSharding(mesh, row_spec))
     masks = jax.device_put(maskp, NamedSharding(mesh, row_spec))
 
     # ALB budgets: fraction-κ completion rule (paper Section 7)
+    rng = np.random.default_rng(seed)
     if config.alb:
-        rng = np.random.default_rng(seed)
         base_speeds = np.asarray(speeds, np.float32) if speeds is not None \
             else np.ones((M,), np.float32)
         max_budget = int(alb_lib.max_budget(n_tiles_local))
@@ -261,9 +321,9 @@ def fit_sharded(X, y, config: DGLMNETConfig, mesh, *,
     state_specs = FitState(beta=feat_spec, xb=row_spec, mu=P(),
                            cursor=feat_spec, step=P())
     metric_spec = P()
-    mapped = jax.jit(jax.shard_map(
+    mapped = jax.jit(compat.shard_map(
         superstep_fn, mesh=mesh,
-        in_specs=(x_spec, row_spec, row_spec, feat_spec, state_specs),
+        in_specs=(x_specs, row_spec, row_spec, feat_spec, state_specs),
         out_specs=(state_specs, {k: metric_spec for k in
                                  ("f", "f_before", "loss", "alpha", "mu",
                                   "nnz", "accepted_unit", "D")}),
@@ -290,12 +350,17 @@ def fit_sharded(X, y, config: DGLMNETConfig, mesh, *,
         saved, md = ckpt_manager.restore(
             {"beta": state.beta, "xb": state.xb, "mu": state.mu},
         )
+        if md.get("design_layout") != design_layout:
+            raise ValueError(
+                f"checkpoint design layout {md.get('design_layout')} does "
+                f"not match this fit's {design_layout}; the brick packing "
+                "depends on the mesh/tiling, so blocked-sparse checkpoints "
+                "resume only onto the same (D, M, tile, row_block) layout")
         state = state._replace(beta=saved["beta"], xb=saved["xb"],
                                mu=saved["mu"],
                                step=jnp.int32(md["next_it"] - 1))
         f_prev = md.get("f_prev", np.inf)
         start_it = int(md["next_it"])
-    rng = np.random.default_rng(seed)
     for it in range(start_it, config.max_outer + 1):
         if config.alb:
             budgets = alb_lib.alb_budgets(
@@ -315,12 +380,13 @@ def fit_sharded(X, y, config: DGLMNETConfig, mesh, *,
         if ckpt_manager is not None and it % ckpt_every == 0:
             ckpt_manager.save(it, {"beta": state.beta, "xb": state.xb,
                                    "mu": state.mu},
-                              metadata={"next_it": it + 1, "f_prev": f})
+                              metadata={"next_it": it + 1, "f_prev": f,
+                                        "design_layout": design_layout})
         if np.isfinite(f_prev) and abs(f_prev - f) <= config.tol * max(1.0, abs(f)):
             converged = True
             break
         f_prev = f
     if ckpt_manager is not None:
         ckpt_manager.wait()
-    beta_full = np.asarray(state.beta)[:p]
+    beta_full = info.unpack_beta(np.asarray(state.beta))
     return FitResult(beta_full, history, it, converged)

@@ -50,13 +50,15 @@ def penalty_terms(beta, dbeta, alphas, lam1, lam2, axis_model):
 def search(y, xb, xdb, beta, dbeta, *, family, lam1, lam2, mu, nu,
            f_current, grad_dot_dir, quad_form,
            sigma=0.01, b=0.5, gamma=0.0, delta=1e-3,
-           grid_size=13, max_backtracks=20,
+           grid_size=13, max_backtracks=20, mask=None,
            axis_data: Optional[str] = None, axis_model: Optional[str] = None,
            backend: Optional[str] = None) -> LineSearchResult:
     """Run Algorithm 3.
 
     y, xb, xdb: (n_loc,) — labels, margins, margin delta (model-replicated).
     beta, dbeta: (p_loc,) local weight shards.
+    mask: (n_loc,) example mask (padding rows 0) — candidate losses must use
+      the same masking as f_current or the Armijo comparison is offset.
     f_current: f(β) (global scalar, already reduced).
     grad_dot_dir: ∇L(β)ᵀΔβ (global scalar, already reduced).
     quad_form: Δβᵀ(μ(H̃+νI))Δβ (global scalar) — only used when γ>0.
@@ -65,7 +67,7 @@ def search(y, xb, xdb, beta, dbeta, *, family, lam1, lam2, mu, nu,
     grid = jnp.logspace(jnp.log10(delta), 0.0, grid_size)
     alphas = jnp.concatenate([jnp.ones((1,)), grid])
 
-    losses = _psum(ops.alpha_search(y, xb, xdb, alphas, family,
+    losses = _psum(ops.alpha_search(y, xb, xdb, alphas, family, mask=mask,
                                     backend=backend), axis_data)
     pens = penalty_terms(beta, dbeta, alphas, lam1, lam2, axis_model)
     f_cand = losses + pens
@@ -79,7 +81,7 @@ def search(y, xb, xdb, beta, dbeta, *, family, lam1, lam2, mu, nu,
 
     a_init = alphas[jnp.argmin(f_cand)]
     bt = a_init * jnp.power(b, jnp.arange(max_backtracks, dtype=jnp.float32))
-    losses_bt = _psum(ops.alpha_search(y, xb, xdb, bt, family,
+    losses_bt = _psum(ops.alpha_search(y, xb, xdb, bt, family, mask=mask,
                                        backend=backend), axis_data)
     f_bt = losses_bt + penalty_terms(beta, dbeta, bt, lam1, lam2, axis_model)
     ok_bt = f_bt <= f_current + bt * sigma * D

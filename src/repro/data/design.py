@@ -1,0 +1,491 @@
+"""DesignMatrix operator abstraction (DESIGN.md §2).
+
+The solve stack — ``cd.py``'s tile sweeps and ``dglmnet.py``'s drivers —
+consumes the design matrix exclusively through the operator interface defined
+here, never through raw ``(n, p)`` arrays.  Two concrete layouts:
+
+  * ``DenseDesign`` — a feature-padded dense block.  This is the historical
+    behavior; every operator method lowers to the same MXU matmuls the sweeps
+    used to emit inline.
+  * ``BlockSparseDesign`` — CSR-of-bricks blocked densification.  The matrix
+    is cut into (row-block × feature-tile) bricks; only non-empty bricks are
+    stored, as a flat ``(B, row_block, tile_size)`` array sorted tile-major
+    with a CSR ``tile_ptr`` over feature tiles.  Per-tile Gram blocks and
+    gradients are produced by the brick-gather ``ops.tile_gram`` kernel
+    (Pallas on TPU), which skips empty bricks; memory scales with the number
+    of non-empty bricks, not ``n·p``.
+
+Both classes are registered jax pytrees, so a design can be passed straight
+through ``jit`` and ``shard_map``: array leaves get sharded/localized by the
+partitioner while the tiling geometry rides along as static aux data.  For
+the sharded brick layout the leaves carry two leading mesh axes ``(D, M)``
+(data × model); ``localize()`` strips them inside the mapped function.
+
+Host-side builders (``build_block_sparse``, ``build_block_sparse_sharded``)
+pack a ``SparseCOO`` into bricks **without ever materializing the dense
+(n, p) matrix**: features are frequency-sorted so hot features share tiles
+(maximizing brick occupancy, DESIGN.md §2), then whole tiles are dealt
+round-robin across feature shards so per-shard nnz stays balanced.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.sparse import SparseCOO
+from repro.kernels import ops
+
+
+class DesignMatrix:
+    """Operator interface the CD sweeps run against.
+
+    All methods operate on the LOCAL shard (inside shard_map the partitioner
+    has already placed the leaves); partial row reductions are psum'd by the
+    caller.  ``shape`` is the padded local shape ``(n_rows, n_tiles * T)``.
+    """
+
+    tile_size: int
+
+    @property
+    def shape(self):
+        raise NotImplementedError
+
+    @property
+    def n_tiles(self) -> int:
+        raise NotImplementedError
+
+    def localize(self) -> "DesignMatrix":
+        """Strip leading mesh axes from the leaves (no-op when local)."""
+        return self
+
+    def tile_gram(self, tid, w, r, *, backend=None):
+        """(G, g) for feature tile ``tid``: G = X_tᵀ diag(w) X_t  (T, T),
+        g = X_tᵀ r  (T,).  Local partials — caller psums over the data axis."""
+        raise NotImplementedError
+
+    def tile_matvec(self, tid, v_t):
+        """X_t @ v_t → (n_rows,) for a single feature tile."""
+        raise NotImplementedError
+
+    def all_tile_grams(self, w, r, *, backend=None):
+        """Stacked (G_all (n_tiles, T, T), g_all (n_tiles, T)) — the fused
+        Jacobi form: every tile's Gram/gradient from the same iterate."""
+        raise NotImplementedError
+
+    def matvec(self, v):
+        """X @ v → (n_rows,) over the whole local feature block."""
+        raise NotImplementedError
+
+    def to_dense(self):
+        """Materialize the local block (tests/debugging only)."""
+        raise NotImplementedError
+
+
+# ---------------------------------------------------------------------------
+# dense
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class DenseDesign(DesignMatrix):
+    """Feature-padded dense design: ``data`` is (n_rows, n_tiles * T)."""
+
+    data: jnp.ndarray
+    tile_size: int
+
+    def tree_flatten(self):
+        return (self.data,), (self.tile_size,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(leaves[0], aux[0])
+
+    @property
+    def shape(self):
+        return self.data.shape
+
+    @property
+    def n_tiles(self) -> int:
+        return self.data.shape[1] // self.tile_size
+
+    def partition_specs(self, axis_data, axis_model):
+        from jax.sharding import PartitionSpec as P
+        return DenseDesign(P(axis_data, axis_model), self.tile_size)
+
+    def tile_gram(self, tid, w, r, *, backend=None):
+        T = self.tile_size
+        n = self.data.shape[0]
+        Xt = jax.lax.dynamic_slice(self.data, (0, tid * T), (n, T))
+        G = (Xt * w[:, None]).T @ Xt
+        g = Xt.T @ r
+        return G, g
+
+    def tile_matvec(self, tid, v_t):
+        T = self.tile_size
+        n = self.data.shape[0]
+        Xt = jax.lax.dynamic_slice(self.data, (0, tid * T), (n, T))
+        return Xt @ v_t
+
+    def all_tile_grams(self, w, r, *, backend=None):
+        n = self.data.shape[0]
+        Xr = self.data.reshape(n, self.n_tiles, self.tile_size)
+        G_all = jnp.einsum("nti,ntj->tij", Xr * w[:, None, None], Xr)
+        g_all = (self.data.T @ r).reshape(self.n_tiles, self.tile_size)
+        return G_all, g_all
+
+    def matvec(self, v):
+        return self.data @ v
+
+    def to_dense(self):
+        return self.data
+
+
+# ---------------------------------------------------------------------------
+# blocked-sparse (CSR-of-bricks)
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class BlockSparseDesign(DesignMatrix):
+    """CSR-of-bricks blocked densification of a sparse design matrix.
+
+    Leaves (local layout; with ``leading == 2`` each carries (D, M) mesh axes
+    in front):
+
+      bricks     (B, row_block, tile_size) f32 — non-empty bricks, tile-major
+      brick_row  (B,) i32 — row-block index of each brick
+      brick_tile (B,) i32 — feature-tile index of each brick
+      tile_ptr   (n_tiles + 1,) i32 — CSR offsets: bricks of tile t live at
+                 [tile_ptr[t], tile_ptr[t+1])
+
+    Static geometry: ``n_rows`` (local, multiple of ``row_block``),
+    ``n_tiles``, and ``max_bricks_per_tile`` — the static loop/grid bound all
+    SPMD peers share (brick counts beyond a tile's actual population are
+    predicated off inside ``ops.tile_gram``).
+    """
+
+    bricks: jnp.ndarray
+    brick_row: jnp.ndarray
+    brick_tile: jnp.ndarray
+    tile_ptr: jnp.ndarray
+    tile_size: int
+    row_block: int
+    n_rows: int
+    _n_tiles: int
+    max_bricks_per_tile: int
+    leading: int = 0
+
+    def tree_flatten(self):
+        leaves = (self.bricks, self.brick_row, self.brick_tile, self.tile_ptr)
+        aux = (self.tile_size, self.row_block, self.n_rows, self._n_tiles,
+               self.max_bricks_per_tile, self.leading)
+        return leaves, aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(*leaves, *aux)
+
+    @property
+    def shape(self):
+        return (self.n_rows, self._n_tiles * self.tile_size)
+
+    @property
+    def n_tiles(self) -> int:
+        return self._n_tiles
+
+    @property
+    def n_row_blocks(self) -> int:
+        return self.n_rows // self.row_block
+
+    def localize(self) -> "BlockSparseDesign":
+        if not self.leading:
+            return self
+        return BlockSparseDesign(
+            self.bricks[0, 0], self.brick_row[0, 0], self.brick_tile[0, 0],
+            self.tile_ptr[0, 0], self.tile_size, self.row_block, self.n_rows,
+            self._n_tiles, self.max_bricks_per_tile, leading=0)
+
+    def partition_specs(self, axis_data, axis_model):
+        from jax.sharding import PartitionSpec as P
+        assert self.leading == 2, "partition_specs needs the (D, M) layout"
+        lead = (axis_data, axis_model)
+        return BlockSparseDesign(
+            P(*lead, None, None, None), P(*lead, None), P(*lead, None),
+            P(*lead, None), self.tile_size, self.row_block, self.n_rows,
+            self._n_tiles, self.max_bricks_per_tile, leading=2)
+
+    # -- per-tile brick gather ------------------------------------------------
+
+    def _gather_tile(self, tid):
+        """(bricks (K, rb, T), rows (K,), n_valid, valid mask) for tile tid,
+        K = max_bricks_per_tile.  Entries beyond n_valid are clamped gathers
+        of in-range bricks; consumers mask them via n_valid/valid."""
+        K = self.max_bricks_per_tile
+        start = self.tile_ptr[tid]
+        stop = self.tile_ptr[tid + 1]
+        idx = start + jnp.arange(K, dtype=jnp.int32)
+        valid = idx < stop
+        safe = jnp.minimum(idx, self.bricks.shape[0] - 1)
+        return self.bricks[safe], self.brick_row[safe], stop - start, valid
+
+    def tile_gram(self, tid, w, r, *, backend=None):
+        tb, rows, n_valid, _ = self._gather_tile(tid)
+        w2 = w.reshape(self.n_row_blocks, self.row_block)
+        r2 = r.reshape(self.n_row_blocks, self.row_block)
+        return ops.tile_gram(tb, rows, n_valid, w2, r2, backend=backend)
+
+    def tile_matvec(self, tid, v_t):
+        tb, rows, _, valid = self._gather_tile(tid)
+        contrib = jnp.einsum("kit,t->ki", tb, v_t) * valid[:, None]
+        out2 = jax.ops.segment_sum(contrib, rows,
+                                   num_segments=self.n_row_blocks)
+        return out2.reshape(-1)
+
+    def all_tile_grams(self, w, r, *, backend=None):
+        w2 = w.reshape(self.n_row_blocks, self.row_block)
+        r2 = r.reshape(self.n_row_blocks, self.row_block)
+
+        def one(tid):
+            tb, rows, n_valid, _ = self._gather_tile(tid)
+            return ops.tile_gram(tb, rows, n_valid, w2, r2, backend=backend)
+
+        return jax.lax.map(one, jnp.arange(self._n_tiles, dtype=jnp.int32))
+
+    def matvec(self, v):
+        vt = v.reshape(self._n_tiles, self.tile_size)
+        contrib = jnp.einsum("kit,kt->ki", self.bricks, vt[self.brick_tile])
+        out2 = jax.ops.segment_sum(contrib, self.brick_row,
+                                   num_segments=self.n_row_blocks)
+        return out2.reshape(-1)
+
+    def to_dense(self):
+        rb, T = self.row_block, self.tile_size
+        out = jnp.zeros((self.n_row_blocks, rb, self._n_tiles, T),
+                        jnp.float32)
+        out = out.at[self.brick_row, :, self.brick_tile, :].add(self.bricks)
+        return out.reshape(self.n_rows, self._n_tiles * T)
+
+
+# ---------------------------------------------------------------------------
+# host-side builders
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class DesignInfo:
+    """Build metadata the drivers need to map results back.
+
+    col_of_feature[j] = packed-layout column of original feature j (None when
+    the layout is the identity).  ``occupancy`` is the non-empty-brick
+    fraction — the efficiency figure deciding bricks-vs-dense (DESIGN.md §2).
+    """
+    shape: tuple
+    col_of_feature: Optional[np.ndarray] = None
+    occupancy: float = 1.0
+    n_bricks: int = 0
+
+    def unpack_beta(self, beta_packed: np.ndarray) -> np.ndarray:
+        p = self.shape[1]
+        if self.col_of_feature is None:
+            return np.asarray(beta_packed)[:p]
+        return np.asarray(beta_packed)[self.col_of_feature]
+
+    def pack_beta(self, beta: np.ndarray, p_padded: int) -> np.ndarray:
+        out = np.zeros((p_padded,), np.float32)
+        if self.col_of_feature is None:
+            out[:len(beta)] = beta
+        else:
+            out[self.col_of_feature] = beta
+        return out
+
+
+def _shard_bricks(rows, cols, vals, n_loc, p_loc, tile_size, row_block):
+    """Brick arrays for ONE shard's COO triplet (already in local coords)."""
+    n_rb = n_loc // row_block
+    n_tiles = p_loc // tile_size
+    rb_ids = rows // row_block
+    tile_ids = cols // tile_size
+    key = tile_ids.astype(np.int64) * n_rb + rb_ids
+    order = np.argsort(key, kind="stable")
+    key, rows, cols, vals = key[order], rows[order], cols[order], vals[order]
+    ukeys, inv = np.unique(key, return_inverse=True)
+    B = max(len(ukeys), 1)
+    bricks = np.zeros((B, row_block, tile_size), np.float32)
+    if len(ukeys):
+        bricks[inv, rows % row_block, cols % tile_size] = vals
+    brick_tile = (ukeys // n_rb).astype(np.int32)
+    brick_row = (ukeys % n_rb).astype(np.int32)
+    if not len(ukeys):
+        brick_tile = np.zeros((1,), np.int32)
+        brick_row = np.zeros((1,), np.int32)
+    tile_ptr = np.searchsorted(brick_tile, np.arange(n_tiles + 1)) \
+        .astype(np.int32)
+    if not len(ukeys):
+        tile_ptr[:] = 0
+    return bricks, brick_row, brick_tile, tile_ptr, len(ukeys)
+
+
+def _pack_layout(coo: SparseCOO, M: int, tile_size: int, reorder: bool):
+    """Global column layout: frequency-sort features into tiles, then deal
+    whole tiles round-robin over the M feature shards (load balance).
+
+    Returns (col_of_feature (p,), packed_cols for every nnz, p_loc)."""
+    p = coo.shape[1]
+    p_pad = p + ((-p) % (M * tile_size))
+    n_tiles_g = p_pad // tile_size
+    p_loc = p_pad // M
+    freq = coo.col_frequency_order() if reorder else np.arange(p)
+    # freq[c] = original feature at frequency-rank c
+    rank_of = np.empty(p, np.int64)
+    rank_of[freq] = np.arange(p)
+    ranks = np.arange(p_pad, dtype=np.int64)
+    tile_g = ranks // tile_size
+    # tile g -> shard g % M, local tile g // M  (round-robin deal)
+    pos = (tile_g % M) * p_loc + (tile_g // M) * tile_size + ranks % tile_size
+    col_of_feature = pos[rank_of]
+    return col_of_feature.astype(np.int64), p_loc
+
+
+def build_block_sparse_sharded(coo: SparseCOO, *, D: int, M: int,
+                               tile_size: int, row_block: int = 256,
+                               reorder: bool = True):
+    """Pack a host SparseCOO into the (D, M)-sharded brick layout.
+
+    Never materializes the dense (n, p) matrix: per-shard COO triplets are
+    bricked independently; shards are padded to a common brick count B and a
+    common per-tile bound K (the static SPMD bounds) and stacked into
+    (D, M, ...) host arrays ready for ``jax.device_put`` with a
+    ``P(axis_data, axis_model, None, ...)`` sharding.
+
+    Returns (BlockSparseDesign with leading=2, DesignInfo).
+    """
+    coo = coo.dedupe()
+    n, p = coo.shape
+    col_of_feature, p_loc = _pack_layout(coo, M, tile_size, reorder)
+    n_loc = -(-n // (D * row_block)) * row_block
+    n_tiles_local = p_loc // tile_size
+
+    packed_cols = col_of_feature[coo.cols]
+    shard_m = packed_cols // p_loc
+    shard_d = coo.rows // n_loc
+
+    parts = []
+    for d in range(D):
+        for m in range(M):
+            sel = (shard_d == d) & (shard_m == m)
+            parts.append(_shard_bricks(
+                coo.rows[sel] - d * n_loc, packed_cols[sel] - m * p_loc,
+                coo.vals[sel].astype(np.float32),
+                n_loc, p_loc, tile_size, row_block))
+
+    B = max(pt[0].shape[0] for pt in parts)
+    K = max(int(np.diff(pt[3]).max(initial=0)) for pt in parts)
+    K = max(K, 1)
+    total_bricks = sum(pt[4] for pt in parts)
+
+    def pad_stack(i, fill=0):
+        arrs = []
+        for pt in parts:
+            a = pt[i]
+            pad = B - a.shape[0]
+            if pad:
+                a = np.concatenate(
+                    [a, np.full((pad,) + a.shape[1:], fill, a.dtype)])
+            arrs.append(a)
+        return np.stack(arrs).reshape((D, M) + arrs[0].shape)
+
+    bricks = pad_stack(0)
+    brick_row = pad_stack(1)
+    brick_tile = pad_stack(2)
+    tile_ptr = np.stack([pt[3] for pt in parts]).reshape(D, M, -1)
+
+    design = BlockSparseDesign(
+        jnp.asarray(bricks), jnp.asarray(brick_row),
+        jnp.asarray(brick_tile), jnp.asarray(tile_ptr),
+        tile_size, row_block, n_loc, n_tiles_local, K, leading=2)
+    n_rb_total = (n_loc // row_block) * D
+    occ = total_bricks / max(n_rb_total * n_tiles_local * M, 1)
+    info = DesignInfo(shape=(n, p), col_of_feature=col_of_feature,
+                      occupancy=occ, n_bricks=total_bricks)
+    return design, info
+
+
+def build_block_sparse(coo: SparseCOO, tile_size: int, *,
+                       row_block: int = 256, reorder: bool = True):
+    """Single-shard brick packing: (BlockSparseDesign leading=0, DesignInfo)."""
+    design, info = build_block_sparse_sharded(
+        coo, D=1, M=1, tile_size=tile_size, row_block=row_block,
+        reorder=reorder)
+    return design.localize(), info
+
+
+def brick_occupancy(coo: SparseCOO, tile_size: int, *, row_block: int = 256,
+                    reorder: bool = True) -> float:
+    """Non-empty-brick fraction of the packed layout, from the COO keys
+    alone — no brick values are materialized (cheap stats/reporting)."""
+    coo = coo.dedupe()
+    col_of_feature, p_loc = _pack_layout(coo, 1, tile_size, reorder)
+    n_rb = -(-coo.shape[0] // row_block)
+    n_tiles = p_loc // tile_size
+    keys = (col_of_feature[coo.cols] // tile_size) * n_rb \
+        + coo.rows // row_block
+    return len(np.unique(keys)) / max(n_rb * n_tiles, 1)
+
+
+def dense_design(X, tile_size: int):
+    """(DenseDesign, DesignInfo) from an (n, p) array; pads features with
+    inert zero columns to a tile multiple.  Device-resident inputs stay on
+    device (jnp ops only — no host round-trip)."""
+    Xj = jnp.asarray(X, jnp.float32)
+    n, p = Xj.shape
+    pad = (-p) % tile_size
+    if pad:
+        Xj = jnp.pad(Xj, ((0, 0), (0, pad)))
+    return DenseDesign(Xj, tile_size), DesignInfo(shape=(n, p))
+
+
+def as_design(X, tile_size: int, *, row_block: int = 256,
+              reorder: bool = True, info: Optional[DesignInfo] = None):
+    """Coerce any supported input into (DesignMatrix, DesignInfo).
+
+    A pre-built ``BlockSparseDesign`` must come with the ``DesignInfo`` its
+    builder returned — the brick layout permutes columns (frequency packing
+    + tile dealing), so without it β could not be mapped back to the
+    original feature order.
+    """
+    if isinstance(X, BlockSparseDesign):
+        if X.leading != 0:
+            raise ValueError(
+                "mesh-sharded BlockSparseDesign (leading mesh axes) passed "
+                "to the single-device path; use fit_sharded, or build with "
+                "build_block_sparse for one device")
+        if info is None:
+            raise ValueError(
+                "pre-built BlockSparseDesign requires the DesignInfo "
+                "returned by its builder (pass design_info=...); the brick "
+                "layout reorders columns and beta must be unpacked with it")
+        return X, info
+    if isinstance(X, DesignMatrix):
+        if info is None:
+            raise ValueError(
+                "pre-built designs require the DesignInfo returned by their "
+                "builder (pass design_info=...) so beta can be mapped back "
+                "to the original feature count/order")
+        return X, info
+    if isinstance(X, SparseCOO):
+        return build_block_sparse(X, tile_size, row_block=row_block,
+                                  reorder=reorder)
+    return dense_design(X, tile_size)
+
+
+def as_local_design(X, tile_size: int) -> DesignMatrix:
+    """Inside jit/shard_map: wrap a raw local array, or localize a design."""
+    if isinstance(X, DesignMatrix):
+        return X.localize()
+    return DenseDesign(X, tile_size)

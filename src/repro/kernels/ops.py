@@ -21,6 +21,7 @@ from repro.kernels import ref
 from repro.kernels.alpha_search import alpha_search_pallas
 from repro.kernels.cd_tile_solve import cd_tile_solve_pallas
 from repro.kernels.glm_stats import glm_stats_pallas
+from repro.kernels.tile_gram import tile_gram_pallas
 
 _LANES = 128
 
@@ -64,6 +65,20 @@ def cd_tile_solve(G, g, h, beta_t, dbeta_t, mu, nu, lam1, lam2, *, backend=None)
                         jnp.asarray(lam2, jnp.float32)])
     return cd_tile_solve_pallas(G, g, h, beta_t, dbeta_t, params,
                                 interpret=_interpret())
+
+
+def tile_gram(bricks, rows, n_valid, w2, r2, *, backend=None):
+    """Brick-gather Gram/gradient for one feature tile (DESIGN.md §2).
+
+    bricks (K, rb, T), rows (K,) i32, n_valid () i32, w2/r2
+    (n_row_blocks, rb).  Returns (G (T, T), g (T,)); empty-brick slots are
+    skipped (predicated off in the Pallas kernel).
+    """
+    backend = backend or default_backend()
+    if backend == "ref":
+        return ref.tile_gram(bricks, rows, n_valid, w2, r2)
+    return tile_gram_pallas(bricks, rows, n_valid, w2, r2,
+                            interpret=_interpret())
 
 
 def glm_stats(y, xb, family, *, mask=None, backend=None, block_rows=256):

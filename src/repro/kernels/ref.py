@@ -57,6 +57,32 @@ def cd_tile_solve(G, g, h, beta_t, dbeta_t, mu, nu, lam1, lam2):
 
 
 # ---------------------------------------------------------------------------
+# tile_gram: brick-gather Gram/gradient for one feature tile of the
+# CSR-of-bricks layout (DESIGN.md §2).
+# ---------------------------------------------------------------------------
+
+def tile_gram(bricks, rows, n_valid, w2, r2):
+    """G = Σ_k b_kᵀ diag(w[rows[k]]) b_k,  g = Σ_k b_kᵀ r[rows[k]].
+
+    bricks: (K, rb, T) gathered bricks of ONE feature tile (K is the static
+            max_bricks_per_tile bound; entries at k >= n_valid are ignored).
+    rows:   (K,) i32 row-block index per brick (in-range even when invalid).
+    n_valid: () i32 — number of live bricks.
+    w2, r2: (n_row_blocks, rb) — w and the residual r, row-block-reshaped.
+
+    Returns (G (T, T), g (T,)).
+    """
+    K = bricks.shape[0]
+    mask = (jnp.arange(K) < n_valid).astype(bricks.dtype)
+    b = bricks * mask[:, None, None]
+    wk = w2[rows]                                  # (K, rb)
+    rk = r2[rows]
+    G = jnp.einsum("kit,kiu->tu", b * wk[:, :, None], b)
+    g = jnp.einsum("kit,ki->t", b, rk)
+    return G, g
+
+
+# ---------------------------------------------------------------------------
 # glm_stats: fused per-example link statistics.
 # ---------------------------------------------------------------------------
 

@@ -30,6 +30,7 @@ from repro.configs.base import cell_is_runnable, tp_pad_config  # noqa: E402
 from repro.configs.glm_webscale import GLM_SHAPES  # noqa: E402
 from repro.configs.registry import ARCHS, get_arch  # noqa: E402
 from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.sharding import compat  # noqa: E402
 from repro.models import lm  # noqa: E402
 from repro.optim import adamw  # noqa: E402
 from repro.roofline.hlo import analyze_hlo  # noqa: E402
@@ -108,7 +109,7 @@ def lower_cell(arch_name: str, shape_name: str, mesh, *, do_compile=True,
     rec["status"] = "ok"
     rec["memory"] = _mem_dict(compiled)
     try:
-        ca = compiled.cost_analysis()
+        ca = compat.xla_cost_analysis(compiled)
         rec["xla_cost_flops"] = float(ca.get("flops", -1.0))
     except Exception:
         rec["xla_cost_flops"] = None
@@ -127,16 +128,25 @@ def lower_cell(arch_name: str, shape_name: str, mesh, *, do_compile=True,
 
 def lower_glm_cell(shape_name: str, mesh, *, do_compile=True,
                    coupling="jacobi", compress=None):
-    """The paper's own workload on the production mesh."""
-    from repro.core import cd as cd_lib
+    """The paper's own workload on the production mesh.
+
+    Shapes with ``occupancy < 1`` lower the blocked-sparse path: the design
+    is an abstract ``BlockSparseDesign`` pytree whose brick leaves are sized
+    for the shape's brick occupancy, so the per-chip memory/roofline numbers
+    reflect the CSR-of-bricks layout instead of a dense (n, p) block.
+    """
     from repro.core.dglmnet import DGLMNETConfig, FitState, make_superstep
+    from repro.data.design import BlockSparseDesign
 
     gs = GLM_SHAPES[shape_name]
     D = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
     M = mesh.shape["model"]
+    occ = getattr(gs, "occupancy", 1.0)
     rec = {"arch": "dglmnet", "shape": shape_name,
            "mesh": "x".join(map(str, mesh.devices.shape)), "kind": "glm",
-           "coupling": coupling}
+           "coupling": coupling,
+           "design": "bricks" if occ < 1.0 else "dense",
+           "occupancy": occ}
 
     n, p, T = gs.n_examples, gs.n_features, gs.tile_size
     p_loc = p // M
@@ -148,15 +158,34 @@ def lower_glm_cell(shape_name: str, mesh, *, do_compile=True,
     superstep = make_superstep(cfg, axis_data=axis_data, axis_model="model",
                                n_tiles_local=n_tiles)
 
-    x_spec = P(("pod", "data") if "pod" in mesh.shape else "data", "model")
-    row_spec = P(("pod", "data") if "pod" in mesh.shape else "data")
+    row_axes = ("pod", "data") if "pod" in mesh.shape else "data"
+    row_spec = P(row_axes)
     feat_spec = P("model")
 
     def sds(shape_, dtype, spec):
         return jax.ShapeDtypeStruct(shape_, dtype,
                                     sharding=NamedSharding(mesh, spec))
 
-    X = sds((n, p), jnp.float32, x_spec)
+    if occ < 1.0:
+        rb = 256
+        n_loc = -(-n // (D * rb)) * rb
+        n = D * n_loc                       # row-padded total
+        n_rb = n_loc // rb
+        B = max(1, int(round(occ * n_rb * n_tiles)))
+        K = max(1, int(round(occ * n_rb)))
+        proto = BlockSparseDesign(None, None, None, None, T, rb, n_loc,
+                                  n_tiles, K, leading=2)
+        x_specs = proto.partition_specs(row_axes, "model")
+        X = BlockSparseDesign(
+            sds((D, M, B, rb, T), jnp.float32, x_specs.bricks),
+            sds((D, M, B), jnp.int32, x_specs.brick_row),
+            sds((D, M, B), jnp.int32, x_specs.brick_tile),
+            sds((D, M, n_tiles + 1), jnp.int32, x_specs.tile_ptr),
+            T, rb, n_loc, n_tiles, K, leading=2)
+        rec["brick_bytes_per_chip"] = B * rb * T * 4
+    else:
+        x_specs = P(row_axes, "model")
+        X = sds((n, p), jnp.float32, x_specs)
     y = sds((n,), jnp.float32, row_spec)
     mask = sds((n,), jnp.float32, row_spec)
     budget = sds((M,), jnp.int32, feat_spec)
@@ -188,9 +217,9 @@ def lower_glm_cell(shape_name: str, mesh, *, do_compile=True,
 
     t0 = time.time()
     with mesh:
-        mapped = jax.jit(jax.shard_map(
+        mapped = jax.jit(compat.shard_map(
             fn, mesh=mesh,
-            in_specs=(x_spec, row_spec, row_spec, feat_spec, state_specs),
+            in_specs=(x_specs, row_spec, row_spec, feat_spec, state_specs),
             out_specs=(state_specs, metric_spec), check_vma=False))
         lowered = mapped.lower(X, y, mask, budget, state)
     rec["lower_s"] = round(time.time() - t0, 2)
@@ -208,8 +237,8 @@ def lower_glm_cell(shape_name: str, mesh, *, do_compile=True,
     rec["roofline"] = roofline_terms(stats, n_chips)
     # useful FLOPs per outer iteration: tile Gram blocks (2·n·p·T — the
     # dominant term; exact per-tile Newton needs X_tᵀWX_t) + gradient and
-    # margin matvecs (≈ 4·n·p)
-    rec["model_flops"] = 2.0 * n * p * T + 4.0 * n * p
+    # margin matvecs (≈ 4·n·p); for bricks both scale with occupancy
+    rec["model_flops"] = occ * (2.0 * n * p * T + 4.0 * n * p)
     rec["hlo_flops_total"] = stats.flops * n_chips
     rec["useful_compute_ratio"] = (rec["model_flops"]
                                    / rec["hlo_flops_total"]

@@ -31,8 +31,8 @@ def main():
         os.environ["XLA_FLAGS"] = (
             f"--xla_force_host_platform_device_count={args.devices}")
 
-    import jax
     from repro.configs.registry import get_arch, smoke_variant
+    from repro.sharding import compat
     from repro.optim import adamw
     from repro.runtime.trainer import Trainer, TrainerConfig
 
@@ -40,8 +40,7 @@ def main():
     cfg = cfg.replace(parallelism=args.parallelism)
     mesh = None
     if args.devices:
-        mesh = jax.make_mesh((1, args.devices), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = compat.make_mesh((1, args.devices), ("data", "model"))
 
     trainer = Trainer(
         cfg,

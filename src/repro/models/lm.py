@@ -26,6 +26,7 @@ from repro.models import common
 from repro.models.transformer import DecoderModel
 from repro.models.whisper import EncDecModel
 from repro.optim import adamw
+from repro.sharding import compat
 
 
 def build_model(cfg):
@@ -159,7 +160,7 @@ def vocab_parallel_ce(h, w, transpose_w, targets, loss_mask):
         return jax.lax.psum(total, dp)[None]
 
     w_spec = P("model", None) if transpose_w else P(None, "model")
-    loss_sum = jax.shard_map(
+    loss_sum = compat.shard_map(
         local, mesh=mesh,
         in_specs=(P(dp, None, None), w_spec, P(dp, None), P(dp, None)),
         out_specs=P(None), check_vma=False,

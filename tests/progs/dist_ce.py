@@ -5,11 +5,11 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.models import lm
+from repro.sharding import compat
 
 
 def main():
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = compat.make_mesh((2, 4), ("data", "model"))
     rng = np.random.default_rng(0)
     B, S, d, V = 4, 16, 32, 64
     h = rng.normal(size=(B, S, d)).astype(np.float32)

@@ -13,6 +13,7 @@ from repro.checkpoint import CheckpointManager
 from repro.core import dglmnet, glm
 from repro.core.dglmnet import DGLMNETConfig
 from repro.data import synthetic
+from repro.sharding import compat
 
 
 def main():
@@ -21,10 +22,8 @@ def main():
     cfg = DGLMNETConfig(lam1=0.5, lam2=0.5, tile_size=16, max_outer=60,
                         tol=1e-13)
 
-    mesh_a = jax.make_mesh((1, 8), ("data", "model"),
-                           axis_types=(jax.sharding.AxisType.Auto,) * 2)
-    mesh_b = jax.make_mesh((4, 2), ("data", "model"),
-                           axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh_a = compat.make_mesh((1, 8), ("data", "model"))
+    mesh_b = compat.make_mesh((4, 2), ("data", "model"))
 
     # independent oracle optimum
     from repro.core import prox_ref

@@ -10,6 +10,7 @@ import jax.numpy as jnp
 from repro.core import dglmnet, glm, prox_ref
 from repro.core.dglmnet import DGLMNETConfig
 from repro.data import synthetic
+from repro.sharding import compat
 
 
 def main():
@@ -28,10 +29,8 @@ def main():
     base = DGLMNETConfig(lam1=lam1, lam2=lam2, tile_size=16, max_outer=150,
                          tol=1e-12)
 
-    mesh_1d = jax.make_mesh((1, 8), ("data", "model"),
-                            axis_types=(jax.sharding.AxisType.Auto,) * 2)
-    mesh_2d = jax.make_mesh((2, 4), ("data", "model"),
-                            axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh_1d = compat.make_mesh((1, 8), ("data", "model"))
+    mesh_2d = compat.make_mesh((2, 4), ("data", "model"))
 
     r = dglmnet.fit_sharded(X, y, base, mesh_1d)
     assert obj(r.beta) <= f_star + tol, ("1d", obj(r.beta), f_star)

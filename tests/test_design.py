@@ -1,0 +1,192 @@
+"""DesignMatrix operator layer: brick-packing round trips, the
+``ops.tile_gram`` Pallas kernel vs the ref.py oracle, operator-method
+equivalence against dense math, and single-device dense/sparse fit parity."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import dglmnet, glm
+from repro.core.dglmnet import DGLMNETConfig
+from repro.data import design as design_lib
+from repro.data import synthetic
+from repro.data.design import (BlockSparseDesign, DenseDesign,
+                               build_block_sparse)
+from repro.data.sparse import SparseCOO
+from repro.kernels import ops, ref
+
+
+def _rand_coo(rng, n=90, p=70, nnz=500):
+    rows = rng.integers(0, n, nnz)
+    cols = rng.integers(0, p, nnz)
+    vals = rng.normal(size=nnz).astype(np.float32)
+    return SparseCOO(rows, cols, vals, (n, p)).dedupe()
+
+
+def _packed_dense(coo, design, info):
+    """Reference dense block in the packed layout, from the COO directly."""
+    out = np.zeros(design.shape, np.float32)
+    out[:coo.shape[0], info.col_of_feature] = coo.to_dense()
+    return out
+
+
+@pytest.mark.parametrize("tile,rb,reorder", [(16, 32, True), (16, 32, False),
+                                             (8, 16, True), (32, 64, True)])
+def test_brick_packing_round_trip(tile, rb, reorder, rng):
+    coo = _rand_coo(rng)
+    design, info = build_block_sparse(coo, tile, row_block=rb,
+                                     reorder=reorder)
+    assert design.shape[0] % rb == 0 and design.shape[1] % tile == 0
+    np.testing.assert_allclose(np.asarray(design.to_dense()),
+                               _packed_dense(coo, design, info), atol=1e-6)
+    # every original feature is mapped to exactly one packed column
+    assert len(np.unique(info.col_of_feature)) == coo.shape[1]
+    assert 0 < info.occupancy <= 1.0
+
+
+def test_padding_columns_are_inert(rng):
+    """Packed columns that carry no original feature must be exactly zero."""
+    coo = _rand_coo(rng, p=53)          # 53 % 16 != 0
+    design, info = build_block_sparse(coo, 16, row_block=32)
+    dense = np.asarray(design.to_dense())
+    pad_cols = np.setdiff1d(np.arange(design.shape[1]), info.col_of_feature)
+    assert len(pad_cols) == design.shape[1] - 53
+    assert (dense[:, pad_cols] == 0).all()
+
+
+def test_pack_unpack_beta_round_trip(rng):
+    coo = _rand_coo(rng, p=61)
+    design, info = build_block_sparse(coo, 16, row_block=32)
+    beta = rng.normal(size=61).astype(np.float32)
+    packed = info.pack_beta(beta, design.shape[1])
+    np.testing.assert_allclose(info.unpack_beta(packed), beta)
+    # packed beta produces the same margins as the original order
+    Xd = coo.to_dense()
+    np.testing.assert_allclose(
+        np.asarray(design.matvec(jnp.asarray(packed)))[:coo.shape[0]],
+        Xd @ beta, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("K,rb,T,n_rb", [(1, 8, 16, 4), (7, 16, 8, 9),
+                                         (12, 32, 32, 12)])
+def test_tile_gram_pallas_matches_ref(K, rb, T, n_rb, rng):
+    """Acceptance: ops.tile_gram Pallas-interpret output == ref.py oracle."""
+    bricks = rng.normal(size=(K, rb, T)).astype(np.float32)
+    rows = rng.integers(0, n_rb, K).astype(np.int32)
+    w2 = rng.uniform(0.01, 0.3, (n_rb, rb)).astype(np.float32)
+    r2 = rng.normal(size=(n_rb, rb)).astype(np.float32)
+    for n_valid in (0, K // 2, K):
+        Gr, gr = ref.tile_gram(jnp.asarray(bricks), jnp.asarray(rows),
+                               jnp.int32(n_valid), jnp.asarray(w2),
+                               jnp.asarray(r2))
+        Gp, gp = ops.tile_gram(jnp.asarray(bricks), jnp.asarray(rows),
+                               jnp.int32(n_valid), jnp.asarray(w2),
+                               jnp.asarray(r2), backend="pallas")
+        np.testing.assert_allclose(np.asarray(Gp), np.asarray(Gr),
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(gp), np.asarray(gr),
+                                   rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("backend", ["ref", "pallas"])
+def test_operator_methods_match_dense_math(backend, rng):
+    coo = _rand_coo(rng, n=100, p=70, nnz=600)
+    design, info = build_block_sparse(coo, 16, row_block=32)
+    dense = _packed_dense(coo, design, info)
+    n_rows, p_pad = design.shape
+    w = rng.uniform(0.01, 1.0, n_rows).astype(np.float32)
+    r = rng.normal(size=n_rows).astype(np.float32)
+    v = rng.normal(size=p_pad).astype(np.float32)
+
+    np.testing.assert_allclose(np.asarray(design.matvec(jnp.asarray(v))),
+                               dense @ v, rtol=1e-4, atol=1e-4)
+    for tid in (0, design.n_tiles // 2, design.n_tiles - 1):
+        Xt = dense[:, tid * 16:(tid + 1) * 16]
+        G, g = design.tile_gram(jnp.int32(tid), jnp.asarray(w),
+                                jnp.asarray(r), backend=backend)
+        np.testing.assert_allclose(np.asarray(G), (Xt * w[:, None]).T @ Xt,
+                                   rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(g), Xt.T @ r,
+                                   rtol=1e-4, atol=1e-4)
+        vt = v[tid * 16:(tid + 1) * 16]
+        np.testing.assert_allclose(
+            np.asarray(design.tile_matvec(jnp.int32(tid), jnp.asarray(vt))),
+            Xt @ vt, rtol=1e-4, atol=1e-4)
+    G_all, g_all = design.all_tile_grams(jnp.asarray(w), jnp.asarray(r),
+                                         backend=backend)
+    Xr = dense.reshape(n_rows, design.n_tiles, 16)
+    np.testing.assert_allclose(
+        np.asarray(G_all),
+        np.einsum("nti,ntj->tij", Xr * w[:, None, None], Xr),
+        rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(g_all),
+                               (dense.T @ r).reshape(design.n_tiles, 16),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_dense_design_wraps_raw_arrays(rng):
+    X = rng.normal(size=(40, 35)).astype(np.float32)
+    design, info = design_lib.as_design(X, 16)
+    assert isinstance(design, DenseDesign)
+    assert design.shape == (40, 48)
+    np.testing.assert_allclose(np.asarray(design.to_dense())[:, :35], X)
+    assert info.unpack_beta(np.arange(48, dtype=np.float32)).shape == (35,)
+
+
+@pytest.mark.parametrize("coupling", ["gauss-seidel", "jacobi"])
+def test_single_device_fit_parity(coupling, rng):
+    """BlockSparseDesign fits match DenseDesign fits on the same problem."""
+    ds = synthetic.make_sparse(n=300, p=400, avg_nnz=20, k_true=30, seed=11)
+    coo, y = ds.train.X, ds.train.y
+    Xd = coo.to_dense()
+    cfg = DGLMNETConfig(lam1=0.5, lam2=0.1, tile_size=16, coupling=coupling,
+                        max_outer=250, tol=1e-12)
+
+    def obj(beta):
+        return float(glm.objective(glm.LOGISTIC, jnp.asarray(y),
+                                   jnp.asarray(Xd), jnp.asarray(beta),
+                                   cfg.lam1, cfg.lam2))
+
+    f_dense = obj(dglmnet.fit(Xd, y, cfg).beta)
+    f_sparse = obj(dglmnet.fit(coo, y, cfg).beta)
+    assert abs(f_dense - f_sparse) <= 1e-5 * max(1.0, abs(f_dense)), \
+        (f_dense, f_sparse)
+
+
+def test_sharded_builder_matches_single(rng):
+    """The (D, M)-sharded brick layout localizes to blocks of the packed
+    matrix: reassembling all (d, m) shard blocks reproduces it."""
+    coo = _rand_coo(rng, n=120, p=90, nnz=700)
+    D, M, T, rb = 2, 2, 16, 32
+    design, info = design_lib.build_block_sparse_sharded(
+        coo, D=D, M=M, tile_size=T, row_block=rb)
+    assert design.leading == 2
+    n_loc, p_loc = design.shape
+    full = np.zeros((D * n_loc, M * p_loc), np.float32)
+    for d in range(D):
+        for m in range(M):
+            local = BlockSparseDesign(
+                design.bricks[d, m], design.brick_row[d, m],
+                design.brick_tile[d, m], design.tile_ptr[d, m],
+                T, rb, n_loc, design.n_tiles, design.max_bricks_per_tile)
+            full[d * n_loc:(d + 1) * n_loc,
+                 m * p_loc:(m + 1) * p_loc] = np.asarray(local.to_dense())
+    expect = np.zeros_like(full)
+    expect[:coo.shape[0], info.col_of_feature] = coo.to_dense()
+    np.testing.assert_allclose(full, expect, atol=1e-6)
+
+
+def test_prebuilt_design_requires_and_uses_info(rng):
+    """A pre-built BlockSparseDesign must come with its builder's
+    DesignInfo (the brick layout permutes columns); with it, beta comes
+    back in the original feature order."""
+    ds = synthetic.make_sparse(n=250, p=300, avg_nnz=15, k_true=20, seed=13)
+    coo, y = ds.train.X, ds.train.y
+    cfg = DGLMNETConfig(lam1=0.5, lam2=0.1, tile_size=16, max_outer=60,
+                        tol=1e-12)
+    design, info = build_block_sparse(coo, 16)
+    with pytest.raises(ValueError, match="DesignInfo"):
+        dglmnet.fit(design, y, cfg)
+    r_pre = dglmnet.fit(design, y, cfg, design_info=info)
+    r_coo = dglmnet.fit(coo, y, cfg)
+    np.testing.assert_allclose(r_pre.beta, r_coo.beta, atol=1e-6)
+    assert r_pre.beta.shape == (coo.shape[1],)
