@@ -13,8 +13,9 @@ import numpy as np
 from benchmarks import datasets
 from repro.baselines.admm import ADMMConfig, fit_admm
 from repro.baselines.online_tg import OnlineTGConfig, fit_online_tg
-from repro.core import dglmnet, glm, prox_ref
+from repro.core import glm, prox_ref
 from repro.core.dglmnet import DGLMNETConfig
+from repro.core.solver import GLMSolver
 from repro.data import synthetic
 
 import jax.numpy as jnp
@@ -52,11 +53,11 @@ def run():
         def au(beta):
             return synthetic.au_prc(yte, np.asarray(Xte @ beta[:p_te]))
 
-        # --- d-GLMNET
+        # --- d-GLMNET (session API; one-device reference path)
         t0 = time.time()
-        res = dglmnet.fit(X_glmnet, y, DGLMNETConfig(
-            lam1=LAM1, lam2=0.0, tile_size=256, coupling="jacobi",
-            max_outer=ITERS, tol=0.0))
+        res = GLMSolver(X_glmnet, y, config=DGLMNETConfig(
+            tile_size=256, coupling="jacobi",
+            max_outer=ITERS, tol=0.0)).fit(lam1=LAM1, lam2=0.0)
         out_rows.append({
             "dataset": ds_name, "algo": "d-GLMNET",
             "subopt": _subopt(res.history["f"], f_star)[-1],

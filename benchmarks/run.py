@@ -10,6 +10,7 @@ Figures:
   fig5_6_l2         — paper Figs 5-6 (L2: vs online-warmstarted L-BFGS)
   fig7_8_speedup    — paper Figs 7-8 (speedup vs number of nodes)
   kernels           — Pallas kernel micro-benches
+  path_bench        — warm-started λ-path vs K cold fits (GLMSolver session)
 """
 from __future__ import annotations
 
@@ -29,7 +30,8 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (fig1_adaptive_mu, fig2_4_l1, fig5_6_l2,
-                            fig7_8_speedup, kernels_bench, table2_load)
+                            fig7_8_speedup, kernels_bench, path_bench,
+                            table2_load)
     figures = {
         "table2_load": table2_load.run,
         "fig1_adaptive_mu": fig1_adaptive_mu.run,
@@ -37,6 +39,7 @@ def main() -> None:
         "fig5_6_l2": fig5_6_l2.run,
         "fig7_8_speedup": fig7_8_speedup.run,
         "kernels": kernels_bench.run,
+        "path_bench": path_bench.run,
     }
     wanted = (args.only.split(",") if args.only else list(figures))
     RESULTS.mkdir(parents=True, exist_ok=True)

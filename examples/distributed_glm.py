@@ -1,6 +1,7 @@
-"""Distributed d-GLMNET on 8 (simulated) nodes: the paper's 1-D feature
-split, the 2-D extension, ALB straggler mitigation, and margin compression —
-all converging to the same optimum.
+"""Distributed d-GLMNET on 8 (simulated) nodes via GLMSolver sessions: the
+paper's 1-D feature split, the 2-D extension, ALB straggler mitigation,
+margin compression — all converging to the same optimum — plus a
+warm-started λ-path on the 2-D session.
 
     python examples/distributed_glm.py       (sets up fake devices itself)
 """
@@ -17,8 +18,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import dglmnet, glm
+from repro.core import glm
 from repro.core.dglmnet import DGLMNETConfig
+from repro.core.solver import GLMSolver
 from repro.data import synthetic
 from repro.data.design import brick_occupancy
 from repro.sharding import compat
@@ -40,25 +42,34 @@ def main():
 
     # the paper's layout: 8 feature blocks, every node holds all rows
     mesh_1d = compat.make_mesh((1, 8), ("data", "model"))
-    res = dglmnet.fit_sharded(X, y, base, mesh_1d, verbose=False)
+    res = GLMSolver(X, y, config=base, mesh=mesh_1d).fit()
     print(f"1-D (paper) split : f={obj(res.beta):.5f} "
           f"iters={res.n_iter} nnz={(res.beta != 0).sum()}")
 
-    # 2-D: rows × features (beyond-paper scale-out)
+    # 2-D: rows × features (beyond-paper scale-out); the session is kept —
+    # its packed design and compiled superstep serve every later fit
     mesh_2d = compat.make_mesh((2, 4), ("data", "model"))
-    res = dglmnet.fit_sharded(X, y, base, mesh_2d)
+    solver_2d = GLMSolver(X, y, config=base, mesh=mesh_2d)
+    res = solver_2d.fit()
     print(f"2-D rows×features : f={obj(res.beta):.5f} iters={res.n_iter}")
 
     # ALB with a straggling node (paper Section 7)
     alb = dataclasses.replace(base, alb=True)
-    res = dglmnet.fit_sharded(X, y, alb, mesh_1d,
-                              speeds=np.array([1, 1, 1, 0.2, 1, 1, 2, 1]))
+    res = GLMSolver(X, y, config=alb, mesh=mesh_1d,
+                    speeds=np.array([1, 1, 1, 0.2, 1, 1, 2, 1])).fit()
     print(f"ALB w/ straggler  : f={obj(res.beta):.5f} iters={res.n_iter}")
 
     # compressed margin allreduce
     comp = dataclasses.replace(base, compress_margin="bf16")
-    res = dglmnet.fit_sharded(X, y, comp, mesh_2d)
+    res = GLMSolver(X, y, config=comp, mesh=mesh_2d).fit()
     print(f"bf16 margin comm  : f={obj(res.beta):.5f} iters={res.n_iter}")
+
+    # warm-started λ-path on the existing 2-D session: one superstep
+    # compile serves the whole grid (λ is a runtime argument)
+    path = solver_2d.fit_path(n_lambdas=10, lam_ratio=1e-2, lam2=base.lam2)
+    print(f"10-λ path (2-D)   : nnz {path.nnz[0]} → {path.nnz[-1]}, "
+          f"{path.n_iters.sum()} supersteps, "
+          f"{solver_2d.compile_count} compile(s)")
 
 
 if __name__ == "__main__":

@@ -1,12 +1,15 @@
-"""Quickstart: fit an elastic-net logistic regression with d-GLMNET on one
-device and compare against the FISTA oracle.
+"""Quickstart: a GLMSolver session — fit an elastic-net logistic regression
+with d-GLMNET on one device, compare against the FISTA oracle, then reuse
+the same session (design packed + superstep compiled once) for a
+warm-started regularization path.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
-from repro.core import dglmnet, glm, prox_ref
+from repro.core import glm, prox_ref
 from repro.core.dglmnet import DGLMNETConfig
+from repro.core.solver import GLMSolver
 from repro.data import synthetic
 
 import jax.numpy as jnp
@@ -16,9 +19,10 @@ def main():
     ds = synthetic.make_dense(n=2000, p=200, k_true=25, seed=0)
     lam1, lam2 = 1.0, 0.5
 
-    cfg = DGLMNETConfig(family="logistic", lam1=lam1, lam2=lam2,
-                        tile_size=64, max_outer=60, tol=1e-10)
-    res = dglmnet.fit(ds.train.X, ds.train.y, cfg, verbose=True)
+    solver = GLMSolver(ds.train.X, ds.train.y, family="logistic",
+                       config=DGLMNETConfig(tile_size=64, max_outer=60,
+                                            tol=1e-10))
+    res = solver.fit(lam1=lam1, lam2=lam2, verbose=True)
 
     _, hist = prox_ref.fit_fista(ds.train.X, ds.train.y, lam1=lam1,
                                  lam2=lam2, max_iter=3000)
@@ -29,10 +33,17 @@ def main():
     print(f"FISTA oracle       : {hist[-1]:.6f}")
     print(f"nnz(beta)          : {(res.beta != 0).sum()} / {len(res.beta)}")
 
-    scores = ds.test.X @ res.beta
-    acc = ((scores > 0) == (ds.test.y > 0)).mean()
-    au = synthetic.au_prc(ds.test.y, scores)
+    acc = solver.score(ds.test.X, ds.test.y)
+    au = synthetic.au_prc(ds.test.y, solver.predict(ds.test.X, kind="link"))
     print(f"test accuracy      : {acc:.3f}   auPRC: {au:.3f}")
+
+    # the same session fits a whole warm-started path — the superstep is
+    # NOT recompiled (λ is a runtime argument)
+    path = solver.fit_path(n_lambdas=30, lam_ratio=1e-3, lam2=lam2)
+    print(f"\n30-point λ-path    : λ_max={path.lambdas[0]:.3f} → "
+          f"{path.lambdas[-1]:.4f}, nnz {path.nnz[0]} → {path.nnz[-1]}, "
+          f"{path.n_iters.sum()} supersteps total, "
+          f"{solver.compile_count} superstep compile(s)")
 
 
 if __name__ == "__main__":

@@ -22,8 +22,8 @@ import jax
 import numpy as np
 
 from repro.checkpoint import CheckpointManager
-from repro.core import dglmnet
 from repro.core.dglmnet import DGLMNETConfig
+from repro.core.solver import GLMSolver
 from repro.data import synthetic
 from repro.sharding import compat
 
@@ -53,8 +53,8 @@ def main():
         print(f"resuming from superstep {mgr.latest_step()}")
 
     t0 = time.time()
-    res = dglmnet.fit_sharded(X, ds.train.y, cfg, mesh, ckpt_manager=mgr,
-                              ckpt_every=10, verbose=True)
+    solver = GLMSolver(X, ds.train.y, config=cfg, mesh=mesh)
+    res = solver.fit(ckpt_manager=mgr, ckpt_every=10, verbose=True)
     dt = time.time() - t0
     print(f"\ndone in {dt:.1f}s  ({res.n_iter} supersteps, "
           f"converged={res.converged})")

@@ -123,6 +123,17 @@ class CheckpointManager:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
+    def read_metadata(self, *, step: Optional[int] = None) -> dict:
+        """User metadata of a checkpoint without loading its arrays —
+        lets callers decide how to build the restore template (e.g. a
+        single-fit vs λ-path checkpoint) before committing to ``restore``."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        meta = json.loads(
+            (self.dir / f"ckpt_{step}" / "manifest.json").read_text())
+        return meta["metadata"]
+
     def restore(self, like, *, step: Optional[int] = None):
         """Restore into the structure (and shardings) of ``like``.
 

@@ -1,9 +1,14 @@
 """repro.core — d-GLMNET: distributed coordinate descent for regularized GLMs.
 
 Public API:
-  DGLMNETConfig, fit, fit_sharded     — the paper's algorithm (Algorithms 1-4)
+  GLMSolver, PathResult, lambda_max   — session API: warm-started λ-path
+                                        fitting over a reusable sharded design
+  DGLMNETConfig                       — algorithm hyperparameters (λ defaults)
+  fit, fit_sharded                    — DEPRECATED one-shot drivers (thin
+                                        wrappers over a GLMSolver session)
   glm.FAMILIES                        — logistic / squared / probit / poisson
   head_probe.fit_probe                — elastic-net GLM head on frozen LM features
 """
 from repro.core.dglmnet import DGLMNETConfig, FitResult, fit, fit_sharded  # noqa: F401
+from repro.core.solver import GLMSolver, PathResult, lambda_max  # noqa: F401
 from repro.core import glm  # noqa: F401

@@ -49,6 +49,7 @@ def _psum(x, axis: Optional[str]):
 def sweep_gauss_seidel(design, s, w, beta, dbeta, xdb, *, mu, nu, lam1, lam2,
                        start_tile=0, num_tiles=None,
                        max_num_tiles: Optional[int] = None,
+                       active=None,
                        axis_data: Optional[str] = None,
                        backend: Optional[str] = None):
     """Cyclic tile sweep; returns (dbeta, xdb, tiles_done).
@@ -56,11 +57,16 @@ def sweep_gauss_seidel(design, s, w, beta, dbeta, xdb, *, mu, nu, lam1, lam2,
     design: local DesignMatrix block, shape (n_loc, p_loc).
     s, w: (n_loc,) link stats at the outer iterate (FIXED during the sweep).
     beta, dbeta: (p_loc,); xdb: (n_loc,) = X @ dbeta (local block only).
+    lam1/lam2 may be traced scalars — the λ pair is a *runtime* argument of
+      the superstep so one compiled sweep serves a whole regularization path.
     num_tiles: how many tiles this node is budgeted to process this superstep
       (ALB); defaults to one full cycle.  May exceed a full cycle (fast
       nodes).  ``max_num_tiles`` is the static loop bound all SPMD peers run
       (masked work beyond the local budget) — required because collectives
       inside the loop must be executed in lockstep.
+    active: optional (p_loc,) 0/1 screening mask — coordinates with
+      ``active == 0`` are frozen at their entering Δβ (the λ-path driver's
+      strong-rule/KKT active set; see solver.fit_path).
     """
     T = design.tile_size
     n_tiles_total = design.n_tiles
@@ -71,7 +77,7 @@ def sweep_gauss_seidel(design, s, w, beta, dbeta, xdb, *, mu, nu, lam1, lam2,
 
     def tile_body(t, carry):
         dbeta_c, xdb_c = carry
-        active = t < num_tiles
+        live = t < num_tiles
         tid = jax.lax.rem(jnp.asarray(start_tile, jnp.int32) + t, n_tiles_total)
         col0 = tid * T
         r = s - mu * (w * xdb_c)
@@ -82,7 +88,10 @@ def sweep_gauss_seidel(design, s, w, beta, dbeta, xdb, *, mu, nu, lam1, lam2,
         dt = jax.lax.dynamic_slice(dbeta_c, (col0,), (T,))
         dt_new = ops.cd_tile_solve(G, g, h, bt, dt, mu, nu, lam1, lam2,
                                    backend=backend)
-        dt_new = jnp.where(active, dt_new, dt)
+        if active is not None:
+            at = jax.lax.dynamic_slice(active, (col0,), (T,))
+            dt_new = jnp.where(at > 0, dt_new, dt)
+        dt_new = jnp.where(live, dt_new, dt)
         xdb_c = xdb_c + design.tile_matvec(tid, dt_new - dt)
         dbeta_c = jax.lax.dynamic_update_slice(dbeta_c, dt_new, (col0,))
         return dbeta_c, xdb_c
@@ -94,13 +103,15 @@ def sweep_gauss_seidel(design, s, w, beta, dbeta, xdb, *, mu, nu, lam1, lam2,
 def sweep_jacobi(design, s, w, beta, dbeta, xdb, *, mu, nu, lam1, lam2,
                  start_tile=0, num_tiles=None,
                  max_num_tiles: Optional[int] = None,
+                 active=None,
                  axis_data: Optional[str] = None,
                  backend: Optional[str] = None):
     """Jacobi-across-tiles sweep: one fused psum, vmapped tile solves.
 
     Equivalent to d-GLMNET with each tile as a virtual node.  ``dbeta`` and
     ``xdb`` must be zero on entry (start of an outer iteration) — asserted by
-    the driver.  ALB budgeting masks whole tiles.
+    the driver.  ALB budgeting masks whole tiles; ``active`` (see
+    sweep_gauss_seidel) masks individual screened-out coordinates.
     """
     T = design.tile_size
     n_loc, p_loc = design.shape
@@ -127,8 +138,10 @@ def sweep_jacobi(design, s, w, beta, dbeta, xdb, *, mu, nu, lam1, lam2,
     offset = jax.lax.rem(tids - jnp.asarray(start_tile, jnp.int32),
                          jnp.asarray(n_tiles_total, jnp.int32))
     offset = jnp.where(offset < 0, offset + n_tiles_total, offset)
-    active = offset < jnp.minimum(num_tiles, n_tiles_total)
-    d_new = jnp.where(active[:, None], d_new, 0.0)
+    live = offset < jnp.minimum(num_tiles, n_tiles_total)
+    d_new = jnp.where(live[:, None], d_new, 0.0)
+    if active is not None:
+        d_new = jnp.where(active.reshape(n_tiles_total, T) > 0, d_new, 0.0)
 
     dbeta_out = d_new.reshape(p_loc)
     xdb_out = design.matvec(dbeta_out)

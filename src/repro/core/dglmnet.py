@@ -21,26 +21,25 @@ Superstep structure (paper Algorithm 4):
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import cd as cd_lib
 from repro.core import linesearch
 from repro.data import design as design_lib
-from repro.data.design import BlockSparseDesign, DesignMatrix, SparseCOO
 from repro.kernels import ops
-from repro.sharding import compat
 from repro.sharding.compress import psum_compressed
 
 
 @dataclasses.dataclass(frozen=True)
 class DGLMNETConfig:
     family: str = "logistic"
+    # default regularization — λ is a *runtime* argument of the compiled
+    # superstep (solver.GLMSolver passes per-fit values, so one compiled
+    # superstep serves a whole λ-path); these fields only seed the default
     lam1: float = 0.0
     lam2: float = 0.0
     # trust region (paper Algorithm 1 / Section 4):
@@ -97,22 +96,29 @@ def make_superstep(config: DGLMNETConfig, *, axis_data=None, axis_model=None,
     ``DenseDesign`` on the fly) or any ``DesignMatrix`` pytree — e.g. the
     sharded ``BlockSparseDesign`` whose leaves the partitioner has already
     localized.  y/mask are (n_loc,), budget (1,) int32 per feature shard.
+
+    ``lams`` is a (2,) [λ1, λ2] runtime array (replicated) — λ is NOT baked
+    into the closure, so one compiled superstep serves a whole regularization
+    path (solver.GLMSolver.fit_path).  ``active`` is a (p_loc,) 0/1
+    screening mask (feature-sharded); coordinates with ``active == 0`` are
+    frozen during the CD sweep (strong-rule/KKT active-set screening).
     """
     sweep = cd_lib.SWEEPS[config.coupling]
     backend = config.kernel_backend
     fam = config.family
     static_bound = int(max_budget if max_budget is not None else n_tiles_local)
 
-    def superstep(X, y, mask, budget, state: FitState):
+    def superstep(X, y, mask, budget, lams, active, state: FitState):
         design = design_lib.as_local_design(X, config.tile_size)
         beta, xb, mu, cursor, step = state
+        lam1, lam2 = lams[0], lams[1]
 
         # (1) link statistics at the current iterate
         loss_i, s, w = ops.glm_stats(y, xb, fam, mask=mask, backend=backend)
         L = _psum(jnp.sum(loss_i), axis_data)
         R0 = linesearch.penalty_terms(beta, jnp.zeros_like(beta),
-                                      jnp.zeros((1,)), config.lam1,
-                                      config.lam2, axis_model)[0]
+                                      jnp.zeros((1,)), lam1,
+                                      lam2, axis_model)[0]
         f_cur = L + R0
 
         # (2) local quadratic sub-problem: one (budgeted) tile CD cycle
@@ -120,9 +126,10 @@ def make_superstep(config: DGLMNETConfig, *, axis_data=None, axis_model=None,
         xdb0 = jnp.zeros_like(xb)
         dbeta, xdb_local, tiles_done = sweep(
             design, s, w, beta, dbeta0, xdb0,
-            mu=mu, nu=config.nu, lam1=config.lam1, lam2=config.lam2,
+            mu=mu, nu=config.nu, lam1=lam1, lam2=lam2,
             start_tile=cursor[0],
             num_tiles=budget[0], max_num_tiles=static_bound,
+            active=active,
             axis_data=axis_data, backend=backend)
 
         # (3) merge margin deltas across feature blocks (paper step 6)
@@ -135,7 +142,7 @@ def make_superstep(config: DGLMNETConfig, *, axis_data=None, axis_model=None,
                      + config.nu * _psum(jnp.sum(dbeta * dbeta), axis_model))
         ls = linesearch.search(
             y, xb, xdb, beta, dbeta, family=fam,
-            lam1=config.lam1, lam2=config.lam2, mu=mu, nu=config.nu,
+            lam1=lam1, lam2=lam2, mu=mu, nu=config.nu,
             f_current=f_cur, grad_dot_dir=grad_dot_dir, quad_form=quad_form,
             sigma=config.sigma, b=config.backtrack_b, gamma=config.gamma,
             delta=config.ls_delta, grid_size=config.ls_grid_size,
@@ -167,12 +174,28 @@ def make_superstep(config: DGLMNETConfig, *, axis_data=None, axis_model=None,
 
 
 # ---------------------------------------------------------------------------
-# single-device convenience driver
+# deprecated one-shot drivers (thin wrappers over solver.GLMSolver)
 # ---------------------------------------------------------------------------
+
+_DEPRECATION_WARNED: set = set()
+
+
+def _warn_deprecated(name: str):
+    import warnings
+    if name in _DEPRECATION_WARNED:
+        return
+    _DEPRECATION_WARNED.add(name)
+    warnings.warn(
+        f"repro.core.dglmnet.{name} is deprecated; construct a "
+        "repro.core.solver.GLMSolver session instead — it packs/places the "
+        "design and compiles the superstep once and supports warm-started "
+        "λ-path fitting (solver.fit / solver.fit_path).",
+        DeprecationWarning, stacklevel=3)
+
 
 def fit(X, y, config: DGLMNETConfig, *, beta0=None, verbose=False,
         design_info=None) -> FitResult:
-    """Fit on one device.
+    """DEPRECATED one-shot single-device fit — use ``GLMSolver(...).fit()``.
 
     X: (n, p) dense array-like, a ``SparseCOO`` (trained through the
     blocked-sparse brick layout without densifying the full matrix), or a
@@ -180,48 +203,11 @@ def fit(X, y, config: DGLMNETConfig, *, beta0=None, verbose=False,
     builder's ``DesignInfo`` as ``design_info`` so β can be mapped back to
     the original feature order).
     """
-    design, info = design_lib.as_design(X, config.tile_size,
-                                        info=design_info)
-    y = np.asarray(y, np.float32)
-    n = y.shape[0]
-    n_rows, p_pad = design.shape
-    p = info.shape[1]
+    _warn_deprecated("fit")
+    from repro.core.solver import GLMSolver
+    solver = GLMSolver(X, y, config=config, design_info=design_info)
+    return solver.fit(beta0=beta0, verbose=verbose)
 
-    beta = jnp.asarray(info.pack_beta(np.asarray(beta0, np.float32), p_pad)
-                       if beta0 is not None
-                       else np.zeros((p_pad,), np.float32))
-    yj = jnp.asarray(np.pad(y, (0, n_rows - n), constant_values=1.0))
-    mask = jnp.asarray(np.pad(np.ones((n,), np.float32), (0, n_rows - n)))
-    n_tiles = design.n_tiles
-
-    state = FitState(beta=beta, xb=design.matvec(beta),
-                     mu=jnp.float32(config.mu_init),
-                     cursor=jnp.zeros((1,), jnp.int32),
-                     step=jnp.int32(0))
-    budget = jnp.full((1,), n_tiles, jnp.int32)
-    superstep = jax.jit(make_superstep(config, n_tiles_local=n_tiles))
-
-    history = {k: [] for k in ("f", "alpha", "mu", "nnz", "accepted_unit")}
-    f_prev, converged, it = np.inf, False, 0
-    for it in range(1, config.max_outer + 1):
-        state, m = superstep(design, yj, mask, budget, state)
-        f = float(m["f"])
-        for k in history:
-            history[k].append(float(m[k]))
-        if verbose:
-            print(f"[dglmnet] it={it} f={f:.8f} alpha={float(m['alpha']):.4f} "
-                  f"mu={float(m['mu']):.3f} nnz={int(m['nnz'])}")
-        if np.isfinite(f_prev) and abs(f_prev - f) <= config.tol * max(1.0, abs(f)):
-            converged = True
-            break
-        f_prev = f
-    beta_out = info.unpack_beta(np.asarray(state.beta))[:p]
-    return FitResult(beta_out, history, it, converged)
-
-
-# ---------------------------------------------------------------------------
-# sharded driver (1-D feature split = paper; 2-D data × feature = extension)
-# ---------------------------------------------------------------------------
 
 def fit_sharded(X, y, config: DGLMNETConfig, mesh, *,
                 axis_data: Optional[str] = "data",
@@ -230,163 +216,19 @@ def fit_sharded(X, y, config: DGLMNETConfig, mesh, *,
                 ckpt_manager=None, ckpt_every: int = 10,
                 row_block: int = 256, reorder: bool = True,
                 design_info=None) -> FitResult:
-    """Fit with the design sharded (rows over ``axis_data``, features over
-    ``axis_model``).
+    """DEPRECATED one-shot sharded fit — use ``GLMSolver(..., mesh=mesh)``.
 
-    X: dense (n, p) array-like — sharded as a dense 2-D array — or a
-    ``SparseCOO`` / leading-axes ``BlockSparseDesign``, in which case the
-    CSR-of-bricks structure itself is sharded over the (data × model) mesh
-    and the dense matrix is never materialized on host (DESIGN.md §2).
-    ``row_block``/``reorder`` only apply to the sparse path.
-
-    ``speeds``: optional per-feature-shard relative node speeds for ALB
-    straggler simulation (None = homogeneous).
-    ``ckpt_manager``: optional CheckpointManager — superstep-boundary
-    checkpoints of (β, Xβ, μ, cursors, step); on start, the latest
-    checkpoint is restored (elastically, onto THIS mesh) and the outer loop
-    resumes from its iteration.
+    Semantics are identical to the historical driver (rows over
+    ``axis_data``, features over ``axis_model``, optional ALB speeds and
+    superstep-boundary checkpointing); the session object it now delegates
+    to simply makes the design packing / placement / compilation reusable
+    across fits.
     """
-    from repro.core import alb as alb_lib
-
-    y = np.asarray(y, np.float32)
-    n = y.shape[0]
-    D = mesh.shape[axis_data] if axis_data else 1
-    M = mesh.shape[axis_model]
-    T = config.tile_size
-
-    row_spec = P(axis_data)
-    feat_spec = P(axis_model)
-
-    if isinstance(X, (SparseCOO, BlockSparseDesign)):
-        if isinstance(X, SparseCOO):
-            design_g, info = design_lib.build_block_sparse_sharded(
-                X, D=D, M=M, tile_size=T, row_block=row_block,
-                reorder=reorder)
-        else:
-            if X.leading != 2 or X.tile_size != T:
-                raise ValueError("pre-built BlockSparseDesign must carry "
-                                 "(D, M) leading axes and match tile_size")
-            if design_info is None:
-                raise ValueError(
-                    "pre-built BlockSparseDesign requires the DesignInfo "
-                    "returned by build_block_sparse_sharded (pass "
-                    "design_info=...); the brick layout reorders columns "
-                    "and beta must be unpacked with it")
-            design_g, info = X, design_info
-        n_loc, p_loc = design_g.shape              # per-shard (static)
-        n_tot, p_tot = D * n_loc, M * p_loc
-        x_specs = design_g.partition_specs(axis_data, axis_model)
-        Xs = jax.tree.map(
-            lambda a, s: jax.device_put(a, NamedSharding(mesh, s)),
-            design_g, x_specs)
-        # brick column packing + row padding are functions of (D, M, T, rb):
-        # checkpoints record this layout so a resume onto a different mesh
-        # fails loudly instead of continuing from a permuted iterate
-        design_layout = {"kind": "bricks", "D": D, "M": M, "tile": T,
-                         "row_block": design_g.row_block,
-                         "reorder": bool(reorder)}
-    else:
-        X = np.asarray(X, np.float32)
-        _, p = X.shape
-        info = design_lib.DesignInfo(shape=(n, p))
-        # pad rows to D, features to M*T multiples
-        Xp = np.pad(X, ((0, (-n) % D), (0, (-p) % (M * T))))
-        n_tot, p_tot = Xp.shape
-        p_loc = p_tot // M
-        x_specs = P(axis_data, axis_model)
-        Xs = jax.device_put(Xp, NamedSharding(mesh, x_specs))
-        design_layout = None       # dense layout is mesh-invariant (elastic)
-    n_tiles_local = p_loc // T
-
-    yp = np.pad(y, (0, n_tot - n), constant_values=1.0)
-    maskp = np.pad(np.ones((n,), np.float32), (0, n_tot - n))
-    ys = jax.device_put(yp, NamedSharding(mesh, row_spec))
-    masks = jax.device_put(maskp, NamedSharding(mesh, row_spec))
-
-    # ALB budgets: fraction-κ completion rule (paper Section 7)
-    rng = np.random.default_rng(seed)
-    if config.alb:
-        base_speeds = np.asarray(speeds, np.float32) if speeds is not None \
-            else np.ones((M,), np.float32)
-        max_budget = int(alb_lib.max_budget(n_tiles_local))
-    else:
-        base_speeds = np.ones((M,), np.float32)
-        max_budget = n_tiles_local
-
-    superstep_fn = make_superstep(config, axis_data=axis_data,
-                                  axis_model=axis_model,
-                                  n_tiles_local=n_tiles_local,
-                                  max_budget=max_budget)
-
-    state_specs = FitState(beta=feat_spec, xb=row_spec, mu=P(),
-                           cursor=feat_spec, step=P())
-    metric_spec = P()
-    mapped = jax.jit(compat.shard_map(
-        superstep_fn, mesh=mesh,
-        in_specs=(x_specs, row_spec, row_spec, feat_spec, state_specs),
-        out_specs=(state_specs, {k: metric_spec for k in
-                                 ("f", "f_before", "loss", "alpha", "mu",
-                                  "nnz", "accepted_unit", "D")}),
-        check_vma=False,
-    ))
-
-    state = FitState(
-        beta=jax.device_put(np.zeros((p_tot,), np.float32),
-                            NamedSharding(mesh, feat_spec)),
-        xb=jax.device_put(np.zeros((n_tot,), np.float32),
-                          NamedSharding(mesh, row_spec)),
-        mu=jnp.float32(config.mu_init),
-        cursor=jax.device_put(np.zeros((M,), np.int32),
-                              NamedSharding(mesh, feat_spec)),
-        step=jnp.int32(0),
-    )
-
-    history = {k: [] for k in ("f", "alpha", "mu", "nnz", "accepted_unit")}
-    f_prev, converged, it = np.inf, False, 0
-    start_it = 1
-    if ckpt_manager is not None and ckpt_manager.latest_step() is not None:
-        # elastic resume: cursors are per-feature-shard; when M changed,
-        # restart cursors at 0 (coverage guarantee unaffected)
-        saved, md = ckpt_manager.restore(
-            {"beta": state.beta, "xb": state.xb, "mu": state.mu},
-        )
-        if md.get("design_layout") != design_layout:
-            raise ValueError(
-                f"checkpoint design layout {md.get('design_layout')} does "
-                f"not match this fit's {design_layout}; the brick packing "
-                "depends on the mesh/tiling, so blocked-sparse checkpoints "
-                "resume only onto the same (D, M, tile, row_block) layout")
-        state = state._replace(beta=saved["beta"], xb=saved["xb"],
-                               mu=saved["mu"],
-                               step=jnp.int32(md["next_it"] - 1))
-        f_prev = md.get("f_prev", np.inf)
-        start_it = int(md["next_it"])
-    for it in range(start_it, config.max_outer + 1):
-        if config.alb:
-            budgets = alb_lib.alb_budgets(
-                alb_lib.sample_speeds(rng, base_speeds),
-                n_tiles_local, config.alb_kappa, max_budget)
-        else:
-            budgets = np.full((M,), n_tiles_local, np.int32)
-        budgets_dev = jax.device_put(budgets.astype(np.int32),
-                                     NamedSharding(mesh, feat_spec))
-        state, m = mapped(Xs, ys, masks, budgets_dev, state)
-        f = float(m["f"])
-        for k in history:
-            history[k].append(float(m[k]))
-        if verbose:
-            print(f"[dglmnet/{D}x{M}] it={it} f={f:.8f} "
-                  f"alpha={float(m['alpha']):.4f} nnz={int(m['nnz'])}")
-        if ckpt_manager is not None and it % ckpt_every == 0:
-            ckpt_manager.save(it, {"beta": state.beta, "xb": state.xb,
-                                   "mu": state.mu},
-                              metadata={"next_it": it + 1, "f_prev": f,
-                                        "design_layout": design_layout})
-        if np.isfinite(f_prev) and abs(f_prev - f) <= config.tol * max(1.0, abs(f)):
-            converged = True
-            break
-        f_prev = f
-    if ckpt_manager is not None:
-        ckpt_manager.wait()
-    beta_full = info.unpack_beta(np.asarray(state.beta))
-    return FitResult(beta_full, history, it, converged)
+    _warn_deprecated("fit_sharded")
+    from repro.core.solver import GLMSolver
+    solver = GLMSolver(X, y, config=config, mesh=mesh, axis_data=axis_data,
+                       axis_model=axis_model, speeds=speeds, seed=seed,
+                       row_block=row_block, reorder=reorder,
+                       design_info=design_info)
+    return solver.fit(verbose=verbose, ckpt_manager=ckpt_manager,
+                      ckpt_every=ckpt_every)

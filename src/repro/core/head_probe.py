@@ -39,12 +39,24 @@ def extract_features(apply_fn: Callable, params, token_batches,
     return np.concatenate(feats, axis=0)
 
 
+_SESSION_KWARGS = ("axis_data", "axis_model", "speeds", "seed", "row_block",
+                   "reorder", "design_info")
+
+
 def fit_probe(features, labels, config: DGLMNETConfig, *, mesh=None,
               **fit_kwargs) -> dglmnet.FitResult:
-    """Binary probe: labels in {-1, +1}. Features are the GLM design matrix."""
-    if mesh is None:
-        return dglmnet.fit(features, labels, config, **fit_kwargs)
-    return dglmnet.fit_sharded(features, labels, config, mesh, **fit_kwargs)
+    """Binary probe: labels in {-1, +1}. Features are the GLM design matrix.
+
+    Keyword args split between the GLMSolver session (sharding/ALB/packing)
+    and the fit itself (beta0, verbose, checkpointing) — the historical
+    one-shot surface forwarded both kinds.
+    """
+    from repro.core.solver import GLMSolver
+    session_kwargs = {k: fit_kwargs.pop(k) for k in _SESSION_KWARGS
+                      if k in fit_kwargs}
+    solver = GLMSolver(features, labels, config=config, mesh=mesh,
+                       **session_kwargs)
+    return solver.fit(**fit_kwargs)
 
 
 def fit_probe_multiclass(features, labels_int, n_classes: int,

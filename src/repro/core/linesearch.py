@@ -57,6 +57,9 @@ def search(y, xb, xdb, beta, dbeta, *, family, lam1, lam2, mu, nu,
 
     y, xb, xdb: (n_loc,) — labels, margins, margin delta (model-replicated).
     beta, dbeta: (p_loc,) local weight shards.
+    lam1, lam2: penalty weights — may be traced runtime scalars (the λ pair
+      is a superstep *argument*, not a compile-time constant, so one
+      compiled search serves a whole regularization path).
     mask: (n_loc,) example mask (padding rows 0) — candidate losses must use
       the same masking as f_current or the Armijo comparison is offset.
     f_current: f(β) (global scalar, already reduced).

@@ -1,0 +1,706 @@
+"""GLMSolver: session API for warm-started λ-path fitting (DESIGN.md §4).
+
+The paper's experiments — like every GLMNET-lineage solver — are run over a
+regularization *path* (λ_max → λ_min with warm starts), but the historical
+entry points (``dglmnet.fit`` / ``fit_sharded``) re-packed the design,
+re-placed it on the mesh and re-jitted the superstep on every call.  A
+``GLMSolver`` session does that setup exactly once:
+
+    solver = GLMSolver(X, y, family="logistic", mesh=mesh)
+    res  = solver.fit(lam1=1.0, lam2=0.1)        # one (λ1, λ2) point
+    path = solver.fit_path(n_lambdas=100)        # warm-started λ-path
+    yhat = solver.predict(X_test)
+
+Three mechanisms make this cheap:
+
+  * **λ as a runtime argument** — the superstep takes a (2,) ``[λ1, λ2]``
+    array (``dglmnet.make_superstep``), so one compiled superstep serves all
+    λs of a path and all subsequent ``fit`` calls on the session.
+  * **a module-level compiled-superstep cache** keyed on
+    (config-sans-λ, layout geometry, mesh axes) — even *separate* sessions
+    (e.g. repeated calls to the deprecated one-shot drivers) reuse the
+    compiled superstep instead of re-jitting.
+  * **active-set screening** — ``fit_path`` seeds each λ with the sequential
+    strong rule |Xᵀs(β_prev)|_j ≥ 2λ_k − λ_{k−1}, freezes cold coordinates
+    during the CD sweeps, and verifies the KKT conditions on the full
+    gradient afterwards (re-fitting with violators added, so the screen can
+    never change the solution).
+
+``lambda_max(X, y, family)`` gives the smallest λ1 for which β = 0 is
+optimal — by the KKT conditions of the elastic-net problem, β = 0 iff
+λ1 ≥ ‖Xᵀ s(0)‖_∞ where s(0) is the negative margin-gradient at β = 0 (the
+ridge term has zero gradient at 0, so λ2 does not enter).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core import dglmnet, glm
+from repro.core.dglmnet import DGLMNETConfig, FitResult, FitState
+from repro.data import design as design_lib
+from repro.data.design import BlockSparseDesign, SparseCOO
+from repro.kernels import ops
+from repro.sharding import compat
+
+_METRIC_KEYS = ("f", "f_before", "loss", "alpha", "mu", "nnz",
+                "accepted_unit", "D")
+_HISTORY_KEYS = ("f", "alpha", "mu", "nnz", "accepted_unit")
+
+
+# ---------------------------------------------------------------------------
+# compiled-superstep cache (fixes the historical re-jit-per-fit cost)
+# ---------------------------------------------------------------------------
+
+_SUPERSTEP_CACHE: "collections.OrderedDict[tuple, object]" = \
+    collections.OrderedDict()
+_TRACE_COUNTS: "collections.Counter[tuple]" = collections.Counter()
+_CACHE_CAP = 32
+
+
+def _config_key(config: DGLMNETConfig) -> tuple:
+    """The config fields the superstep trace actually reads — λ, outer-loop
+    and host-side knobs (mu_init, alb, max_outer, tol) are excluded so fits
+    differing only in those share one compiled superstep."""
+    return (config.family, config.adaptive_mu, config.eta1, config.eta2,
+            config.nu, config.sigma, config.backtrack_b, config.gamma,
+            config.ls_delta, config.ls_grid_size, config.max_backtracks,
+            config.tile_size, config.coupling, config.kernel_backend,
+            config.compress_margin)
+
+
+def _cached_superstep(key: tuple, build):
+    fn = _SUPERSTEP_CACHE.get(key)
+    if fn is None:
+        fn = build()
+        _SUPERSTEP_CACHE[key] = fn
+        while len(_SUPERSTEP_CACHE) > _CACHE_CAP:
+            _SUPERSTEP_CACHE.popitem(last=False)
+    else:
+        _SUPERSTEP_CACHE.move_to_end(key)
+    return fn
+
+
+def clear_superstep_cache():
+    """Drop all cached compiled supersteps (tests / memory pressure)."""
+    _SUPERSTEP_CACHE.clear()
+
+
+# ---------------------------------------------------------------------------
+# λ_max utility
+# ---------------------------------------------------------------------------
+
+def lambda_max(X, y, family: str = "logistic") -> float:
+    """Smallest λ1 for which β = 0 solves the elastic-net GLM problem.
+
+    KKT at β = 0: 0 ∈ ∂f(0) ⇔ |[Xᵀ s(0)]_j| ≤ λ1 for all j, where
+    s(0) = -∂l/∂m at zero margins, so λ_max = ‖Xᵀ s(0)‖_∞.  Host-side
+    utility over raw inputs (dense array or SparseCOO); sessions use the
+    placed design via ``GLMSolver.lambda_max``.
+    """
+    fam = glm.get_family(family)
+    y = np.asarray(y, np.float32)
+    _, s0, _ = fam.stats(jnp.asarray(y), jnp.zeros((y.shape[0],), jnp.float32))
+    s0 = np.asarray(s0)
+    if isinstance(X, SparseCOO):
+        g = X.rmatvec(s0)
+    else:
+        g = np.asarray(X, np.float32).T @ s0
+    return float(np.abs(g).max())
+
+
+# ---------------------------------------------------------------------------
+# path result container
+# ---------------------------------------------------------------------------
+
+class PathResult(NamedTuple):
+    lambdas: np.ndarray     # (K,) λ1 grid in fit order (decreasing)
+    lam2: float             # shared ridge weight
+    betas: np.ndarray       # (K, p) solutions in original feature order
+    f: np.ndarray           # (K,) final objective per λ
+    nnz: np.ndarray         # (K,) int — support size per λ
+    n_iters: np.ndarray     # (K,) supersteps spent per λ
+    converged: np.ndarray   # (K,) bool
+
+    def beta_at(self, lam1: float) -> np.ndarray:
+        """Solution at the grid point closest to ``lam1``."""
+        return self.betas[int(np.abs(self.lambdas - lam1).argmin())]
+
+
+# ---------------------------------------------------------------------------
+# the session
+# ---------------------------------------------------------------------------
+
+class GLMSolver:
+    """Reusable solver session over one placed (X, y).
+
+    Construction does the expensive, λ-independent work exactly once:
+    design packing (dense padding or CSR-of-bricks), device placement over
+    the optional (data × model) mesh, and superstep compilation (shared via
+    the module-level cache).  ``fit`` / ``fit_path`` then only run the outer
+    loop; ``predict`` / ``score`` evaluate the last (or a given) solution.
+
+    Args mirror the historical ``fit_sharded`` driver: ``mesh=None`` is the
+    single-device reference path; with a mesh, rows shard over ``axis_data``
+    and features over ``axis_model``; ``speeds``/``seed`` drive ALB
+    straggler simulation; ``row_block``/``reorder`` the sparse brick
+    packing; ``design_info`` accompanies a pre-built design.
+    """
+
+    def __init__(self, X, y, *, family: Optional[str] = None,
+                 config: Optional[DGLMNETConfig] = None, mesh=None,
+                 axis_data: Optional[str] = "data", axis_model: str = "model",
+                 speeds=None, seed: int = 0,
+                 row_block: int = 256, reorder: bool = True,
+                 design_info=None):
+        config = DGLMNETConfig() if config is None else config
+        if family is not None and family != config.family:
+            config = dataclasses.replace(config, family=family)
+        self.config = config
+        self.mesh = mesh
+        self.axis_data = axis_data if mesh is not None else None
+        self.axis_model = axis_model if mesh is not None else None
+        self._rng = np.random.default_rng(seed)
+        self.beta_: Optional[np.ndarray] = None
+        self._state: Optional[FitState] = None
+        self._lmax: Optional[float] = None
+        self._matvec_fn = None
+        self._grad_fn = None
+
+        y = np.asarray(y, np.float32)
+        n = y.shape[0]
+        T = config.tile_size
+
+        if mesh is None:
+            design, info = design_lib.as_design(
+                X, T, row_block=row_block, reorder=reorder, info=design_info)
+            self._info = info
+            n_rows, p_pad = design.shape
+            self._n_tot, self._p_tot = n_rows, p_pad
+            self._n_tiles_local = design.n_tiles
+            self._max_budget = design.n_tiles
+            self._D = self._M = 1
+            self._Xs = design
+            self._ys = jnp.asarray(np.pad(y, (0, n_rows - n),
+                                          constant_values=1.0))
+            self._masks = jnp.asarray(np.pad(np.ones((n,), np.float32),
+                                             (0, n_rows - n)))
+            self._budget_const = jnp.full((1,), design.n_tiles, jnp.int32)
+            self._base_speeds = None
+            if isinstance(design, BlockSparseDesign):
+                self._design_layout = {
+                    "kind": "bricks", "D": 1, "M": 1, "tile": T,
+                    "row_block": design.row_block, "reorder": bool(reorder)}
+                layout_key = ("bricks", T, design.row_block, design.n_rows,
+                              design.n_tiles, design.max_bricks_per_tile)
+            else:
+                self._design_layout = None
+                layout_key = ("dense",)
+            self._x_specs = self._row_spec = self._feat_spec = None
+            self._state_specs = None
+        else:
+            D = mesh.shape[axis_data] if axis_data else 1
+            M = mesh.shape[axis_model]
+            self._D, self._M = D, M
+            self._row_spec = P(axis_data)
+            self._feat_spec = P(axis_model)
+
+            if isinstance(X, (SparseCOO, BlockSparseDesign)):
+                if isinstance(X, SparseCOO):
+                    design_g, info = design_lib.build_block_sparse_sharded(
+                        X, D=D, M=M, tile_size=T, row_block=row_block,
+                        reorder=reorder)
+                else:
+                    if X.leading != 2 or X.tile_size != T:
+                        raise ValueError(
+                            "pre-built BlockSparseDesign must carry (D, M) "
+                            "leading axes and match tile_size")
+                    if design_info is None:
+                        raise ValueError(
+                            "pre-built BlockSparseDesign requires the "
+                            "DesignInfo returned by "
+                            "build_block_sparse_sharded (pass "
+                            "design_info=...); the brick layout reorders "
+                            "columns and beta must be unpacked with it")
+                    design_g, info = X, design_info
+                n_loc, p_loc = design_g.shape          # per-shard (static)
+                n_tot, p_tot = D * n_loc, M * p_loc
+                self._x_specs = design_g.partition_specs(axis_data,
+                                                         axis_model)
+                self._Xs = jax.tree.map(
+                    lambda a, s: jax.device_put(a, NamedSharding(mesh, s)),
+                    design_g, self._x_specs)
+                # brick column packing + row padding are functions of
+                # (D, M, T, rb): checkpoints record this layout so a resume
+                # onto a different mesh fails loudly instead of continuing
+                # from a permuted iterate
+                self._design_layout = {
+                    "kind": "bricks", "D": D, "M": M, "tile": T,
+                    "row_block": design_g.row_block, "reorder": bool(reorder)}
+                layout_key = ("bricks", T, design_g.row_block,
+                              design_g.n_rows, design_g.n_tiles,
+                              design_g.max_bricks_per_tile)
+            else:
+                X = np.asarray(X, np.float32)
+                _, p = X.shape
+                info = design_lib.DesignInfo(shape=(n, p))
+                # pad rows to D, features to M*T multiples
+                Xp = np.pad(X, ((0, (-n) % D), (0, (-p) % (M * T))))
+                n_tot, p_tot = Xp.shape
+                p_loc = p_tot // M
+                self._x_specs = P(axis_data, axis_model)
+                self._Xs = jax.device_put(Xp, NamedSharding(mesh,
+                                                            self._x_specs))
+                self._design_layout = None  # dense layout is mesh-invariant
+                layout_key = ("dense",)
+            self._info = info
+            self._n_tot, self._p_tot = n_tot, p_tot
+            self._n_tiles_local = p_loc // T
+
+            yp = np.pad(y, (0, n_tot - n), constant_values=1.0)
+            maskp = np.pad(np.ones((n,), np.float32), (0, n_tot - n))
+            self._ys = jax.device_put(yp, NamedSharding(mesh, self._row_spec))
+            self._masks = jax.device_put(maskp,
+                                         NamedSharding(mesh, self._row_spec))
+
+            # ALB budgets: fraction-κ completion rule (paper Section 7)
+            from repro.core import alb as alb_lib
+            if config.alb:
+                self._base_speeds = (np.asarray(speeds, np.float32)
+                                     if speeds is not None
+                                     else np.ones((M,), np.float32))
+                self._max_budget = int(alb_lib.max_budget(
+                    self._n_tiles_local))
+            else:
+                self._base_speeds = None
+                self._max_budget = self._n_tiles_local
+                self._budget_const = jax.device_put(
+                    np.full((M,), self._n_tiles_local, np.int32),
+                    NamedSharding(mesh, self._feat_spec))
+
+            self._state_specs = FitState(beta=self._feat_spec,
+                                         xb=self._row_spec, mu=P(),
+                                         cursor=self._feat_spec, step=P())
+
+        self._active_ones = self._place_feat(
+            np.ones((self._p_tot,), np.float32))
+        mesh_key = None if mesh is None else \
+            (tuple(mesh.devices.flat), tuple(mesh.axis_names),
+             self.axis_data, self.axis_model)
+        self._key = (_config_key(config), self._n_tiles_local,
+                     self._max_budget, layout_key, mesh_key)
+        self._superstep = _cached_superstep(self._key, self._build_superstep)
+
+    # -------------------------------------------------------------- infra
+
+    @property
+    def compile_count(self) -> int:
+        """Trace count of this session's compiled superstep (one per
+        compilation; shared with other sessions on the same cache key —
+        tests assert the DELTA across a whole λ-path is ≤ 1)."""
+        return _TRACE_COUNTS[self._key]
+
+    @property
+    def info(self):
+        return self._info
+
+    def _place_feat(self, arr):
+        if self.mesh is None:
+            return jnp.asarray(arr)
+        return jax.device_put(np.asarray(arr),
+                              NamedSharding(self.mesh, self._feat_spec))
+
+    def _place_row(self, arr):
+        if self.mesh is None:
+            return jnp.asarray(arr)
+        return jax.device_put(np.asarray(arr),
+                              NamedSharding(self.mesh, self._row_spec))
+
+    def _build_superstep(self):
+        key = self._key
+        raw = dglmnet.make_superstep(
+            self.config, axis_data=self.axis_data, axis_model=self.axis_model,
+            n_tiles_local=self._n_tiles_local, max_budget=self._max_budget)
+
+        def counted(X, y, mask, budget, lams, active, state):
+            _TRACE_COUNTS[key] += 1       # runs at trace time only
+            return raw(X, y, mask, budget, lams, active, state)
+
+        if self.mesh is None:
+            return jax.jit(counted)
+        return jax.jit(compat.shard_map(
+            counted, mesh=self.mesh,
+            in_specs=(self._x_specs, self._row_spec, self._row_spec,
+                      self._feat_spec, P(), self._feat_spec,
+                      self._state_specs),
+            out_specs=(self._state_specs, {k: P() for k in _METRIC_KEYS}),
+            check_vma=False,
+        ))
+
+    def _matvec(self, beta_dev):
+        """Xβ over the placed design (warm starts from a host β)."""
+        if self._matvec_fn is None:
+            T = self.config.tile_size
+            ax_m = self.axis_model
+
+            def mv(X, v):
+                design = design_lib.as_local_design(X, T)
+                xb = design.matvec(v)
+                return jax.lax.psum(xb, ax_m) if ax_m is not None else xb
+
+            if self.mesh is None:
+                self._matvec_fn = jax.jit(mv)
+            else:
+                self._matvec_fn = jax.jit(compat.shard_map(
+                    mv, mesh=self.mesh,
+                    in_specs=(self._x_specs, self._feat_spec),
+                    out_specs=self._row_spec, check_vma=False))
+        return self._matvec_fn(self._Xs, beta_dev)
+
+    def _grad(self, xb_dev):
+        """g = Xᵀ s(β) in packed column order (λ_max / screening / KKT).
+
+        ``s`` is the negative margin-gradient at the margins ``xb_dev``, so
+        the KKT condition for a zero coordinate is |g_j| ≤ λ1.
+        """
+        if self._grad_fn is None:
+            T = self.config.tile_size
+            fam = self.config.family
+            backend = self.config.kernel_backend
+            ax_d = self.axis_data
+
+            def grad(X, y, mask, xb):
+                design = design_lib.as_local_design(X, T)
+                _, s, _ = ops.glm_stats(y, xb, fam, mask=mask,
+                                        backend=backend)
+                g = design.rmatvec(s)
+                return jax.lax.psum(g, ax_d) if ax_d is not None else g
+
+            if self.mesh is None:
+                self._grad_fn = jax.jit(grad)
+            else:
+                self._grad_fn = jax.jit(compat.shard_map(
+                    grad, mesh=self.mesh,
+                    in_specs=(self._x_specs, self._row_spec, self._row_spec,
+                              self._row_spec),
+                    out_specs=self._feat_spec, check_vma=False))
+        return np.asarray(self._grad_fn(self._Xs, self._ys, self._masks,
+                                        xb_dev))
+
+    def _init_state(self, beta0=None) -> FitState:
+        cfg = self.config
+        if beta0 is not None:
+            packed = self._info.pack_beta(np.asarray(beta0, np.float32),
+                                          self._p_tot)
+            beta = self._place_feat(packed)
+            xb = self._matvec(beta)
+        else:
+            beta = self._place_feat(np.zeros((self._p_tot,), np.float32))
+            xb = self._place_row(np.zeros((self._n_tot,), np.float32))
+        cursor = jnp.zeros((1,), jnp.int32) if self.mesh is None else \
+            jax.device_put(np.zeros((self._M,), np.int32),
+                           NamedSharding(self.mesh, self._feat_spec))
+        return FitState(beta=beta, xb=xb, mu=jnp.float32(cfg.mu_init),
+                        cursor=cursor, step=jnp.int32(0))
+
+    def _budgets(self):
+        if self._base_speeds is None:
+            return self._budget_const
+        from repro.core import alb as alb_lib
+        budgets = alb_lib.alb_budgets(
+            alb_lib.sample_speeds(self._rng, self._base_speeds),
+            self._n_tiles_local, self.config.alb_kappa, self._max_budget)
+        return jax.device_put(budgets.astype(np.int32),
+                              NamedSharding(self.mesh, self._feat_spec))
+
+    # ---------------------------------------------------------- outer loop
+
+    def _run(self, state: FitState, lam1: float, lam2: float, *,
+             active=None, max_outer=None, tol=None, verbose=False,
+             ckpt_manager=None, ckpt_every: int = 10):
+        """Drive supersteps at fixed (λ1, λ2) until the objective plateaus.
+
+        Returns (state, history, n_iter, converged).  ``active`` is a host
+        (p_tot,) 0/1 mask in packed column order (None = all coordinates).
+        """
+        cfg = self.config
+        max_outer = cfg.max_outer if max_outer is None else int(max_outer)
+        tol = cfg.tol if tol is None else float(tol)
+        lams = jnp.asarray([lam1, lam2], jnp.float32)
+        active_dev = self._active_ones if active is None else \
+            self._place_feat(np.asarray(active, np.float32))
+
+        history = {k: [] for k in _HISTORY_KEYS}
+        f_prev, converged, it = np.inf, False, 0
+        start_it = 1
+        if ckpt_manager is not None and ckpt_manager.latest_step() is not None:
+            # elastic resume: cursors are per-feature-shard; when M changed,
+            # restart cursors at 0 (coverage guarantee unaffected)
+            md = ckpt_manager.read_metadata()
+            if "next_it" not in md:
+                raise ValueError(
+                    "checkpoint was written by fit_path (path state), not a "
+                    "single fit; resume it with fit_path(ckpt_manager=...)")
+            self._check_layout(md)
+            saved, _ = ckpt_manager.restore(
+                {"beta": state.beta, "xb": state.xb, "mu": state.mu})
+            state = state._replace(beta=saved["beta"], xb=saved["xb"],
+                                   mu=saved["mu"],
+                                   step=jnp.int32(md["next_it"] - 1))
+            f_prev = md.get("f_prev", np.inf)
+            start_it = int(md["next_it"])
+        for it in range(start_it, max_outer + 1):
+            state, m = self._superstep(self._Xs, self._ys, self._masks,
+                                       self._budgets(), lams, active_dev,
+                                       state)
+            f = float(m["f"])
+            for k in history:
+                history[k].append(float(m[k]))
+            if verbose:
+                tag = "dglmnet" if self.mesh is None else \
+                    f"dglmnet/{self._D}x{self._M}"
+                print(f"[{tag}] it={it} f={f:.8f} "
+                      f"alpha={float(m['alpha']):.4f} "
+                      f"mu={float(m['mu']):.3f} nnz={int(m['nnz'])}")
+            if ckpt_manager is not None and it % ckpt_every == 0:
+                ckpt_manager.save(it, {"beta": state.beta, "xb": state.xb,
+                                       "mu": state.mu},
+                                  metadata={"next_it": it + 1, "f_prev": f,
+                                            "design_layout":
+                                                self._design_layout})
+            if np.isfinite(f_prev) and \
+                    abs(f_prev - f) <= tol * max(1.0, abs(f)):
+                converged = True
+                break
+            f_prev = f
+        if ckpt_manager is not None:
+            ckpt_manager.wait()
+        return state, history, it, converged
+
+    def _check_layout(self, md):
+        if md.get("design_layout") != self._design_layout:
+            raise ValueError(
+                f"checkpoint design layout {md.get('design_layout')} does "
+                f"not match this fit's {self._design_layout}; the brick "
+                "packing depends on the mesh/tiling, so blocked-sparse "
+                "checkpoints resume only onto the same "
+                "(D, M, tile, row_block) layout")
+
+    # ------------------------------------------------------------- fitting
+
+    def fit(self, lam1: Optional[float] = None, lam2: Optional[float] = None,
+            *, beta0=None, max_outer=None, tol=None, verbose=False,
+            ckpt_manager=None, ckpt_every: int = 10) -> FitResult:
+        """Fit one (λ1, λ2) point; defaults come from the session config.
+
+        ``beta0`` warm-starts from a host β in ORIGINAL feature order (the
+        margins are recomputed through the placed design).  Checkpointing
+        matches the historical driver: superstep-boundary saves of
+        (β, Xβ, μ), elastic resume onto this session's mesh.
+        """
+        cfg = self.config
+        lam1 = cfg.lam1 if lam1 is None else float(lam1)
+        lam2 = cfg.lam2 if lam2 is None else float(lam2)
+        state = self._init_state(beta0)
+        state, history, n_iter, converged = self._run(
+            state, lam1, lam2, max_outer=max_outer, tol=tol, verbose=verbose,
+            ckpt_manager=ckpt_manager, ckpt_every=ckpt_every)
+        self._state = state
+        self.beta_ = self._info.unpack_beta(np.asarray(state.beta))
+        return FitResult(self.beta_, history, n_iter, converged)
+
+    def lambda_max(self) -> float:
+        """‖Xᵀ s(0)‖_∞ over the placed design (see module docstring)."""
+        if self._lmax is None:
+            xb0 = self._place_row(np.zeros((self._n_tot,), np.float32))
+            self._lmax = float(np.abs(self._grad(xb0)).max())
+        return self._lmax
+
+    def fit_path(self, lambdas=None, *, n_lambdas: int = 100,
+                 lam_ratio: float = 1e-3, lam2: Optional[float] = None,
+                 screen: bool = True, kkt_slack: float = 1e-4,
+                 max_outer=None, tol=None, verbose=False,
+                 ckpt_manager=None) -> PathResult:
+        """Warm-started fit over a decreasing λ1 grid.
+
+        ``lambdas=None`` builds the standard GLMNET grid: ``n_lambdas``
+        log-spaced points from λ_max = ‖Xᵀ s(0)‖_∞ down to
+        λ_max·``lam_ratio``.  Each λ warm-starts from the previous solution
+        (β and the maintained margins Xβ stay on device); ``screen=True``
+        freezes strong-rule-cold coordinates during the sweeps and verifies
+        the KKT conditions on the full gradient afterwards, re-fitting with
+        any violators unfrozen, so screening never changes the solution.
+
+        ``ckpt_manager`` extends checkpointing to path state: after each λ
+        the warm (β, Xβ, μ) plus the per-λ results so far are saved, and a
+        later call with the same grid resumes mid-grid.
+        """
+        cfg = self.config
+        lam2 = cfg.lam2 if lam2 is None else float(lam2)
+        if lambdas is None:
+            lmax = self.lambda_max()
+            lambdas = np.logspace(np.log10(lmax),
+                                  np.log10(lmax * lam_ratio), n_lambdas)
+        lambdas = np.asarray(lambdas, np.float64)
+        if len(lambdas) > 1 and not np.all(np.diff(lambdas) < 0):
+            raise ValueError("fit_path expects a strictly decreasing λ1 "
+                             "grid (warm starts go dense-ward)")
+        K = len(lambdas)
+
+        state = self._init_state(None)
+        betas_packed = np.zeros((K, self._p_tot), np.float32)
+        f = np.full((K,), np.nan)
+        nnz = np.zeros((K,), np.int64)
+        n_iters = np.zeros((K,), np.int64)
+        converged = np.zeros((K,), bool)
+        start_k = 0
+
+        if ckpt_manager is not None and ckpt_manager.latest_step() is not None:
+            md = ckpt_manager.read_metadata()
+            if "path" not in md:
+                raise ValueError(
+                    "checkpoint was written by a single fit, not fit_path; "
+                    "resume it with fit(ckpt_manager=...)")
+            self._check_layout(md)
+            saved, _ = ckpt_manager.restore(
+                {"beta": state.beta, "xb": state.xb, "mu": state.mu,
+                 "path_betas": betas_packed})
+            pmd = md["path"]
+            start_k = int(pmd["next_k"])
+            saved_grid = np.asarray(pmd["lambdas"], np.float64)
+            # the COMPLETED prefix must coincide (a longer tail is fine —
+            # that is exactly the interrupted-mid-grid resume case)
+            if start_k > K or float(pmd["lam2"]) != lam2 or \
+                    not np.allclose(saved_grid[:start_k], lambdas[:start_k]):
+                raise ValueError(
+                    "path checkpoint was written for a different λ grid; "
+                    "pass the same lambdas/lam2 to resume")
+            state = state._replace(beta=saved["beta"], xb=saved["xb"],
+                                   mu=saved["mu"])
+            saved_betas = np.asarray(saved["path_betas"])
+            betas_packed[:start_k] = saved_betas[:start_k]
+            for name, arr in (("f", f), ("nnz", nnz),
+                              ("n_iters", n_iters), ("converged", converged)):
+                arr[:start_k] = np.asarray(pmd[name])[:start_k]
+
+        lam_prev = float(lambdas[start_k - 1]) if start_k else None
+        g_warm = None           # gradient at the warm iterate, if known
+        for k in range(start_k, K):
+            lam1 = float(lambdas[k])
+            # fresh trust region per λ; warm β / margins carry over
+            state = state._replace(mu=jnp.float32(cfg.mu_init),
+                                   step=jnp.int32(0))
+            if screen:
+                # sequential strong rule (Tibshirani et al. 2012):
+                # |g_j| = |[Xᵀ s(β_{k-1})]_j| ≥ 2λ_k − λ_{k-1} — plus every
+                # currently-active coordinate; the previous λ's final KKT
+                # gradient IS the gradient at this warm iterate, so reuse it
+                g = self._grad(state.xb) if g_warm is None else g_warm
+                thresh = 2.0 * lam1 - (lam_prev if lam_prev is not None
+                                       else lam1)
+                active = (np.abs(g) >= thresh - 1e-12) | \
+                    (np.asarray(state.beta) != 0.0)
+                it_k = 0
+                for _ in range(8):
+                    state, hist, it_round, conv_k = self._run(
+                        state, lam1, lam2, active=active,
+                        max_outer=max_outer, tol=tol, verbose=verbose)
+                    it_k += it_round
+                    # KKT post-check on the FULL gradient: a screened-out
+                    # coordinate (β_j = 0) is truly optimal iff |g_j| ≤ λ1
+                    g = self._grad(state.xb)
+                    viol = (~active) & (np.abs(g) >
+                                        lam1 * (1.0 + kkt_slack) + 1e-7)
+                    if not viol.any():
+                        break
+                    active |= viol
+                g_warm = g
+            else:
+                state, hist, it_k, conv_k = self._run(
+                    state, lam1, lam2, max_outer=max_outer, tol=tol,
+                    verbose=verbose)
+            betas_packed[k] = np.asarray(state.beta)
+            if hist["f"]:
+                f[k] = hist["f"][-1]
+                nnz[k] = int(hist["nnz"][-1])
+            n_iters[k] = it_k
+            converged[k] = conv_k
+            lam_prev = lam1
+            if verbose:
+                print(f"[path {k + 1}/{K}] lam1={lam1:.6g} f={f[k]:.8f} "
+                      f"nnz={nnz[k]} iters={it_k}")
+            if ckpt_manager is not None:
+                ckpt_manager.save(
+                    k + 1,
+                    {"beta": state.beta, "xb": state.xb, "mu": state.mu,
+                     "path_betas": betas_packed},
+                    metadata={"design_layout": self._design_layout,
+                              "path": {"next_k": k + 1,
+                                       "lambdas": lambdas.tolist(),
+                                       "lam2": lam2,
+                                       "f": f[:k + 1].tolist(),
+                                       "nnz": nnz[:k + 1].tolist(),
+                                       "n_iters": n_iters[:k + 1].tolist(),
+                                       "converged":
+                                           converged[:k + 1].tolist()}})
+        if ckpt_manager is not None:
+            ckpt_manager.wait()
+
+        self._state = state
+        p = self._info.shape[1]
+        betas = np.stack([self._info.unpack_beta(b) for b in betas_packed]) \
+            if K else np.zeros((0, p), np.float32)
+        if K:
+            self.beta_ = betas[-1]
+        return PathResult(lambdas, lam2, betas, f, nnz, n_iters, converged)
+
+    # ---------------------------------------------------------- evaluation
+
+    def _margins(self, X_new, beta):
+        if isinstance(X_new, SparseCOO):
+            return X_new.matvec(beta)
+        return np.asarray(X_new, np.float32) @ beta
+
+    def predict(self, X_new, *, beta=None, kind: str = "response"):
+        """Predict on new rows with the last fitted β (or a given one).
+
+        ``kind="link"`` returns raw margins Xβ; ``"response"`` applies the
+        family's inverse link (probabilities for logistic/probit, means for
+        squared/poisson).
+        """
+        beta = self.beta_ if beta is None else np.asarray(beta, np.float32)
+        if beta is None:
+            raise ValueError("no fitted coefficients; call fit/fit_path "
+                             "first or pass beta=...")
+        m = self._margins(X_new, beta)
+        if kind == "link":
+            return m
+        if kind != "response":
+            raise ValueError(f"unknown kind {kind!r}; use 'link' or "
+                             "'response'")
+        fam = glm.get_family(self.config.family)
+        return np.asarray(fam.predict(jnp.asarray(m)))
+
+    def score(self, X_new, y_new, *, beta=None) -> float:
+        """Family-appropriate goodness of fit on held-out rows: accuracy
+        for the binary families (labels in {-1, +1}), R² for squared loss,
+        and mean negative loss (higher is better) for poisson."""
+        y_new = np.asarray(y_new, np.float32)
+        beta = self.beta_ if beta is None else np.asarray(beta, np.float32)
+        m = self._margins(X_new, beta)
+        family = self.config.family
+        if family in ("logistic", "probit"):
+            return float(((m > 0) == (y_new > 0)).mean())
+        if family == "squared":
+            ss_res = float(np.sum((y_new - m) ** 2))
+            ss_tot = float(np.sum((y_new - y_new.mean()) ** 2))
+            return 1.0 - ss_res / max(ss_tot, 1e-30)
+        fam = glm.get_family(family)
+        loss = np.asarray(fam.stats(jnp.asarray(y_new), jnp.asarray(m))[0])
+        return float(-loss.mean())

@@ -80,6 +80,12 @@ class DesignMatrix:
         """X @ v → (n_rows,) over the whole local feature block."""
         raise NotImplementedError
 
+    def rmatvec(self, r):
+        """Xᵀ @ r → (n_tiles * T,) in packed column order.  Local partial —
+        caller psums over the data axis.  Powers λ_max and the λ-path
+        KKT/strong-rule screening (solver.py)."""
+        raise NotImplementedError
+
     def to_dense(self):
         """Materialize the local block (tests/debugging only)."""
         raise NotImplementedError
@@ -140,6 +146,9 @@ class DenseDesign(DesignMatrix):
 
     def matvec(self, v):
         return self.data @ v
+
+    def rmatvec(self, r):
+        return self.data.T @ r
 
     def to_dense(self):
         return self.data
@@ -263,6 +272,13 @@ class BlockSparseDesign(DesignMatrix):
         out2 = jax.ops.segment_sum(contrib, self.brick_row,
                                    num_segments=self.n_row_blocks)
         return out2.reshape(-1)
+
+    def rmatvec(self, r):
+        r2 = r.reshape(self.n_row_blocks, self.row_block)
+        contrib = jnp.einsum("kit,ki->kt", self.bricks, r2[self.brick_row])
+        out = jax.ops.segment_sum(contrib, self.brick_tile,
+                                  num_segments=self._n_tiles)
+        return out.reshape(-1)
 
     def to_dense(self):
         rb, T = self.row_block, self.tile_size

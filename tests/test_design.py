@@ -190,3 +190,17 @@ def test_prebuilt_design_requires_and_uses_info(rng):
     r_coo = dglmnet.fit(coo, y, cfg)
     np.testing.assert_allclose(r_pre.beta, r_coo.beta, atol=1e-6)
     assert r_pre.beta.shape == (coo.shape[1],)
+
+
+def test_rmatvec_matches_dense_math(rng):
+    """Xᵀr through the operator interface (λ_max / KKT screening path)."""
+    coo = _rand_coo(rng, n=100, p=70, nnz=600)
+    design, info = build_block_sparse(coo, 16, row_block=32)
+    dense = _packed_dense(coo, design, info)
+    n_rows, p_pad = design.shape
+    r = rng.normal(size=n_rows).astype(np.float32)
+    np.testing.assert_allclose(np.asarray(design.rmatvec(jnp.asarray(r))),
+                               dense.T @ r, rtol=1e-4, atol=1e-4)
+    dd, _ = design_lib.as_design(dense, 16)
+    np.testing.assert_allclose(np.asarray(dd.rmatvec(jnp.asarray(r))),
+                               dense.T @ r, rtol=1e-4, atol=1e-4)

@@ -114,3 +114,20 @@ def test_head_probe_single_device():
     p = np.asarray(head_probe.predict_proba(ds.test.X, res.beta))
     acc = ((p > 0.5) == (ds.test.y > 0)).mean()
     assert acc > 0.8, acc
+
+
+def test_fit_path_single_lambda_matches_cold_fit():
+    """A fit_path evaluated at any single λ equals a cold fit at that λ
+    (warm starts + screening must not change the solution)."""
+    from repro.core.solver import GLMSolver
+    ds = synthetic.make_dense(n=400, p=64, seed=10)
+    X, y = ds.train.X, ds.train.y
+    cfg = DGLMNETConfig(tile_size=16, max_outer=150, tol=1e-12)
+    s = GLMSolver(X, y, config=cfg)
+    path = s.fit_path(n_lambdas=5, lam_ratio=1e-2)
+    for k in (1, 4):
+        lam1 = float(path.lambdas[k])
+        cold = s.fit(lam1=lam1, lam2=0.0)
+        f_cold = _obj("logistic", X, y, cold.beta, lam1, 0.0)
+        f_warm = _obj("logistic", X, y, path.betas[k], lam1, 0.0)
+        assert f_warm <= f_cold + 1e-5 * max(1.0, abs(f_cold)), (k, f_warm)

@@ -1,0 +1,291 @@
+"""GLMSolver session API: warm-started λ-path fitting over a reusable
+design (DESIGN.md §4) — λ_max KKT characterization, warm-start correctness
+vs cold fits (dense and SparseCOO), compile-once behaviour across a path and
+across repeated fits, active-set screening exactness, path checkpointing,
+predict/score, and the deprecation shims."""
+import warnings
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import dglmnet, glm, solver
+from repro.core.dglmnet import DGLMNETConfig
+from repro.core.solver import GLMSolver, PathResult, lambda_max
+from repro.data import synthetic
+
+
+def _obj(family, X, y, beta, lam1, lam2):
+    return float(glm.objective(glm.get_family(family), jnp.asarray(y),
+                               jnp.asarray(X), jnp.asarray(beta),
+                               lam1, lam2))
+
+
+def _obj_sparse(X, y, beta, lam1, lam2):
+    return float(glm.negloglik(glm.LOGISTIC, jnp.asarray(y),
+                               jnp.asarray(X.matvec(beta)))
+                 + glm.penalty(jnp.asarray(beta), lam1, lam2))
+
+
+# ---------------------------------------------------------------------------
+# λ_max (KKT characterization of the all-zero solution)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("family", ["logistic", "squared", "poisson"])
+def test_lambda_max_closed_form(family):
+    """λ_max = ‖Xᵀ s(0)‖_∞, with s(0) the negative margin-gradient at 0."""
+    ds = synthetic.make_dense(n=200, p=40, family=family, seed=1)
+    X, y = ds.train.X, ds.train.y
+    fam = glm.get_family(family)
+    _, s0, _ = fam.stats(jnp.asarray(y), jnp.zeros((len(y),), jnp.float32))
+    expect = float(np.abs(X.T @ np.asarray(s0)).max())
+    assert lambda_max(X, y, family) == pytest.approx(expect, rel=1e-6)
+    s = GLMSolver(X, y, family=family,
+                  config=DGLMNETConfig(family=family, tile_size=16))
+    assert s.lambda_max() == pytest.approx(expect, rel=1e-5)
+
+
+def test_lambda_max_is_kkt_threshold():
+    """β=0 is optimal iff λ1 ≥ λ_max: fitting exactly at λ_max gives the
+    all-zero solution; a point 10% below gives a non-empty support."""
+    ds = synthetic.make_dense(n=300, p=50, seed=2)
+    X, y = ds.train.X, ds.train.y
+    lmax = lambda_max(X, y, "logistic")
+    s = GLMSolver(X, y, config=DGLMNETConfig(tile_size=16, max_outer=60,
+                                             tol=1e-12))
+    assert (s.fit(lam1=lmax * 1.0001, lam2=0.0).beta == 0).all()
+    assert (s.fit(lam1=lmax * 0.9, lam2=0.0).beta != 0).any()
+
+
+def test_lambda_max_sparse_input():
+    ds = synthetic.make_sparse(n=300, p=200, avg_nnz=12, seed=3)
+    X, y = ds.train.X, ds.train.y
+    expect = float(np.abs(X.to_dense().T @ np.asarray(
+        glm.LOGISTIC.stats(jnp.asarray(y),
+                           jnp.zeros((len(y),), jnp.float32))[1])).max())
+    assert lambda_max(X, y, "logistic") == pytest.approx(expect, rel=1e-6)
+    s = GLMSolver(X, y, config=DGLMNETConfig(tile_size=16))
+    assert s.lambda_max() == pytest.approx(expect, rel=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# session fits: correctness + compile-once
+# ---------------------------------------------------------------------------
+
+def test_session_fit_matches_oneshot():
+    ds = synthetic.make_dense(n=300, p=48, seed=4)
+    X, y = ds.train.X, ds.train.y
+    cfg = DGLMNETConfig(lam1=0.7, lam2=0.3, tile_size=16, max_outer=80,
+                        tol=1e-12)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        ref = dglmnet.fit(X, y, cfg)
+    res = GLMSolver(X, y, config=cfg).fit()
+    np.testing.assert_allclose(res.beta, ref.beta, rtol=0, atol=0)
+    assert res.history["f"] == ref.history["f"]
+
+
+def test_superstep_compiles_once_across_fits_and_path():
+    ds = synthetic.make_dense(n=200, p=32, seed=5)
+    cfg = DGLMNETConfig(tile_size=16, max_outer=40, tol=1e-10)
+    s = GLMSolver(ds.train.X, ds.train.y, config=cfg)
+    c0 = s.compile_count          # shared cache may already hold this key
+    s.fit(lam1=1.0, lam2=0.0)
+    s.fit(lam1=0.2, lam2=0.5)
+    s.fit_path(n_lambdas=20, lam_ratio=1e-2)
+    # 2 fits + a 20-λ path (with screening re-runs): at most ONE trace total
+    assert s.compile_count - c0 <= 1
+
+    # a SECOND session on the same layout hits the module-level cache: no
+    # new trace at all
+    s2 = GLMSolver(ds.train.X, ds.train.y, config=cfg)
+    assert s2._key == s._key
+    c2 = s2.compile_count
+    s2.fit(lam1=0.7)
+    assert s2.compile_count == c2
+
+
+def test_oneshot_wrappers_do_not_rejit():
+    ds = synthetic.make_dense(n=150, p=32, seed=6)
+    cfg = DGLMNETConfig(lam1=0.5, tile_size=16, max_outer=20)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        dglmnet.fit(ds.train.X, ds.train.y, cfg)
+        key = GLMSolver(ds.train.X, ds.train.y, config=cfg)._key
+        before = solver._TRACE_COUNTS[key]
+        assert before >= 1
+        # different λ, same geometry → cached compiled superstep, no re-trace
+        dglmnet.fit(ds.train.X, ds.train.y,
+                    DGLMNETConfig(lam1=2.0, lam2=0.1, tile_size=16,
+                                  max_outer=20))
+    assert solver._TRACE_COUNTS[key] == before
+
+
+# ---------------------------------------------------------------------------
+# warm-started path correctness
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("screen", [True, False])
+def test_path_matches_cold_fits_dense(screen):
+    """fit_path at every grid point reaches the same objective as a cold
+    fit at that λ (1e-5 relative)."""
+    ds = synthetic.make_dense(n=300, p=48, seed=7)
+    X, y = ds.train.X, ds.train.y
+    cfg = DGLMNETConfig(tile_size=16, max_outer=150, tol=1e-12)
+    s = GLMSolver(X, y, config=cfg)
+    path = s.fit_path(n_lambdas=8, lam_ratio=1e-2, screen=screen)
+    assert isinstance(path, PathResult)
+    for k in (0, 3, 7):
+        lam1 = float(path.lambdas[k])
+        f_cold = _obj("logistic", X, y, s.fit(lam1=lam1, lam2=0.0).beta,
+                      lam1, 0.0)
+        f_warm = _obj("logistic", X, y, path.betas[k], lam1, 0.0)
+        assert f_warm <= f_cold + 1e-5 * max(1.0, abs(f_cold)), \
+            (k, f_warm, f_cold)
+    # λ_max head of the grid is the all-zero solution, support grows downward
+    assert path.nnz[0] == 0
+    assert path.nnz[-1] > 0
+
+
+def test_path_matches_cold_fits_sparse_jacobi():
+    ds = synthetic.make_sparse(n=400, p=256, avg_nnz=16, seed=8)
+    X, y = ds.train.X, ds.train.y
+    cfg = DGLMNETConfig(tile_size=16, coupling="jacobi", max_outer=150,
+                        tol=1e-12)
+    s = GLMSolver(X, y, config=cfg)
+    path = s.fit_path(n_lambdas=6, lam_ratio=1e-2)
+    for k in (2, 5):
+        lam1 = float(path.lambdas[k])
+        f_cold = _obj_sparse(X, y, s.fit(lam1=lam1, lam2=0.0).beta, lam1, 0.0)
+        f_warm = _obj_sparse(X, y, path.betas[k], lam1, 0.0)
+        assert f_warm <= f_cold + 1e-5 * max(1.0, abs(f_cold))
+    assert s.compile_count == 1
+
+
+def test_path_warm_start_saves_iterations():
+    """Total supersteps over the warm path must undercut cold fits at the
+    same grid (the amortization claim of the session API)."""
+    ds = synthetic.make_dense(n=300, p=64, seed=9)
+    cfg = DGLMNETConfig(tile_size=16, max_outer=200, tol=1e-10)
+    s = GLMSolver(ds.train.X, ds.train.y, config=cfg)
+    path = s.fit_path(n_lambdas=10, lam_ratio=1e-2)
+    cold_iters = sum(s.fit(lam1=float(l), lam2=0.0).n_iter
+                     for l in path.lambdas)
+    assert path.n_iters.sum() < cold_iters
+
+
+def test_path_rejects_increasing_grid():
+    ds = synthetic.make_dense(n=100, p=32, k_true=4, seed=10)
+    s = GLMSolver(ds.train.X, ds.train.y,
+                  config=DGLMNETConfig(tile_size=16))
+    with pytest.raises(ValueError, match="decreasing"):
+        s.fit_path(lambdas=[0.1, 1.0, 10.0])
+
+
+def test_fit_beta0_warm_start():
+    ds = synthetic.make_dense(n=250, p=32, seed=11)
+    cfg = DGLMNETConfig(tile_size=16, max_outer=200, tol=1e-12)
+    s = GLMSolver(ds.train.X, ds.train.y, config=cfg)
+    cold = s.fit(lam1=0.5, lam2=0.1)
+    warm = s.fit(lam1=0.5, lam2=0.1, beta0=cold.beta)
+    assert warm.n_iter <= 3
+    f_c = _obj("logistic", ds.train.X, ds.train.y, cold.beta, 0.5, 0.1)
+    f_w = _obj("logistic", ds.train.X, ds.train.y, warm.beta, 0.5, 0.1)
+    assert f_w <= f_c + 1e-7 * max(1.0, abs(f_c))
+
+
+# ---------------------------------------------------------------------------
+# path checkpointing (resume mid-grid)
+# ---------------------------------------------------------------------------
+
+def test_path_checkpoint_resume(tmp_path):
+    from repro.checkpoint import CheckpointManager
+    ds = synthetic.make_dense(n=200, p=32, seed=12)
+    cfg = DGLMNETConfig(tile_size=16, max_outer=80, tol=1e-11)
+    grid = np.logspace(1.2, -0.8, 7)
+
+    full = GLMSolver(ds.train.X, ds.train.y, config=cfg).fit_path(
+        lambdas=grid)
+
+    mgr = CheckpointManager(tmp_path / "ck", keep_last=2)
+    s = GLMSolver(ds.train.X, ds.train.y, config=cfg)
+    s.fit_path(lambdas=grid[:4], ckpt_manager=mgr)   # interrupted mid-grid
+    assert mgr.latest_step() == 4
+
+    resumed = GLMSolver(ds.train.X, ds.train.y, config=cfg).fit_path(
+        lambdas=grid, ckpt_manager=CheckpointManager(tmp_path / "ck"))
+    # the completed prefix is restored bit-exactly; resumed tail converges
+    # to the same optima (the ALB cursor restarts at 0, so iterates differ
+    # at convergence-tolerance level, not exactly)
+    np.testing.assert_array_equal(resumed.betas[:4], full.betas[:4])
+    np.testing.assert_allclose(resumed.betas, full.betas, atol=5e-3)
+    np.testing.assert_allclose(resumed.f, full.f, rtol=1e-4)
+
+    # grid mismatch fails loudly instead of silently mixing paths
+    with pytest.raises(ValueError, match="different λ grid"):
+        GLMSolver(ds.train.X, ds.train.y, config=cfg).fit_path(
+            lambdas=grid * 2.0,
+            ckpt_manager=CheckpointManager(tmp_path / "ck"))
+
+    # a path checkpoint cannot silently resume a single fit (and vice versa)
+    with pytest.raises(ValueError, match="written by fit_path"):
+        GLMSolver(ds.train.X, ds.train.y, config=cfg).fit(
+            lam1=1.0, ckpt_manager=CheckpointManager(tmp_path / "ck"))
+    mgr_fit = CheckpointManager(tmp_path / "ck_single")
+    GLMSolver(ds.train.X, ds.train.y, config=cfg).fit(
+        lam1=1.0, ckpt_manager=mgr_fit, ckpt_every=5)
+    with pytest.raises(ValueError, match="written by a single fit"):
+        GLMSolver(ds.train.X, ds.train.y, config=cfg).fit_path(
+            lambdas=grid, ckpt_manager=CheckpointManager(
+                tmp_path / "ck_single"))
+
+
+# ---------------------------------------------------------------------------
+# predict / score
+# ---------------------------------------------------------------------------
+
+def test_predict_and_score():
+    ds = synthetic.make_dense(n=600, p=64, k_true=8, seed=13)
+    s = GLMSolver(ds.train.X, ds.train.y,
+                  config=DGLMNETConfig(tile_size=16, max_outer=60))
+    s.fit(lam1=0.2, lam2=0.1)
+    m = s.predict(ds.test.X, kind="link")
+    np.testing.assert_allclose(m, ds.test.X @ s.beta_, rtol=1e-6)
+    p = s.predict(ds.test.X)                      # response = P(y=+1)
+    assert ((p >= 0) & (p <= 1)).all()
+    acc = s.score(ds.test.X, ds.test.y)
+    assert acc == pytest.approx(((m > 0) == (ds.test.y > 0)).mean())
+    assert acc >= 0.8
+    with pytest.raises(ValueError, match="no fitted"):
+        GLMSolver(ds.train.X, ds.train.y,
+                  config=DGLMNETConfig(tile_size=16)).predict(ds.test.X)
+
+
+def test_score_squared_r2():
+    ds = synthetic.make_dense(n=400, p=32, family="squared", seed=14)
+    s = GLMSolver(ds.train.X, ds.train.y, family="squared",
+                  config=DGLMNETConfig(family="squared", tile_size=16,
+                                       max_outer=60))
+    s.fit(lam1=0.05, lam2=0.01)
+    assert 0.0 < s.score(ds.test.X, ds.test.y) <= 1.0
+
+
+# ---------------------------------------------------------------------------
+# deprecation shims
+# ---------------------------------------------------------------------------
+
+def test_fit_deprecation_shim_warns_once_and_matches():
+    ds = synthetic.make_dense(n=200, p=32, seed=15)
+    cfg = DGLMNETConfig(lam1=0.4, lam2=0.2, tile_size=16, max_outer=50,
+                        tol=1e-11)
+    dglmnet._DEPRECATION_WARNED.discard("fit")
+    with pytest.warns(DeprecationWarning, match="GLMSolver"):
+        res = dglmnet.fit(ds.train.X, ds.train.y, cfg)
+    # second call: warned already — exactly once per process
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        res2 = dglmnet.fit(ds.train.X, ds.train.y, cfg)
+    assert not [w for w in rec if issubclass(w.category, DeprecationWarning)]
+    session = GLMSolver(ds.train.X, ds.train.y, config=cfg).fit()
+    np.testing.assert_array_equal(res.beta, session.beta)
+    np.testing.assert_array_equal(res2.beta, session.beta)
