@@ -1,5 +1,7 @@
 """Generate the EXPERIMENTS.md §Dry-run / §Roofline tables from the
-results/dryrun JSON records.
+results/dryrun JSON records, and the §Benchmarks section from the committed
+results/benchmarks/*.json records (kernels, fig2_4_l1, path_bench,
+cv_bench, ...).
 
     PYTHONPATH=src:. python -m benchmarks.make_report > /tmp/tables.md
 """
@@ -9,6 +11,24 @@ import json
 import pathlib
 
 RESULTS = pathlib.Path(__file__).resolve().parents[1] / "results" / "dryrun"
+BENCH_RESULTS = pathlib.Path(__file__).resolve().parents[1] / "results" \
+    / "benchmarks"
+
+# figure name -> (ordered columns, column header overrides); figures not
+# listed fall back to the union of row keys in insertion order
+BENCH_COLUMNS = {
+    "kernels": ["name", "us_per_call", "derived"],
+    "fig2_4_l1": ["dataset", "algo", "subopt", "subopt_at_10", "auprc",
+                  "nnz", "iters", "wall_s"],
+    "path_bench": ["case", "n_lambdas", "setup_s", "warm_path_s",
+                   "warm_per_lambda_s", "cold_session_s", "cold_oneshot_s",
+                   "speedup_vs_cold_session", "speedup_vs_cold_oneshot",
+                   "warm_iters", "cold_iters", "compile_count"],
+    "cv_bench": ["case", "n_folds", "n_lambdas", "setup_s", "cv_s",
+                 "naive_s", "naive_setup_s", "wall_ratio_vs_naive",
+                 "compiles_masked", "compiles_naive", "best_index",
+                 "lam_best"],
+}
 
 ARCH_ORDER = ["gemma3-12b", "qwen2.5-32b", "phi4-mini-3.8b",
               "mistral-large-123b", "zamba2-1.2b", "deepseek-v2-lite-16b",
@@ -75,13 +95,57 @@ def summary(recs):
     return n_ok, n_skip, n_fail
 
 
+def _fmt_cell(v):
+    if isinstance(v, float):
+        return f"{v:.4g}"
+    if isinstance(v, list):
+        s = ", ".join(_fmt_cell(x) for x in v[:6])
+        return s + (", …" if len(v) > 6 else "")
+    return str(v)
+
+
+def bench_table(name: str, rows: list) -> str:
+    cols = BENCH_COLUMNS.get(name)
+    if cols is None:
+        cols = []
+        for r in rows:
+            cols.extend(k for k in r if k not in cols)
+    lines = [f"### {name}", "",
+             "| " + " | ".join(cols) + " |",
+             "|" + "---|" * len(cols)]
+    for r in rows:
+        lines.append("| " + " | ".join(_fmt_cell(r.get(c, "—"))
+                                       for c in cols) + " |")
+    return "\n".join(lines)
+
+
+def benchmarks_section() -> str:
+    """§Benchmarks: one table per committed results/benchmarks/*.json."""
+    if not BENCH_RESULTS.exists():
+        return ""
+    out = ["## Benchmarks", ""]
+    for f in sorted(BENCH_RESULTS.glob("*.json")):
+        rec = json.loads(f.read_text())
+        rows = rec.get("rows", [])
+        if not rows:
+            continue
+        out.append(bench_table(rec.get("figure", f.stem), rows))
+        out.append("")
+    return "\n".join(out) if len(out) > 2 else ""
+
+
 def main():
+    print("## Dry-run / Roofline")
+    print()
     for mesh_tag in ("1x16x16", "2x16x16"):
         recs = load(mesh_tag)
         ok, skip, fail = summary(recs)
         print(f"<!-- {mesh_tag}: ok={ok} skipped={skip} failed={fail} -->")
         print(roofline_table(recs, mesh_tag))
         print()
+    section = benchmarks_section()
+    if section:
+        print(section)
 
 
 if __name__ == "__main__":

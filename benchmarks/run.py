@@ -11,6 +11,7 @@ Figures:
   fig7_8_speedup    — paper Figs 7-8 (speedup vs number of nodes)
   kernels           — Pallas kernel micro-benches
   path_bench        — warm-started λ-path vs K cold fits (GLMSolver session)
+  cv_bench          — mask-based K-fold fit_cv vs per-fold cold sessions
 """
 from __future__ import annotations
 
@@ -29,9 +30,9 @@ def main() -> None:
                     help="comma-separated figure names")
     args = ap.parse_args()
 
-    from benchmarks import (fig1_adaptive_mu, fig2_4_l1, fig5_6_l2,
-                            fig7_8_speedup, kernels_bench, path_bench,
-                            table2_load)
+    from benchmarks import (cv_bench, fig1_adaptive_mu, fig2_4_l1,
+                            fig5_6_l2, fig7_8_speedup, kernels_bench,
+                            path_bench, table2_load)
     figures = {
         "table2_load": table2_load.run,
         "fig1_adaptive_mu": fig1_adaptive_mu.run,
@@ -40,6 +41,7 @@ def main() -> None:
         "fig7_8_speedup": fig7_8_speedup.run,
         "kernels": kernels_bench.run,
         "path_bench": path_bench.run,
+        "cv_bench": cv_bench.run,
     }
     wanted = (args.only.split(",") if args.only else list(figures))
     RESULTS.mkdir(parents=True, exist_ok=True)

@@ -57,7 +57,7 @@ def _shooting_pass(A, x, v, lam1_eff, lam2_eff, col_sq):
 @partial(jax.jit, static_argnames=("cfg",))
 def _admm_step(A_blocks, y, x_blocks, zbar, u, cfg: ADMMConfig):
     M = A_blocks.shape[0]
-    fam = glm_lib.get_family(cfg.family)
+    fam = glm_lib.resolve_family(cfg.family)
 
     Ax = jnp.einsum("mnp,mp->mn", A_blocks, x_blocks)     # (M, n)
     Ax_bar = jnp.mean(Ax, axis=0)

@@ -35,7 +35,7 @@ def fit_lbfgs(X, y, cfg: LBFGSConfig, w0=None):
     X = jnp.asarray(np.asarray(X, np.float32))
     y = jnp.asarray(np.asarray(y, np.float32))
     n, p = X.shape
-    fam = glm_lib.get_family(cfg.family)
+    fam = glm_lib.resolve_family(cfg.family)
 
     @jax.jit
     def f_and_g(w):

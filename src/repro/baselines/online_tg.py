@@ -36,7 +36,7 @@ class OnlineTGConfig:
 @partial(jax.jit, static_argnames=("cfg",))
 def _epoch(X_sh, y_sh, w0, t0, cfg: OnlineTGConfig):
     """One pass of every shard (vmapped), from shared warmstart w0."""
-    fam = glm_lib.get_family(cfg.family)
+    fam = glm_lib.resolve_family(cfg.family)
 
     def one_shard(Xs, ys):
         def step(carry, xy):
@@ -68,7 +68,7 @@ def fit_online_tg(X, y, cfg: OnlineTGConfig, seed=0):
     X_sh = jnp.asarray(X[perm].reshape(M, n_per, p))
     y_sh = jnp.asarray(y[perm].reshape(M, n_per))
 
-    fam = glm_lib.get_family(cfg.family)
+    fam = glm_lib.resolve_family(cfg.family)
     yj, Xj = jnp.asarray(y), jnp.asarray(X)
 
     @jax.jit

@@ -49,13 +49,15 @@ def _psum(x, axis: Optional[str]):
 def sweep_gauss_seidel(design, s, w, beta, dbeta, xdb, *, mu, nu, lam1, lam2,
                        start_tile=0, num_tiles=None,
                        max_num_tiles: Optional[int] = None,
-                       active=None,
+                       active=None, penf=None,
                        axis_data: Optional[str] = None,
                        backend: Optional[str] = None):
     """Cyclic tile sweep; returns (dbeta, xdb, tiles_done).
 
     design: local DesignMatrix block, shape (n_loc, p_loc).
     s, w: (n_loc,) link stats at the outer iterate (FIXED during the sweep).
+      Observation weights are already folded in upstream (glm_stats weights),
+      so the Gram/gradient psums are the weighted sums without further work.
     beta, dbeta: (p_loc,); xdb: (n_loc,) = X @ dbeta (local block only).
     lam1/lam2 may be traced scalars — the λ pair is a *runtime* argument of
       the superstep so one compiled sweep serves a whole regularization path.
@@ -67,6 +69,9 @@ def sweep_gauss_seidel(design, s, w, beta, dbeta, xdb, *, mu, nu, lam1, lam2,
     active: optional (p_loc,) 0/1 screening mask — coordinates with
       ``active == 0`` are frozen at their entering Δβ (the λ-path driver's
       strong-rule/KKT active set; see solver.fit_path).
+    penf: optional (p_loc,) per-coordinate penalty factors (runtime, like
+      ``active``): coordinate j is solved under (λ1·penf_j, λ2·penf_j);
+      penf_j = 0 is unpenalized (the intercept column).
     """
     T = design.tile_size
     n_tiles_total = design.n_tiles
@@ -86,8 +91,10 @@ def sweep_gauss_seidel(design, s, w, beta, dbeta, xdb, *, mu, nu, lam1, lam2,
         h = jnp.diagonal(G)
         bt = jax.lax.dynamic_slice(beta, (col0,), (T,))
         dt = jax.lax.dynamic_slice(dbeta_c, (col0,), (T,))
+        pf_t = None if penf is None else \
+            jax.lax.dynamic_slice(penf, (col0,), (T,))
         dt_new = ops.cd_tile_solve(G, g, h, bt, dt, mu, nu, lam1, lam2,
-                                   backend=backend)
+                                   penf=pf_t, backend=backend)
         if active is not None:
             at = jax.lax.dynamic_slice(active, (col0,), (T,))
             dt_new = jnp.where(at > 0, dt_new, dt)
@@ -103,15 +110,15 @@ def sweep_gauss_seidel(design, s, w, beta, dbeta, xdb, *, mu, nu, lam1, lam2,
 def sweep_jacobi(design, s, w, beta, dbeta, xdb, *, mu, nu, lam1, lam2,
                  start_tile=0, num_tiles=None,
                  max_num_tiles: Optional[int] = None,
-                 active=None,
+                 active=None, penf=None,
                  axis_data: Optional[str] = None,
                  backend: Optional[str] = None):
     """Jacobi-across-tiles sweep: one fused psum, vmapped tile solves.
 
     Equivalent to d-GLMNET with each tile as a virtual node.  ``dbeta`` and
     ``xdb`` must be zero on entry (start of an outer iteration) — asserted by
-    the driver.  ALB budgeting masks whole tiles; ``active`` (see
-    sweep_gauss_seidel) masks individual screened-out coordinates.
+    the driver.  ALB budgeting masks whole tiles; ``active`` / ``penf`` (see
+    sweep_gauss_seidel) act per coordinate.
     """
     T = design.tile_size
     n_loc, p_loc = design.shape
@@ -130,8 +137,16 @@ def sweep_jacobi(design, s, w, beta, dbeta, xdb, *, mu, nu, lam1, lam2,
 
     solve = functools.partial(ops.cd_tile_solve, mu=mu, nu=nu, lam1=lam1,
                               lam2=lam2, backend=backend)
-    d_new = jax.vmap(lambda Gt, gt, ht, bt, dt: solve(Gt, gt, ht, bt, dt))(
-        G_all, g_all, h_all, beta_r, dbeta_r)
+    if penf is None:
+        d_new = jax.vmap(
+            lambda Gt, gt, ht, bt, dt: solve(Gt, gt, ht, bt, dt))(
+            G_all, g_all, h_all, beta_r, dbeta_r)
+    else:
+        penf_r = penf.reshape(n_tiles_total, T)
+        d_new = jax.vmap(
+            lambda Gt, gt, ht, bt, dt, pt: solve(Gt, gt, ht, bt, dt,
+                                                 penf=pt))(
+            G_all, g_all, h_all, beta_r, dbeta_r, penf_r)
 
     # ALB mask: tiles [start, start+budget) in cyclic order are active.
     tids = jnp.arange(n_tiles_total, dtype=jnp.int32)

@@ -95,30 +95,41 @@ def make_superstep(config: DGLMNETConfig, *, axis_data=None, axis_model=None,
     ``X`` may be a raw (n_loc, p_loc) dense array (wrapped into a
     ``DenseDesign`` on the fly) or any ``DesignMatrix`` pytree — e.g. the
     sharded ``BlockSparseDesign`` whose leaves the partitioner has already
-    localized.  y/mask are (n_loc,), budget (1,) int32 per feature shard.
+    localized.  The observation model is carried by three RUNTIME row/
+    feature vectors (so folds, weights and penalty layouts swap with zero
+    recompiles):
 
-    ``lams`` is a (2,) [λ1, λ2] runtime array (replicated) — λ is NOT baked
-    into the closure, so one compiled superstep serves a whole regularization
-    path (solver.GLMSolver.fit_path).  ``active`` is a (p_loc,) 0/1
-    screening mask (feature-sharded); coordinates with ``active == 0`` are
-    frozen during the CD sweep (strong-rule/KKT active-set screening).
+      * ``weights`` (n_loc,): combined per-example observation weight —
+        sample weight × CV fold mask × row-padding mask;
+      * ``offset`` (n_loc,): fixed margin offsets (loss at ``Xβ + o``);
+      * ``penf``   (p_loc,): per-coordinate penalty factors (0 = the
+        unpenalized intercept column).
+
+    ``budget`` is (1,) int32 per feature shard.  ``lams`` is a (2,)
+    [λ1, λ2] runtime array (replicated) — λ is NOT baked into the closure,
+    so one compiled superstep serves a whole regularization path
+    (solver.GLMSolver.fit_path).  ``active`` is a (p_loc,) 0/1 screening
+    mask (feature-sharded); coordinates with ``active == 0`` are frozen
+    during the CD sweep (strong-rule/KKT active-set screening).
     """
     sweep = cd_lib.SWEEPS[config.coupling]
     backend = config.kernel_backend
     fam = config.family
     static_bound = int(max_budget if max_budget is not None else n_tiles_local)
 
-    def superstep(X, y, mask, budget, lams, active, state: FitState):
+    def superstep(X, y, weights, offset, budget, lams, active, penf,
+                  state: FitState):
         design = design_lib.as_local_design(X, config.tile_size)
         beta, xb, mu, cursor, step = state
         lam1, lam2 = lams[0], lams[1]
 
-        # (1) link statistics at the current iterate
-        loss_i, s, w = ops.glm_stats(y, xb, fam, mask=mask, backend=backend)
+        # (1) link statistics at the current iterate (weighted, offset)
+        loss_i, s, w = ops.glm_stats(y, xb, fam, weights=weights,
+                                     offset=offset, backend=backend)
         L = _psum(jnp.sum(loss_i), axis_data)
         R0 = linesearch.penalty_terms(beta, jnp.zeros_like(beta),
                                       jnp.zeros((1,)), lam1,
-                                      lam2, axis_model)[0]
+                                      lam2, axis_model, penf)[0]
         f_cur = L + R0
 
         # (2) local quadratic sub-problem: one (budgeted) tile CD cycle
@@ -129,13 +140,13 @@ def make_superstep(config: DGLMNETConfig, *, axis_data=None, axis_model=None,
             mu=mu, nu=config.nu, lam1=lam1, lam2=lam2,
             start_tile=cursor[0],
             num_tiles=budget[0], max_num_tiles=static_bound,
-            active=active,
+            active=active, penf=penf,
             axis_data=axis_data, backend=backend)
 
         # (3) merge margin deltas across feature blocks (paper step 6)
         xdb = psum_compressed(xdb_local, axis_model, config.compress_margin)
 
-        # (4) line search
+        # (4) line search (weighted Armijo sums — s/w already carry weights)
         grad_dot_dir = _psum(-jnp.sum(s * xdb), axis_data)
         quad_local = _psum(jnp.sum(w * xdb_local * xdb_local), axis_data)
         quad_form = (mu * _psum(quad_local, axis_model)
@@ -146,7 +157,8 @@ def make_superstep(config: DGLMNETConfig, *, axis_data=None, axis_model=None,
             f_current=f_cur, grad_dot_dir=grad_dot_dir, quad_form=quad_form,
             sigma=config.sigma, b=config.backtrack_b, gamma=config.gamma,
             delta=config.ls_delta, grid_size=config.ls_grid_size,
-            max_backtracks=config.max_backtracks, mask=mask,
+            max_backtracks=config.max_backtracks, weights=weights,
+            offset=offset, penf=penf,
             axis_data=axis_data, axis_model=axis_model, backend=backend)
 
         # (5) apply the step; adapt μ (Algorithm 1 lines 8–12)

@@ -3,9 +3,15 @@
 Every loss is expressed through the margin ``m = beta^T x`` (denoted ``yhat``
 in the paper).  The d-GLMNET machinery only ever needs, per example:
 
-    loss_i = l(y_i, m_i)
-    s_i    = -dl/dm          (negative gradient wrt the margin)
-    w_i    =  d2l/dm2        (curvature; the IRLS weight)
+    loss_i = w_obs_i * l(y_i, m_i + o_i)
+    s_i    = -d loss_i / dm          (negative gradient wrt the margin)
+    w_i    =  d2 loss_i / dm2        (curvature; the IRLS weight)
+
+where ``w_obs_i`` is an optional per-example observation weight (sample
+weights, CV fold masks and row-padding masks all enter here — they are the
+same mechanism) and ``o_i`` an optional fixed margin offset (exposure /
+prior-model terms).  ``GLMFamily.stats`` applies both; the raw per-family
+derivative formulas live in ``raw_stats`` and never see weights or offsets.
 
 We deliberately never form the working response ``z_i = s_i / w_i`` from the
 paper: all update rules are written in terms of ``s`` and ``w`` so that
@@ -14,35 +20,80 @@ paper: all update rules are written in terms of ``s`` and ``w`` so that
 Conventions:
   * logistic / probit: labels y in {-1, +1}
   * squared:           y real
-  * poisson:           y >= 0 integer counts, log link
+  * poisson:           y >= 0 integer counts, log link.  The poisson
+    curvature ``w = exp(m)`` is unbounded, so ``stats`` clips it at
+    ``w_clip`` (= POISSON_W_CLIP) — the effective curvature bound the CGD
+    convergence theory needs; loss and gradient are NOT clipped.
 """
 from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Callable
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
+
+# Effective curvature bound for the poisson family: margins above
+# log(POISSON_W_CLIP) ~= 13.8 contribute at most this much curvature to the
+# Gram blocks / line-search quadratic (the loss and gradient stay exact).
+POISSON_W_CLIP = 1e6
 
 
 @dataclasses.dataclass(frozen=True)
 class GLMFamily:
     """A GLM loss family.
 
-    stats(y, m) -> (loss_i, s_i, w_i), all shaped like m.
+    ``raw_stats(y, m) -> (loss_i, s_i, w_i)`` — the unweighted, unclipped
+    per-family formulas.  Consumers call the ``stats`` method, which layers
+    the observation model on top: margin offsets, the ``w_clip`` curvature
+    clip (families with ``curvature_bound is None``), and per-example
+    weights.
+
     ``curvature_bound``: paper Appendix B upper bound on d2l/dm2 (None when
-    unbounded, e.g. poisson — then ``w_clip`` is applied for the CGD theory
-    to hold).
+    unbounded, e.g. poisson — then ``w_clip`` is applied so the CGD theory
+    holds with that constant as the effective bound).
+
+    ``saturated_loss(y)``: per-example loss of the saturated model (exact
+    fit), used by ``deviance``; None means identically zero.
     """
 
     name: str
-    stats: Callable[[jnp.ndarray, jnp.ndarray], tuple]
+    raw_stats: Callable[[jnp.ndarray, jnp.ndarray], tuple]
     predict: Callable[[jnp.ndarray], jnp.ndarray]
     curvature_bound: float | None
+    w_clip: float | None = None
+    saturated_loss: Optional[Callable[[jnp.ndarray], jnp.ndarray]] = None
 
-    def loss(self, y, m):
-        return self.stats(y, m)[0]
+    def stats(self, y, m, weights=None, offset=None):
+        """(loss_i, s_i, w_i) under the full observation model.
+
+        ``weights``: per-example nonnegative observation weights (None = 1).
+        ``offset``: per-example fixed margin offsets (None = 0) — stats are
+        evaluated at ``m + offset``.
+        """
+        if offset is not None:
+            m = m + offset
+        loss, s, w = self.raw_stats(y, m)
+        if self.w_clip is not None:
+            w = jnp.minimum(w, self.w_clip)
+        if weights is not None:
+            loss = loss * weights
+            s = s * weights
+            w = w * weights
+        return loss, s, w
+
+    def loss(self, y, m, weights=None, offset=None):
+        return self.stats(y, m, weights=weights, offset=offset)[0]
+
+    def deviance(self, y, m, weights=None, offset=None):
+        """Total (weighted) deviance 2 Σ w_i (l_i - l_sat,i)."""
+        loss = self.loss(y, m, weights=weights, offset=offset)
+        sat = jnp.zeros_like(loss) if self.saturated_loss is None \
+            else self.saturated_loss(y)
+        if weights is not None:
+            sat = sat * weights
+        return 2.0 * jnp.sum(loss - sat)
 
 
 # ---------------------------------------------------------------------------
@@ -103,11 +154,19 @@ def _poisson_stats(y, m):
     return loss, s, w
 
 
-LOGISTIC = GLMFamily("logistic", _logistic_stats, lambda m: jax.nn.sigmoid(m), 0.25)
+def _poisson_saturated(y):
+    # l at the saturated fit m = log y:  y - y log y  (0 at y = 0)
+    return jnp.where(y > 0, y - y * jnp.log(jnp.maximum(y, 1e-30)), 0.0)
+
+
+LOGISTIC = GLMFamily("logistic", _logistic_stats,
+                     lambda m: jax.nn.sigmoid(m), 0.25)
 SQUARED = GLMFamily("squared", _squared_stats, lambda m: m, 1.0)
 PROBIT = GLMFamily("probit", _probit_stats,
                    lambda m: jnp.exp(jax.scipy.special.log_ndtr(m)), 3.0)
-POISSON = GLMFamily("poisson", _poisson_stats, lambda m: jnp.exp(m), None)
+POISSON = GLMFamily("poisson", _poisson_stats, lambda m: jnp.exp(m), None,
+                    w_clip=POISSON_W_CLIP,
+                    saturated_loss=_poisson_saturated)
 
 FAMILIES = {f.name: f for f in (LOGISTIC, SQUARED, PROBIT, POISSON)}
 
@@ -119,22 +178,45 @@ def get_family(name: str) -> GLMFamily:
         raise ValueError(f"unknown GLM family {name!r}; have {sorted(FAMILIES)}")
 
 
+def register_family(family: GLMFamily) -> GLMFamily:
+    """Register a custom family so it resolves by name everywhere a
+    ``family: str`` travels (configs, compiled-superstep cache keys)."""
+    FAMILIES[family.name] = family
+    return family
+
+
+def resolve_family(family) -> GLMFamily:
+    """Accept a ``GLMFamily`` instance or a registered name — the single
+    coercion point every public ``family=`` argument goes through."""
+    if isinstance(family, GLMFamily):
+        return family
+    return get_family(family)
+
+
 # ---------------------------------------------------------------------------
 # objective pieces
 # ---------------------------------------------------------------------------
 
-def penalty(beta, lam1, lam2):
-    """Elastic net R(beta) = lam1 ||b||_1 + lam2/2 ||b||^2."""
-    return lam1 * jnp.sum(jnp.abs(beta)) + 0.5 * lam2 * jnp.sum(beta * beta)
+def penalty(beta, lam1, lam2, penalty_factor=None):
+    """Elastic net R(beta) = Σ_j pf_j (lam1 |b_j| + lam2/2 b_j²); pf = 1
+    when ``penalty_factor`` is None (pf_j = 0 ⇒ coordinate j unpenalized,
+    e.g. the intercept)."""
+    pf = 1.0 if penalty_factor is None else penalty_factor
+    return (lam1 * jnp.sum(pf * jnp.abs(beta))
+            + 0.5 * lam2 * jnp.sum(pf * beta * beta))
 
 
-def negloglik(family: GLMFamily, y, margins):
-    return jnp.sum(family.stats(y, margins)[0])
+def negloglik(family, y, margins, weights=None, offset=None):
+    fam = resolve_family(family)
+    return jnp.sum(fam.stats(y, margins, weights=weights, offset=offset)[0])
 
 
-def objective(family: GLMFamily, y, X, beta, lam1, lam2):
+def objective(family, y, X, beta, lam1, lam2, *, weights=None, offset=None,
+              intercept=0.0, penalty_factor=None):
     """Full f(beta) = L + R for a dense X — test/reference helper."""
-    return negloglik(family, y, X @ beta) + penalty(beta, lam1, lam2)
+    margins = X @ beta + intercept
+    return (negloglik(family, y, margins, weights=weights, offset=offset)
+            + penalty(beta, lam1, lam2, penalty_factor))
 
 
 def soft_threshold(x, a):

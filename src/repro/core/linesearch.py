@@ -32,15 +32,22 @@ def _psum(x, axis):
     return jax.lax.psum(x, axis) if axis is not None else x
 
 
-def penalty_terms(beta, dbeta, alphas, lam1, lam2, axis_model):
-    """R(β + α·Δβ) for every α: (K,). beta/dbeta are the LOCAL shards."""
+def penalty_terms(beta, dbeta, alphas, lam1, lam2, axis_model, penf=None):
+    """R(β + α·Δβ) for every α: (K,). beta/dbeta are the LOCAL shards.
+
+    ``penf``: optional (p_loc,) per-coordinate penalty factors — R becomes
+    Σ_j pf_j (λ1 |b_j| + λ2/2 b_j²); pf_j = 0 leaves coordinate j (the
+    intercept) out of both penalty terms.
+    """
+    pf = jnp.ones_like(beta) if penf is None else penf
     # L1: needs a full |.| pass per alpha over local coords, psum over model.
-    l1 = jnp.sum(jnp.abs(beta[None, :] + alphas[:, None] * dbeta[None, :]),
+    l1 = jnp.sum(pf[None, :]
+                 * jnp.abs(beta[None, :] + alphas[:, None] * dbeta[None, :]),
                  axis=-1)
-    # L2: quadratic in alpha from three local scalars.
-    b2 = jnp.sum(beta * beta)
-    bd = jnp.sum(beta * dbeta)
-    d2 = jnp.sum(dbeta * dbeta)
+    # L2: quadratic in alpha from three local (pf-weighted) scalars.
+    b2 = jnp.sum(pf * beta * beta)
+    bd = jnp.sum(pf * beta * dbeta)
+    d2 = jnp.sum(pf * dbeta * dbeta)
     stacked = _psum(jnp.concatenate([l1, jnp.stack([b2, bd, d2])]), axis_model)
     l1, (b2, bd, d2) = stacked[:-3], stacked[-3:]
     l2 = b2 + 2.0 * alphas * bd + alphas * alphas * d2
@@ -50,7 +57,8 @@ def penalty_terms(beta, dbeta, alphas, lam1, lam2, axis_model):
 def search(y, xb, xdb, beta, dbeta, *, family, lam1, lam2, mu, nu,
            f_current, grad_dot_dir, quad_form,
            sigma=0.01, b=0.5, gamma=0.0, delta=1e-3,
-           grid_size=13, max_backtracks=20, mask=None,
+           grid_size=13, max_backtracks=20, weights=None, offset=None,
+           penf=None,
            axis_data: Optional[str] = None, axis_model: Optional[str] = None,
            backend: Optional[str] = None) -> LineSearchResult:
     """Run Algorithm 3.
@@ -60,8 +68,12 @@ def search(y, xb, xdb, beta, dbeta, *, family, lam1, lam2, mu, nu,
     lam1, lam2: penalty weights — may be traced runtime scalars (the λ pair
       is a superstep *argument*, not a compile-time constant, so one
       compiled search serves a whole regularization path).
-    mask: (n_loc,) example mask (padding rows 0) — candidate losses must use
-      the same masking as f_current or the Armijo comparison is offset.
+    weights: (n_loc,) per-example observation weights (sample weights × fold
+      mask × padding) — every candidate objective is the WEIGHTED loss sum,
+      matching f_current, or the Armijo comparison is offset.
+    offset: (n_loc,) margin offsets; candidate losses evaluate at
+      ``xb + offset + α·xdb``.
+    penf: (p_loc,) per-coordinate penalty factors for the penalty terms.
     f_current: f(β) (global scalar, already reduced).
     grad_dot_dir: ∇L(β)ᵀΔβ (global scalar, already reduced).
     quad_form: Δβᵀ(μ(H̃+νI))Δβ (global scalar) — only used when γ>0.
@@ -70,23 +82,27 @@ def search(y, xb, xdb, beta, dbeta, *, family, lam1, lam2, mu, nu,
     grid = jnp.logspace(jnp.log10(delta), 0.0, grid_size)
     alphas = jnp.concatenate([jnp.ones((1,)), grid])
 
-    losses = _psum(ops.alpha_search(y, xb, xdb, alphas, family, mask=mask,
+    losses = _psum(ops.alpha_search(y, xb, xdb, alphas, family,
+                                    weights=weights, offset=offset,
                                     backend=backend), axis_data)
-    pens = penalty_terms(beta, dbeta, alphas, lam1, lam2, axis_model)
+    pens = penalty_terms(beta, dbeta, alphas, lam1, lam2, axis_model, penf)
     f_cand = losses + pens
 
     # Paper's D (eq. 12):
     R1 = pens[0]                              # R(β + Δβ)
-    R0 = penalty_terms(beta, dbeta, jnp.zeros((1,)), lam1, lam2, axis_model)[0]
+    R0 = penalty_terms(beta, dbeta, jnp.zeros((1,)), lam1, lam2, axis_model,
+                       penf)[0]
     D = grad_dot_dir + gamma * quad_form + R1 - R0
 
     ok_unit = f_cand[0] <= f_current + sigma * D
 
     a_init = alphas[jnp.argmin(f_cand)]
     bt = a_init * jnp.power(b, jnp.arange(max_backtracks, dtype=jnp.float32))
-    losses_bt = _psum(ops.alpha_search(y, xb, xdb, bt, family, mask=mask,
+    losses_bt = _psum(ops.alpha_search(y, xb, xdb, bt, family,
+                                       weights=weights, offset=offset,
                                        backend=backend), axis_data)
-    f_bt = losses_bt + penalty_terms(beta, dbeta, bt, lam1, lam2, axis_model)
+    f_bt = losses_bt + penalty_terms(beta, dbeta, bt, lam1, lam2, axis_model,
+                                     penf)
     ok_bt = f_bt <= f_current + bt * sigma * D
     # first (largest-α) passing candidate; fall back to the smallest step
     idx = jnp.argmax(ok_bt)

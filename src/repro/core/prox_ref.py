@@ -22,7 +22,7 @@ def fit_fista(X, y, *, family="logistic", lam1=0.0, lam2=0.0,
     backtracking on the smooth part."""
     X = jnp.asarray(X, jnp.float32)
     y = jnp.asarray(y, jnp.float32)
-    fam = glm_lib.get_family(family)
+    fam = glm_lib.resolve_family(family)
     n, p = X.shape
 
     def smooth(beta):

@@ -1,4 +1,4 @@
-"""GLMSolver: session API for warm-started λ-path fitting (DESIGN.md §4).
+"""GLMSolver: session API for warm-started λ-path fitting (DESIGN.md §4–§5).
 
 The paper's experiments — like every GLMNET-lineage solver — are run over a
 regularization *path* (λ_max → λ_min with warm starts), but the historical
@@ -6,30 +6,52 @@ entry points (``dglmnet.fit`` / ``fit_sharded``) re-packed the design,
 re-placed it on the mesh and re-jitted the superstep on every call.  A
 ``GLMSolver`` session does that setup exactly once:
 
-    solver = GLMSolver(X, y, family="logistic", mesh=mesh)
+    solver = GLMSolver(X, y, family="logistic", mesh=mesh,
+                       sample_weight=w, offset=o, standardize=True,
+                       fit_intercept=True, penalty_factor=pf)
     res  = solver.fit(lam1=1.0, lam2=0.1)        # one (λ1, λ2) point
     path = solver.fit_path(n_lambdas=100)        # warm-started λ-path
+    cv   = solver.fit_cv(n_folds=5)              # mask-based K-fold CV
     yhat = solver.predict(X_test)
 
-Three mechanisms make this cheap:
+The full estimator-grade observation model (DESIGN.md §5) rides RUNTIME
+arguments of one compiled superstep:
+
+  * **per-example weights** — sample weights, CV fold masks and row-padding
+    masks are the same multiply on (loss, s, w); the superstep takes the
+    combined weight vector per call, so ``fit_cv`` runs every fold by
+    swapping a row mask with ZERO recompiles and no data movement;
+  * **margin offsets** — the loss is evaluated at ``Xβ + o``;
+  * **per-feature penalty factors** — coordinate j sees (λ1·pf_j, λ2·pf_j);
+    the unpenalized intercept is just the appended all-ones column with
+    pf = 0;
+  * **standardization** — weighted column moments come from the
+    ``DesignMatrix.col_moments`` operator; the placed design is rescaled
+    (and, for dense layouts with an intercept, centered) in place, and β is
+    mapped back to the original scale on the way out.
+
+Three mechanisms make repeated fitting cheap:
 
   * **λ as a runtime argument** — the superstep takes a (2,) ``[λ1, λ2]``
     array (``dglmnet.make_superstep``), so one compiled superstep serves all
-    λs of a path and all subsequent ``fit`` calls on the session.
+    λs of a path, all CV folds, and all subsequent ``fit`` calls.
   * **a module-level compiled-superstep cache** keyed on
     (config-sans-λ, layout geometry, mesh axes) — even *separate* sessions
     (e.g. repeated calls to the deprecated one-shot drivers) reuse the
     compiled superstep instead of re-jitting.
   * **active-set screening** — ``fit_path`` seeds each λ with the sequential
-    strong rule |Xᵀs(β_prev)|_j ≥ 2λ_k − λ_{k−1}, freezes cold coordinates
-    during the CD sweeps, and verifies the KKT conditions on the full
-    gradient afterwards (re-fitting with violators added, so the screen can
-    never change the solution).
+    strong rule |Xᵀs(β_prev)|_j ≥ pf_j (2λ_k − λ_{k−1}), freezes cold
+    coordinates during the CD sweeps, and verifies the KKT conditions on the
+    full gradient afterwards (re-fitting with violators added, so the screen
+    can never change the solution).
 
 ``lambda_max(X, y, family)`` gives the smallest λ1 for which β = 0 is
 optimal — by the KKT conditions of the elastic-net problem, β = 0 iff
-λ1 ≥ ‖Xᵀ s(0)‖_∞ where s(0) is the negative margin-gradient at β = 0 (the
-ridge term has zero gradient at 0, so λ2 does not enter).
+λ1 ≥ max_j |[Xᵀ s(0)]_j| / pf_j over penalized coordinates, where s(0) is
+the negative margin-gradient at zero margins (plus offsets).  The session
+method refines this to the NULL model when unpenalized coordinates exist:
+the intercept is fitted first, so the path head is genuinely all-zero in
+the penalized coordinates.
 """
 from __future__ import annotations
 
@@ -45,13 +67,16 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.core import dglmnet, glm
 from repro.core.dglmnet import DGLMNETConfig, FitResult, FitState
 from repro.data import design as design_lib
-from repro.data.design import BlockSparseDesign, SparseCOO
+from repro.data.design import BlockSparseDesign, DesignMatrix, SparseCOO
 from repro.kernels import ops
 from repro.sharding import compat
 
 _METRIC_KEYS = ("f", "f_before", "loss", "alpha", "mu", "nnz",
                 "accepted_unit", "D")
 _HISTORY_KEYS = ("f", "alpha", "mu", "nnz", "accepted_unit")
+
+_PF_EPS = 1e-12          # pf below this counts as "unpenalized"
+_SIGMA_EPS = 1e-7        # columns with weighted std below this are not scaled
 
 
 # ---------------------------------------------------------------------------
@@ -96,55 +121,124 @@ def clear_superstep_cache():
 # λ_max utility
 # ---------------------------------------------------------------------------
 
-def lambda_max(X, y, family: str = "logistic") -> float:
+def lambda_max(X, y, family="logistic", *, sample_weight=None, offset=None,
+               penalty_factor=None) -> float:
     """Smallest λ1 for which β = 0 solves the elastic-net GLM problem.
 
-    KKT at β = 0: 0 ∈ ∂f(0) ⇔ |[Xᵀ s(0)]_j| ≤ λ1 for all j, where
-    s(0) = -∂l/∂m at zero margins, so λ_max = ‖Xᵀ s(0)‖_∞.  Host-side
-    utility over raw inputs (dense array or SparseCOO); sessions use the
-    placed design via ``GLMSolver.lambda_max``.
+    KKT at β = 0: 0 ∈ ∂f(0) ⇔ |[Xᵀ s(0)]_j| ≤ λ1 pf_j for all penalized j,
+    where s(0) is the (weighted) negative margin-gradient at zero margins
+    plus offsets, so λ_max = max_j |g_j| / pf_j.  Host-side utility over raw
+    inputs (dense array or SparseCOO); sessions use the placed design via
+    ``GLMSolver.lambda_max``.
     """
-    fam = glm.get_family(family)
+    fam = glm.resolve_family(family)
     y = np.asarray(y, np.float32)
-    _, s0, _ = fam.stats(jnp.asarray(y), jnp.zeros((y.shape[0],), jnp.float32))
+    n = y.shape[0]
+    w = None if sample_weight is None else \
+        jnp.asarray(np.asarray(sample_weight, np.float32))
+    o = None if offset is None else \
+        jnp.asarray(np.asarray(offset, np.float32))
+    _, s0, _ = fam.stats(jnp.asarray(y), jnp.zeros((n,), jnp.float32),
+                         weights=w, offset=o)
     s0 = np.asarray(s0)
     if isinstance(X, SparseCOO):
         g = X.rmatvec(s0)
     else:
         g = np.asarray(X, np.float32).T @ s0
-    return float(np.abs(g).max())
+    g = np.abs(g)
+    if penalty_factor is not None:
+        pf = np.asarray(penalty_factor, np.float32)
+        pen = pf > _PF_EPS
+        if not pen.any():
+            raise ValueError("lambda_max undefined: no penalized features")
+        g = g[pen] / pf[pen]
+    return float(g.max())
 
 
 # ---------------------------------------------------------------------------
-# path result container
+# result containers
 # ---------------------------------------------------------------------------
 
 class PathResult(NamedTuple):
     lambdas: np.ndarray     # (K,) λ1 grid in fit order (decreasing)
     lam2: float             # shared ridge weight
-    betas: np.ndarray       # (K, p) solutions in original feature order
+    betas: np.ndarray       # (K, p) solutions in original feature order/scale
     f: np.ndarray           # (K,) final objective per λ
     nnz: np.ndarray         # (K,) int — support size per λ
     n_iters: np.ndarray     # (K,) supersteps spent per λ
     converged: np.ndarray   # (K,) bool
+    intercepts: Optional[np.ndarray] = None   # (K,) when fit_intercept
 
     def beta_at(self, lam1: float) -> np.ndarray:
         """Solution at the grid point closest to ``lam1``."""
         return self.betas[int(np.abs(self.lambdas - lam1).argmin())]
 
 
+class CVResult(NamedTuple):
+    lambdas: np.ndarray       # (K,) shared λ1 grid (decreasing)
+    lam2: float
+    dev_folds: np.ndarray     # (n_folds, K) mean validation deviance
+    dev_mean: np.ndarray      # (K,) across folds
+    dev_se: np.ndarray        # (K,) standard error across folds
+    best_index: int           # argmin of dev_mean
+    lam_best: float           # lambdas[best_index]
+    path: PathResult          # full-data path over the same grid (the refit)
+    beta: np.ndarray          # full-data solution at lam_best
+    intercept: float
+
+
 # ---------------------------------------------------------------------------
 # the session
 # ---------------------------------------------------------------------------
+
+def _with_intercept_column(X, n: int):
+    """Append an all-ones column (the unpenalized intercept) to a raw host
+    input; pre-built designs cannot be augmented after packing."""
+    if isinstance(X, SparseCOO):
+        p = X.shape[1]
+        rows = np.concatenate([X.rows,
+                               np.arange(n, dtype=np.asarray(X.rows).dtype)])
+        cols = np.concatenate([X.cols, np.full((n,), p,
+                                               np.asarray(X.cols).dtype)])
+        vals = np.concatenate([np.asarray(X.vals, np.float32),
+                               np.ones((n,), np.float32)])
+        return SparseCOO(rows, cols, vals, (n, p + 1))
+    if isinstance(X, DesignMatrix):
+        raise ValueError(
+            "fit_intercept=True needs a raw input (dense array or "
+            "SparseCOO): the intercept column must be appended before the "
+            "design is packed; pre-built designs should carry their own "
+            "constant column")
+    X = np.asarray(X, np.float32)
+    return np.concatenate([X, np.ones((X.shape[0], 1), np.float32)], axis=1)
+
 
 class GLMSolver:
     """Reusable solver session over one placed (X, y).
 
     Construction does the expensive, λ-independent work exactly once:
-    design packing (dense padding or CSR-of-bricks), device placement over
-    the optional (data × model) mesh, and superstep compilation (shared via
-    the module-level cache).  ``fit`` / ``fit_path`` then only run the outer
-    loop; ``predict`` / ``score`` evaluate the last (or a given) solution.
+    design packing (dense padding or CSR-of-bricks), optional intercept
+    column, weighted standardization, device placement over the optional
+    (data × model) mesh, and superstep compilation (shared via the
+    module-level cache).  ``fit`` / ``fit_path`` / ``fit_cv`` then only run
+    the outer loop; ``predict`` / ``score`` evaluate the last (or a given)
+    solution.
+
+    Observation-model kwargs (all optional, DESIGN.md §5):
+      * ``sample_weight`` (n,): per-example nonnegative weights — the loss
+        becomes Σ w_i l_i.  An integer weight k is exactly equivalent to
+        replicating the row k times.
+      * ``offset`` (n,): fixed per-example margin offsets — the loss is
+        evaluated at Xβ (+ intercept) + offset.  ``predict``/``score`` take
+        their own offset for new rows.
+      * ``fit_intercept``: append an unpenalized all-ones column; the fitted
+        intercept is split off into ``intercept_`` and never penalized.
+      * ``standardize``: fit on weighted-variance-1 columns (dense layouts
+        with an intercept are also mean-centered; brick layouts are
+        scale-only, glmnet-style for sparse inputs) and return β on the
+        ORIGINAL scale.
+      * ``penalty_factor`` (p,): per-feature multipliers on (λ1, λ2);
+        0 = unpenalized, the λ grid rescales as λ_max = max |g_j|/pf_j.
 
     Args mirror the historical ``fit_sharded`` driver: ``mesh=None`` is the
     single-device reference path; with a mesh, rows shard over ``axis_data``
@@ -153,29 +247,58 @@ class GLMSolver:
     packing; ``design_info`` accompanies a pre-built design.
     """
 
-    def __init__(self, X, y, *, family: Optional[str] = None,
+    def __init__(self, X, y, *, family=None,
                  config: Optional[DGLMNETConfig] = None, mesh=None,
                  axis_data: Optional[str] = "data", axis_model: str = "model",
                  speeds=None, seed: int = 0,
                  row_block: int = 256, reorder: bool = True,
-                 design_info=None):
+                 design_info=None,
+                 sample_weight=None, offset=None,
+                 standardize: bool = False, fit_intercept: bool = False,
+                 penalty_factor=None):
         config = DGLMNETConfig() if config is None else config
-        if family is not None and family != config.family:
-            config = dataclasses.replace(config, family=family)
+        if family is not None:
+            fam = glm.resolve_family(family)
+            if glm.FAMILIES.get(fam.name) is not fam:
+                raise ValueError(
+                    f"family {fam.name!r} is not registered; call "
+                    "glm.register_family(family) so it resolves by name "
+                    "inside the compiled superstep")
+            if fam.name != config.family:
+                config = dataclasses.replace(config, family=fam.name)
         self.config = config
         self.mesh = mesh
         self.axis_data = axis_data if mesh is not None else None
         self.axis_model = axis_model if mesh is not None else None
         self._rng = np.random.default_rng(seed)
         self.beta_: Optional[np.ndarray] = None
+        self.intercept_: float = 0.0
+        self.fit_intercept = bool(fit_intercept)
+        self.standardize = bool(standardize)
         self._state: Optional[FitState] = None
         self._lmax: Optional[float] = None
         self._matvec_fn = None
         self._grad_fn = None
+        self._dev_fn = None
 
         y = np.asarray(y, np.float32)
         n = y.shape[0]
+        self._n_user = n
         T = config.tile_size
+
+        sw = np.ones((n,), np.float32) if sample_weight is None else \
+            np.asarray(sample_weight, np.float32)
+        off = np.zeros((n,), np.float32) if offset is None else \
+            np.asarray(offset, np.float32)
+        if sw.shape != (n,) or off.shape != (n,):
+            raise ValueError(
+                f"sample_weight/offset must be ({n},); got {sw.shape} / "
+                f"{off.shape}")
+        if (sw < 0).any():
+            raise ValueError("sample_weight must be nonnegative")
+
+        if self.fit_intercept:
+            X = _with_intercept_column(X, n)
 
         if mesh is None:
             design, info = design_lib.as_design(
@@ -189,8 +312,6 @@ class GLMSolver:
             self._Xs = design
             self._ys = jnp.asarray(np.pad(y, (0, n_rows - n),
                                           constant_values=1.0))
-            self._masks = jnp.asarray(np.pad(np.ones((n,), np.float32),
-                                             (0, n_rows - n)))
             self._budget_const = jnp.full((1,), design.n_tiles, jnp.int32)
             self._base_speeds = None
             if isinstance(design, BlockSparseDesign):
@@ -264,10 +385,7 @@ class GLMSolver:
             self._n_tiles_local = p_loc // T
 
             yp = np.pad(y, (0, n_tot - n), constant_values=1.0)
-            maskp = np.pad(np.ones((n,), np.float32), (0, n_tot - n))
             self._ys = jax.device_put(yp, NamedSharding(mesh, self._row_spec))
-            self._masks = jax.device_put(maskp,
-                                         NamedSharding(mesh, self._row_spec))
 
             # ALB budgets: fraction-κ completion rule (paper Section 7)
             from repro.core import alb as alb_lib
@@ -288,6 +406,26 @@ class GLMSolver:
                                          xb=self._row_spec, mu=P(),
                                          cursor=self._feat_spec, step=P())
 
+        # --- observation model: weights, offsets, penalty factors ----------
+        self._p_model = self._info.shape[1]       # columns incl. intercept
+        self._p_user = self._p_model - (1 if self.fit_intercept else 0)
+        self._wobs_host = np.pad(sw, (0, self._n_tot - n))   # padding → 0
+        self._wobs = self._place_row(self._wobs_host)
+        self._offsets = self._place_row(np.pad(off, (0, self._n_tot - n)))
+
+        pf = np.ones((self._p_user,), np.float32) if penalty_factor is None \
+            else np.asarray(penalty_factor, np.float32)
+        if pf.shape != (self._p_user,):
+            raise ValueError(
+                f"penalty_factor must be ({self._p_user},); got {pf.shape}")
+        if (pf < 0).any():
+            raise ValueError("penalty_factor must be nonnegative")
+        if self.fit_intercept:
+            pf = np.concatenate([pf, np.zeros((1,), np.float32)])
+        # padding columns keep pf = 1 so they stay pinned at zero
+        self._penf_host = self._info.pack_cols(pf, self._p_tot, fill=1.0)
+        self._penf = self._place_feat(self._penf_host)
+
         self._active_ones = self._place_feat(
             np.ones((self._p_tot,), np.float32))
         mesh_key = None if mesh is None else \
@@ -297,13 +435,19 @@ class GLMSolver:
                      self._max_budget, layout_key, mesh_key)
         self._superstep = _cached_superstep(self._key, self._build_superstep)
 
+        # --- standardization (after placement: moments via the operator) ---
+        self._scale_packed: Optional[np.ndarray] = None
+        self._center_packed: Optional[np.ndarray] = None
+        if self.standardize:
+            self._apply_standardization()
+
     # -------------------------------------------------------------- infra
 
     @property
     def compile_count(self) -> int:
         """Trace count of this session's compiled superstep (one per
         compilation; shared with other sessions on the same cache key —
-        tests assert the DELTA across a whole λ-path is ≤ 1)."""
+        tests assert the DELTA across a whole λ-path / CV run is ≤ 1)."""
         return _TRACE_COUNTS[self._key]
 
     @property
@@ -328,17 +472,19 @@ class GLMSolver:
             self.config, axis_data=self.axis_data, axis_model=self.axis_model,
             n_tiles_local=self._n_tiles_local, max_budget=self._max_budget)
 
-        def counted(X, y, mask, budget, lams, active, state):
+        def counted(X, y, weights, offset, budget, lams, active, penf,
+                    state):
             _TRACE_COUNTS[key] += 1       # runs at trace time only
-            return raw(X, y, mask, budget, lams, active, state)
+            return raw(X, y, weights, offset, budget, lams, active, penf,
+                       state)
 
         if self.mesh is None:
             return jax.jit(counted)
         return jax.jit(compat.shard_map(
             counted, mesh=self.mesh,
             in_specs=(self._x_specs, self._row_spec, self._row_spec,
-                      self._feat_spec, P(), self._feat_spec,
-                      self._state_specs),
+                      self._row_spec, self._feat_spec, P(), self._feat_spec,
+                      self._feat_spec, self._state_specs),
             out_specs=(self._state_specs, {k: P() for k in _METRIC_KEYS}),
             check_vma=False,
         ))
@@ -363,11 +509,13 @@ class GLMSolver:
                     out_specs=self._row_spec, check_vma=False))
         return self._matvec_fn(self._Xs, beta_dev)
 
-    def _grad(self, xb_dev):
+    def _grad(self, xb_dev, weights=None):
         """g = Xᵀ s(β) in packed column order (λ_max / screening / KKT).
 
-        ``s`` is the negative margin-gradient at the margins ``xb_dev``, so
-        the KKT condition for a zero coordinate is |g_j| ≤ λ1.
+        ``s`` is the (weighted, offset) negative margin-gradient at the
+        margins ``xb_dev``, so the KKT condition for a zero coordinate is
+        |g_j| ≤ λ1 pf_j.  ``weights`` defaults to the session weights; CV
+        fold fits pass their fold-masked vector.
         """
         if self._grad_fn is None:
             T = self.config.tile_size
@@ -375,10 +523,10 @@ class GLMSolver:
             backend = self.config.kernel_backend
             ax_d = self.axis_data
 
-            def grad(X, y, mask, xb):
+            def grad(X, y, weights, offset, xb):
                 design = design_lib.as_local_design(X, T)
-                _, s, _ = ops.glm_stats(y, xb, fam, mask=mask,
-                                        backend=backend)
+                _, s, _ = ops.glm_stats(y, xb, fam, weights=weights,
+                                        offset=offset, backend=backend)
                 g = design.rmatvec(s)
                 return jax.lax.psum(g, ax_d) if ax_d is not None else g
 
@@ -388,16 +536,121 @@ class GLMSolver:
                 self._grad_fn = jax.jit(compat.shard_map(
                     grad, mesh=self.mesh,
                     in_specs=(self._x_specs, self._row_spec, self._row_spec,
-                              self._row_spec),
+                              self._row_spec, self._row_spec),
                     out_specs=self._feat_spec, check_vma=False))
-        return np.asarray(self._grad_fn(self._Xs, self._ys, self._masks,
-                                        xb_dev))
+        weights = self._wobs if weights is None else weights
+        return np.asarray(self._grad_fn(self._Xs, self._ys, weights,
+                                        self._offsets, xb_dev))
 
-    def _init_state(self, beta0=None) -> FitState:
+    # ------------------------------------------------------ standardization
+
+    def _col_moments(self):
+        """(Σ w x_j, Σ w x_j²) over the placed design, packed order, host."""
+        if self.mesh is None:
+            s1, s2 = self._Xs.col_moments(self._wobs)
+            return np.asarray(s1), np.asarray(s2)
+        T = self.config.tile_size
+        ax_d = self.axis_data
+
+        def cm(X, w):
+            design = design_lib.as_local_design(X, T)
+            s1, s2 = design.col_moments(w)
+            if ax_d is not None:
+                s1, s2 = jax.lax.psum((s1, s2), ax_d)
+            return s1, s2
+
+        fn = jax.jit(compat.shard_map(
+            cm, mesh=self.mesh,
+            in_specs=(self._x_specs, self._row_spec),
+            out_specs=(self._feat_spec, self._feat_spec), check_vma=False))
+        s1, s2 = fn(self._Xs, self._wobs)
+        return np.asarray(s1), np.asarray(s2)
+
+    def _apply_standardization(self):
+        """Rescale (and for dense layouts with an intercept: center) the
+        placed design to weighted variance 1 per column; record the packed
+        (scale, center) so fitted coefficients map back to the original
+        scale (DESIGN.md §5)."""
+        s1, s2 = self._col_moments()
+        wsum = float(self._wobs_host.sum())
+        if wsum <= 0:
+            raise ValueError("standardize=True needs positive total weight")
+        mu = s1 / wsum
+        var = np.maximum(s2 / wsum - mu * mu, 0.0)
+        sigma = np.sqrt(var)
+        scale = np.where(sigma > _SIGMA_EPS, 1.0 / np.maximum(sigma, 1e-30),
+                         1.0).astype(np.float32)
+        dense = self._design_layout is None      # both mesh and local dense
+        center = mu.astype(np.float32) if (dense and self.fit_intercept) \
+            else np.zeros_like(scale)
+        if self.fit_intercept:
+            # the intercept column must stay the exact ones column
+            icol = self._p_user if self._info.col_of_feature is None \
+                else int(self._info.col_of_feature[self._p_user])
+            scale[icol] = 1.0
+            center[icol] = 0.0
+
+        if self.mesh is None:
+            self._Xs = self._Xs.scale_columns(
+                jnp.asarray(scale),
+                jnp.asarray(center) if dense and self.fit_intercept
+                else None)
+        elif dense:
+            Xs = (self._Xs - jnp.asarray(center)[None, :]) \
+                * jnp.asarray(scale)[None, :]
+            self._Xs = jax.device_put(Xs, NamedSharding(self.mesh,
+                                                        self._x_specs))
+        else:
+            M = self._M
+            scaled = self._Xs.scale_columns(
+                jnp.asarray(scale.reshape(M, self._p_tot // M)))
+            self._Xs = jax.tree.map(
+                lambda a, s: jax.device_put(a, NamedSharding(self.mesh, s)),
+                scaled, self._x_specs)
+        self._scale_packed = scale
+        self._center_packed = center
+
+    # --------------------------------------------- β packing / unpacking
+
+    def _unpack_user(self, beta_packed: np.ndarray):
+        """Packed (standardized-scale) β → (original-scale β (p_user,),
+        intercept).  Inverse of ``_pack_user``."""
+        b = np.asarray(beta_packed, np.float32)
+        corr = 0.0
+        if self._scale_packed is not None:
+            b = b * self._scale_packed
+            corr = float(np.dot(self._center_packed, b))
+        unpacked = self._info.unpack_beta(b)
+        if self.fit_intercept:
+            return unpacked[:self._p_user], float(unpacked[-1]) - corr
+        return unpacked, 0.0
+
+    def _pack_user(self, beta_user, intercept: float = 0.0) -> np.ndarray:
+        beta_user = np.asarray(beta_user, np.float32)
+        if beta_user.shape != (self._p_user,):
+            raise ValueError(
+                f"beta0 must be ({self._p_user},); got {beta_user.shape}")
+        full = np.concatenate([beta_user, np.zeros((1,), np.float32)]) \
+            if self.fit_intercept else beta_user
+        packed = self._info.pack_beta(full, self._p_tot)
+        if self._scale_packed is not None:
+            corr = float(np.dot(self._center_packed, packed))
+            packed = packed / self._scale_packed
+        else:
+            corr = 0.0
+        if self.fit_intercept:
+            icol = self._p_user if self._info.col_of_feature is None \
+                else int(self._info.col_of_feature[self._p_user])
+            packed[icol] = float(intercept) + corr
+        return packed
+
+    # ---------------------------------------------------------- state setup
+
+    def _init_state(self, beta0=None, intercept0: float = 0.0) -> FitState:
         cfg = self.config
         if beta0 is not None:
-            packed = self._info.pack_beta(np.asarray(beta0, np.float32),
-                                          self._p_tot)
+            packed = self._pack_user(np.asarray(beta0, np.float32),
+                                     intercept0)
             beta = self._place_feat(packed)
             xb = self._matvec(beta)
         else:
@@ -422,17 +675,20 @@ class GLMSolver:
     # ---------------------------------------------------------- outer loop
 
     def _run(self, state: FitState, lam1: float, lam2: float, *,
-             active=None, max_outer=None, tol=None, verbose=False,
-             ckpt_manager=None, ckpt_every: int = 10):
+             weights=None, active=None, max_outer=None, tol=None,
+             verbose=False, ckpt_manager=None, ckpt_every: int = 10):
         """Drive supersteps at fixed (λ1, λ2) until the objective plateaus.
 
         Returns (state, history, n_iter, converged).  ``active`` is a host
-        (p_tot,) 0/1 mask in packed column order (None = all coordinates).
+        (p_tot,) 0/1 mask in packed column order (None = all coordinates);
+        ``weights`` a placed (n_tot,) row-weight vector (None = the session
+        weights — CV fold fits pass fold-masked vectors).
         """
         cfg = self.config
         max_outer = cfg.max_outer if max_outer is None else int(max_outer)
         tol = cfg.tol if tol is None else float(tol)
         lams = jnp.asarray([lam1, lam2], jnp.float32)
+        weights_dev = self._wobs if weights is None else weights
         active_dev = self._active_ones if active is None else \
             self._place_feat(np.asarray(active, np.float32))
 
@@ -450,15 +706,17 @@ class GLMSolver:
             self._check_layout(md)
             saved, _ = ckpt_manager.restore(
                 {"beta": state.beta, "xb": state.xb, "mu": state.mu})
-            state = state._replace(beta=saved["beta"], xb=saved["xb"],
-                                   mu=saved["mu"],
-                                   step=jnp.int32(md["next_it"] - 1))
+            state = state._replace(
+                beta=self._place_feat(self._adapt_cols(saved["beta"])),
+                xb=self._place_row(self._adapt_rows(saved["xb"])),
+                mu=jnp.float32(np.asarray(saved["mu"])),
+                step=jnp.int32(md["next_it"] - 1))
             f_prev = md.get("f_prev", np.inf)
             start_it = int(md["next_it"])
         for it in range(start_it, max_outer + 1):
-            state, m = self._superstep(self._Xs, self._ys, self._masks,
-                                       self._budgets(), lams, active_dev,
-                                       state)
+            state, m = self._superstep(self._Xs, self._ys, weights_dev,
+                                       self._offsets, self._budgets(), lams,
+                                       active_dev, self._penf, state)
             f = float(m["f"])
             for k in history:
                 history[k].append(float(m[k]))
@@ -492,57 +750,82 @@ class GLMSolver:
                 "checkpoints resume only onto the same "
                 "(D, M, tile, row_block) layout")
 
+    def _adapt_cols(self, arr):
+        """Elastic re-map of a checkpointed feature vector onto this
+        session's padded width.  Only the dense layout reaches here with a
+        mismatch (bricks are layout-checked upstream), and its packed order
+        is the identity with zero padding at the tail on BOTH sides, so
+        truncating/zero-extending at ``p_model`` is exact — resuming a
+        mesh whose M·T padding differs must not shift features across
+        shards."""
+        a = np.asarray(arr, np.float32)
+        if a.shape[-1] == self._p_tot:
+            return a
+        out = np.zeros(a.shape[:-1] + (self._p_tot,), np.float32)
+        m = min(a.shape[-1], self._p_tot)
+        out[..., :m] = a[..., :m]
+        return out
+
+    def _adapt_rows(self, arr):
+        """Row twin of ``_adapt_cols``: real rows lead, padding trails."""
+        a = np.asarray(arr, np.float32)
+        if a.shape[0] == self._n_tot:
+            return a
+        out = np.zeros((self._n_tot,), np.float32)
+        m = min(a.shape[0], self._n_tot)
+        out[:m] = a[:m]
+        return out
+
     # ------------------------------------------------------------- fitting
 
     def fit(self, lam1: Optional[float] = None, lam2: Optional[float] = None,
-            *, beta0=None, max_outer=None, tol=None, verbose=False,
-            ckpt_manager=None, ckpt_every: int = 10) -> FitResult:
+            *, beta0=None, intercept0: float = 0.0, max_outer=None, tol=None,
+            verbose=False, ckpt_manager=None, ckpt_every: int = 10
+            ) -> FitResult:
         """Fit one (λ1, λ2) point; defaults come from the session config.
 
-        ``beta0`` warm-starts from a host β in ORIGINAL feature order (the
-        margins are recomputed through the placed design).  Checkpointing
-        matches the historical driver: superstep-boundary saves of
-        (β, Xβ, μ), elastic resume onto this session's mesh.
+        ``beta0`` (+ ``intercept0``) warm-starts from a host β in ORIGINAL
+        feature order and scale (the margins are recomputed through the
+        placed design).  Checkpointing matches the historical driver:
+        superstep-boundary saves of (β, Xβ, μ), elastic resume onto this
+        session's mesh.
         """
         cfg = self.config
         lam1 = cfg.lam1 if lam1 is None else float(lam1)
         lam2 = cfg.lam2 if lam2 is None else float(lam2)
-        state = self._init_state(beta0)
+        state = self._init_state(beta0, intercept0)
         state, history, n_iter, converged = self._run(
             state, lam1, lam2, max_outer=max_outer, tol=tol, verbose=verbose,
             ckpt_manager=ckpt_manager, ckpt_every=ckpt_every)
         self._state = state
-        self.beta_ = self._info.unpack_beta(np.asarray(state.beta))
+        self.beta_, self.intercept_ = self._unpack_user(
+            np.asarray(state.beta))
         return FitResult(self.beta_, history, n_iter, converged)
 
     def lambda_max(self) -> float:
-        """‖Xᵀ s(0)‖_∞ over the placed design (see module docstring)."""
+        """Smallest λ1 for which every PENALIZED coordinate is zero:
+        max_j |g_j| / pf_j over penalized columns, with the gradient taken
+        at the NULL model — unpenalized coordinates (the intercept) are
+        fitted first, since they are active at every λ.  Without
+        unpenalized coordinates this is the classic ‖Xᵀ s(0)‖_∞ at zero
+        margins (plus offsets)."""
         if self._lmax is None:
-            xb0 = self._place_row(np.zeros((self._n_tot,), np.float32))
-            self._lmax = float(np.abs(self._grad(xb0)).max())
+            pen = self._penf_host > _PF_EPS
+            if not pen.any():
+                raise ValueError(
+                    "lambda_max undefined: every feature is unpenalized")
+            state = self._init_state(None)
+            if (~pen).any():
+                # null fit: only the unpenalized coordinates move (λ is
+                # irrelevant for them); same compiled superstep
+                state, _, _, _ = self._run(
+                    state, 0.0, 0.0, active=(~pen).astype(np.float32),
+                    max_outer=50)
+            g = np.abs(self._grad(state.xb))
+            self._lmax = float((g[pen] / self._penf_host[pen]).max())
         return self._lmax
 
-    def fit_path(self, lambdas=None, *, n_lambdas: int = 100,
-                 lam_ratio: float = 1e-3, lam2: Optional[float] = None,
-                 screen: bool = True, kkt_slack: float = 1e-4,
-                 max_outer=None, tol=None, verbose=False,
-                 ckpt_manager=None) -> PathResult:
-        """Warm-started fit over a decreasing λ1 grid.
-
-        ``lambdas=None`` builds the standard GLMNET grid: ``n_lambdas``
-        log-spaced points from λ_max = ‖Xᵀ s(0)‖_∞ down to
-        λ_max·``lam_ratio``.  Each λ warm-starts from the previous solution
-        (β and the maintained margins Xβ stay on device); ``screen=True``
-        freezes strong-rule-cold coordinates during the sweeps and verifies
-        the KKT conditions on the full gradient afterwards, re-fitting with
-        any violators unfrozen, so screening never changes the solution.
-
-        ``ckpt_manager`` extends checkpointing to path state: after each λ
-        the warm (β, Xβ, μ) plus the per-λ results so far are saved, and a
-        later call with the same grid resumes mid-grid.
-        """
-        cfg = self.config
-        lam2 = cfg.lam2 if lam2 is None else float(lam2)
+    def _make_grid(self, lambdas, n_lambdas, lam_ratio):
         if lambdas is None:
             lmax = self.lambda_max()
             lambdas = np.logspace(np.log10(lmax),
@@ -551,7 +834,50 @@ class GLMSolver:
         if len(lambdas) > 1 and not np.all(np.diff(lambdas) < 0):
             raise ValueError("fit_path expects a strictly decreasing λ1 "
                              "grid (warm starts go dense-ward)")
+        return lambdas
+
+    def _deviance(self, xb_dev, weights_dev) -> float:
+        """Total weighted deviance of the maintained margins over the rows
+        selected by ``weights_dev`` — evaluated in place on the placed
+        row vectors (one scalar comes back per call; the distributed
+        margins are never gathered to host)."""
+        if self._dev_fn is None:
+            fam = glm.get_family(self.config.family)
+            ax_d = self.axis_data
+
+            def dev(y, xb, w, off):
+                d = fam.deviance(y, xb, weights=w, offset=off)
+                return jax.lax.psum(d, ax_d) if ax_d is not None else d
+
+            if self.mesh is None:
+                self._dev_fn = jax.jit(dev)
+            else:
+                self._dev_fn = jax.jit(compat.shard_map(
+                    dev, mesh=self.mesh,
+                    in_specs=(self._row_spec,) * 4, out_specs=P(),
+                    check_vma=False))
+        return float(self._dev_fn(self._ys, xb_dev, weights_dev,
+                                  self._offsets))
+
+    def _path_impl(self, lambdas: np.ndarray, lam2: float, *,
+                   weights=None, eval_weights=None, screen=True,
+                   kkt_slack=1e-4, max_outer=None, tol=None, verbose=False,
+                   ckpt_manager=None):
+        """Warm-started path driver over a fixed decreasing grid.
+
+        ``weights``: placed row weights (None = session weights) — the CV
+        fold mechanism.  ``eval_weights``: host row weights of a held-out
+        set; when given, the mean validation deviance is recorded per λ
+        (evaluated on device against the maintained margins).
+        Returns (betas_packed, f, nnz, n_iters, converged, val_dev, state).
+        """
+        cfg = self.config
         K = len(lambdas)
+        pf = self._penf_host
+        unpen = pf <= _PF_EPS
+        if eval_weights is not None:
+            ew_dev = self._place_row(np.asarray(eval_weights, np.float32))
+            ew_sum = float(np.asarray(eval_weights).sum())
 
         state = self._init_state(None)
         betas_packed = np.zeros((K, self._p_tot), np.float32)
@@ -559,6 +885,7 @@ class GLMSolver:
         nnz = np.zeros((K,), np.int64)
         n_iters = np.zeros((K,), np.int64)
         converged = np.zeros((K,), bool)
+        val_dev = np.full((K,), np.nan) if eval_weights is not None else None
         start_k = 0
 
         if ckpt_manager is not None and ckpt_manager.latest_step() is not None:
@@ -581,9 +908,11 @@ class GLMSolver:
                 raise ValueError(
                     "path checkpoint was written for a different λ grid; "
                     "pass the same lambdas/lam2 to resume")
-            state = state._replace(beta=saved["beta"], xb=saved["xb"],
-                                   mu=saved["mu"])
-            saved_betas = np.asarray(saved["path_betas"])
+            state = state._replace(
+                beta=self._place_feat(self._adapt_cols(saved["beta"])),
+                xb=self._place_row(self._adapt_rows(saved["xb"])),
+                mu=jnp.float32(np.asarray(saved["mu"])))
+            saved_betas = self._adapt_cols(saved["path_betas"])
             betas_packed[:start_k] = saved_betas[:start_k]
             for name, arr in (("f", f), ("nnz", nnz),
                               ("n_iters", n_iters), ("converged", converged)):
@@ -598,39 +927,45 @@ class GLMSolver:
                                    step=jnp.int32(0))
             if screen:
                 # sequential strong rule (Tibshirani et al. 2012):
-                # |g_j| = |[Xᵀ s(β_{k-1})]_j| ≥ 2λ_k − λ_{k-1} — plus every
-                # currently-active coordinate; the previous λ's final KKT
-                # gradient IS the gradient at this warm iterate, so reuse it
-                g = self._grad(state.xb) if g_warm is None else g_warm
+                # |g_j| = |[Xᵀ s(β_{k-1})]_j| ≥ pf_j (2λ_k − λ_{k-1}) — plus
+                # every currently-active and every unpenalized coordinate;
+                # the previous λ's final KKT gradient IS the gradient at
+                # this warm iterate, so reuse it
+                g = self._grad(state.xb, weights) if g_warm is None \
+                    else g_warm
                 thresh = 2.0 * lam1 - (lam_prev if lam_prev is not None
                                        else lam1)
-                active = (np.abs(g) >= thresh - 1e-12) | \
-                    (np.asarray(state.beta) != 0.0)
+                active = (np.abs(g) >= pf * thresh - 1e-12) | \
+                    (np.asarray(state.beta) != 0.0) | unpen
                 it_k = 0
                 for _ in range(8):
                     state, hist, it_round, conv_k = self._run(
-                        state, lam1, lam2, active=active,
+                        state, lam1, lam2, weights=weights, active=active,
                         max_outer=max_outer, tol=tol, verbose=verbose)
                     it_k += it_round
                     # KKT post-check on the FULL gradient: a screened-out
-                    # coordinate (β_j = 0) is truly optimal iff |g_j| ≤ λ1
-                    g = self._grad(state.xb)
+                    # coordinate (β_j = 0) is truly optimal iff
+                    # |g_j| ≤ λ1 pf_j
+                    g = self._grad(state.xb, weights)
                     viol = (~active) & (np.abs(g) >
-                                        lam1 * (1.0 + kkt_slack) + 1e-7)
+                                        pf * lam1 * (1.0 + kkt_slack) + 1e-7)
                     if not viol.any():
                         break
                     active |= viol
                 g_warm = g
             else:
                 state, hist, it_k, conv_k = self._run(
-                    state, lam1, lam2, max_outer=max_outer, tol=tol,
-                    verbose=verbose)
+                    state, lam1, lam2, weights=weights, max_outer=max_outer,
+                    tol=tol, verbose=verbose)
             betas_packed[k] = np.asarray(state.beta)
             if hist["f"]:
                 f[k] = hist["f"][-1]
                 nnz[k] = int(hist["nnz"][-1])
             n_iters[k] = it_k
             converged[k] = conv_k
+            if val_dev is not None:
+                val_dev[k] = self._deviance(state.xb, ew_dev) / ew_sum \
+                    if ew_sum > 0 else np.nan
             lam_prev = lam1
             if verbose:
                 print(f"[path {k + 1}/{K}] lam1={lam1:.6g} f={f[k]:.8f} "
@@ -651,14 +986,123 @@ class GLMSolver:
                                            converged[:k + 1].tolist()}})
         if ckpt_manager is not None:
             ckpt_manager.wait()
+        return betas_packed, f, nnz, n_iters, converged, val_dev, state
+
+    def _path_result(self, lambdas, lam2, betas_packed, f, nnz, n_iters,
+                     converged) -> PathResult:
+        K = len(lambdas)
+        if K:
+            pairs = [self._unpack_user(b) for b in betas_packed]
+            betas = np.stack([b for b, _ in pairs])
+            intercepts = np.asarray([b0 for _, b0 in pairs], np.float32)
+        else:
+            betas = np.zeros((0, self._p_user), np.float32)
+            intercepts = np.zeros((0,), np.float32)
+        return PathResult(lambdas, lam2, betas, f, nnz, n_iters, converged,
+                          intercepts if self.fit_intercept else None)
+
+    def fit_path(self, lambdas=None, *, n_lambdas: int = 100,
+                 lam_ratio: float = 1e-3, lam2: Optional[float] = None,
+                 screen: bool = True, kkt_slack: float = 1e-4,
+                 max_outer=None, tol=None, verbose=False,
+                 ckpt_manager=None) -> PathResult:
+        """Warm-started fit over a decreasing λ1 grid.
+
+        ``lambdas=None`` builds the standard GLMNET grid: ``n_lambdas``
+        log-spaced points from λ_max = max_j |g_j(0)|/pf_j down to
+        λ_max·``lam_ratio``.  Each λ warm-starts from the previous solution
+        (β and the maintained margins Xβ stay on device); ``screen=True``
+        freezes strong-rule-cold coordinates during the sweeps and verifies
+        the KKT conditions on the full gradient afterwards, re-fitting with
+        any violators unfrozen, so screening never changes the solution.
+
+        ``ckpt_manager`` extends checkpointing to path state: after each λ
+        the warm (β, Xβ, μ) plus the per-λ results so far are saved, and a
+        later call with the same grid resumes mid-grid.
+        """
+        cfg = self.config
+        lam2 = cfg.lam2 if lam2 is None else float(lam2)
+        lambdas = self._make_grid(lambdas, n_lambdas, lam_ratio)
+        betas_packed, f, nnz, n_iters, converged, _, state = self._path_impl(
+            lambdas, lam2, screen=screen, kkt_slack=kkt_slack,
+            max_outer=max_outer, tol=tol, verbose=verbose,
+            ckpt_manager=ckpt_manager)
+        self._state = state
+        result = self._path_result(lambdas, lam2, betas_packed, f, nnz,
+                                   n_iters, converged)
+        if len(lambdas):
+            self.beta_ = result.betas[-1]
+            self.intercept_ = float(result.intercepts[-1]) \
+                if result.intercepts is not None else 0.0
+        return result
+
+    def fit_cv(self, n_folds: int = 5, *, lambdas=None,
+               n_lambdas: int = 100, lam_ratio: float = 1e-3,
+               lam2: Optional[float] = None, seed: int = 0,
+               screen: bool = True, max_outer=None, tol=None,
+               verbose=False) -> CVResult:
+        """Mask-based K-fold cross-validation over the λ path — one
+        compiled superstep for everything.
+
+        Folds are runtime row masks on the one packed, mesh-placed design:
+        fold f trains with weights ``w·[fold ≠ f]`` and validates on
+        ``w·[fold = f]`` — no data movement, no recompilation (the weight
+        vector is a superstep argument).  Every fold runs a warm-started
+        path over the SAME full-data λ grid; λ is selected by mean
+        validation deviance; the returned coefficients are the full-data
+        path's solution at the selected λ (the refit on all rows).
+
+        Protocol note: with ``standardize=True`` the column scaling is the
+        SESSION's (computed once from all rows at construction) — folds are
+        penalized in a shared scale rather than re-standardized per
+        training fold as cv.glmnet does.  That is the price of the
+        zero-data-movement design; with K-fold-sized validation sets the
+        moment perturbation is O(1/K) and the selected λ is ordinarily
+        unchanged (DESIGN.md §5).
+        """
+        if n_folds < 2:
+            raise ValueError("fit_cv needs n_folds >= 2")
+        cfg = self.config
+        lam2 = cfg.lam2 if lam2 is None else float(lam2)
+        lambdas = self._make_grid(lambdas, n_lambdas, lam_ratio)
+        K = len(lambdas)
+        n = self._n_user
+
+        # full-data path: the λ grid anchor and the final refit
+        betas_packed, f, nnz, n_iters, converged, _, state = self._path_impl(
+            lambdas, lam2, screen=screen, max_outer=max_outer, tol=tol,
+            verbose=verbose)
+        full_path = self._path_result(lambdas, lam2, betas_packed, f, nnz,
+                                      n_iters, converged)
+
+        rng = np.random.default_rng(seed)
+        fold_of = np.full((self._n_tot,), -1, np.int64)   # padding: no fold
+        fold_of[:n] = rng.permuted(np.arange(n) % n_folds)
+
+        dev_folds = np.full((n_folds, K), np.nan)
+        for fold in range(n_folds):
+            w_tr = self._wobs_host * (fold_of != fold)
+            w_val = self._wobs_host * (fold_of == fold)
+            if verbose:
+                print(f"[cv fold {fold + 1}/{n_folds}] "
+                      f"train w={w_tr.sum():.0f} val w={w_val.sum():.0f}")
+            _, _, _, _, _, val_dev, _ = self._path_impl(
+                lambdas, lam2, weights=self._place_row(w_tr),
+                eval_weights=w_val, screen=screen, max_outer=max_outer,
+                tol=tol, verbose=False)
+            dev_folds[fold] = val_dev
+
+        dev_mean = np.nanmean(dev_folds, axis=0)
+        dev_se = np.nanstd(dev_folds, axis=0, ddof=1) / np.sqrt(n_folds)
+        best = int(np.nanargmin(dev_mean))
+        lam_best = float(lambdas[best])
 
         self._state = state
-        p = self._info.shape[1]
-        betas = np.stack([self._info.unpack_beta(b) for b in betas_packed]) \
-            if K else np.zeros((0, p), np.float32)
-        if K:
-            self.beta_ = betas[-1]
-        return PathResult(lambdas, lam2, betas, f, nnz, n_iters, converged)
+        self.beta_ = full_path.betas[best]
+        self.intercept_ = float(full_path.intercepts[best]) \
+            if full_path.intercepts is not None else 0.0
+        return CVResult(lambdas, lam2, dev_folds, dev_mean, dev_se, best,
+                        lam_best, full_path, self.beta_, self.intercept_)
 
     # ---------------------------------------------------------- evaluation
 
@@ -667,18 +1111,23 @@ class GLMSolver:
             return X_new.matvec(beta)
         return np.asarray(X_new, np.float32) @ beta
 
-    def predict(self, X_new, *, beta=None, kind: str = "response"):
-        """Predict on new rows with the last fitted β (or a given one).
+    def predict(self, X_new, *, beta=None, intercept=None, offset=None,
+                kind: str = "response"):
+        """Predict on new rows with the last fitted (β, intercept) — or a
+        given one — plus an optional per-row ``offset``.
 
-        ``kind="link"`` returns raw margins Xβ; ``"response"`` applies the
-        family's inverse link (probabilities for logistic/probit, means for
-        squared/poisson).
+        ``kind="link"`` returns raw margins Xβ + b₀ + o; ``"response"``
+        applies the family's inverse link (probabilities for
+        logistic/probit, means for squared/poisson).
         """
         beta = self.beta_ if beta is None else np.asarray(beta, np.float32)
         if beta is None:
             raise ValueError("no fitted coefficients; call fit/fit_path "
                              "first or pass beta=...")
-        m = self._margins(X_new, beta)
+        intercept = self.intercept_ if intercept is None else float(intercept)
+        m = self._margins(X_new, beta) + intercept
+        if offset is not None:
+            m = m + np.asarray(offset, np.float32)
         if kind == "link":
             return m
         if kind != "response":
@@ -687,13 +1136,14 @@ class GLMSolver:
         fam = glm.get_family(self.config.family)
         return np.asarray(fam.predict(jnp.asarray(m)))
 
-    def score(self, X_new, y_new, *, beta=None) -> float:
+    def score(self, X_new, y_new, *, beta=None, intercept=None,
+              offset=None) -> float:
         """Family-appropriate goodness of fit on held-out rows: accuracy
         for the binary families (labels in {-1, +1}), R² for squared loss,
         and mean negative loss (higher is better) for poisson."""
         y_new = np.asarray(y_new, np.float32)
-        beta = self.beta_ if beta is None else np.asarray(beta, np.float32)
-        m = self._margins(X_new, beta)
+        m = self.predict(X_new, beta=beta, intercept=intercept,
+                         offset=offset, kind="link")
         family = self.config.family
         if family in ("logistic", "probit"):
             return float(((m > 0) == (y_new > 0)).mean())

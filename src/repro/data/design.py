@@ -86,6 +86,22 @@ class DesignMatrix:
         KKT/strong-rule screening (solver.py)."""
         raise NotImplementedError
 
+    def col_moments(self, weights):
+        """Weighted first/second column moments in packed column order:
+        (Σ_i w_i x_ij, Σ_i w_i x_ij²), both (n_tiles * T,).  Local partials —
+        caller psums over the data axis and divides by Σw.  Powers
+        ``GLMSolver(standardize=True)`` (weighted column means/norms)."""
+        raise NotImplementedError
+
+    def scale_columns(self, scale, center=None):
+        """Return a NEW design whose packed column j holds
+        ``(x_j - center_j) * scale_j`` (center None = 0).  Centering is only
+        supported by dense layouts — it would densify a brick layout — and
+        padded rows pick up ``-center_j``, which is inert because every
+        consumer weights rows by the observation-weight vector (0 on
+        padding)."""
+        raise NotImplementedError
+
     def to_dense(self):
         """Materialize the local block (tests/debugging only)."""
         raise NotImplementedError
@@ -149,6 +165,13 @@ class DenseDesign(DesignMatrix):
 
     def rmatvec(self, r):
         return self.data.T @ r
+
+    def col_moments(self, weights):
+        return self.data.T @ weights, (self.data * self.data).T @ weights
+
+    def scale_columns(self, scale, center=None):
+        data = self.data if center is None else self.data - center[None, :]
+        return DenseDesign(data * scale[None, :], self.tile_size)
 
     def to_dense(self):
         return self.data
@@ -280,6 +303,45 @@ class BlockSparseDesign(DesignMatrix):
                                   num_segments=self._n_tiles)
         return out.reshape(-1)
 
+    def col_moments(self, weights):
+        w2 = weights.reshape(self.n_row_blocks, self.row_block)
+        wk = w2[self.brick_row]                        # (B, rb)
+        s1 = jax.ops.segment_sum(
+            jnp.einsum("kit,ki->kt", self.bricks, wk), self.brick_tile,
+            num_segments=self._n_tiles)
+        s2 = jax.ops.segment_sum(
+            jnp.einsum("kit,ki->kt", self.bricks * self.bricks, wk),
+            self.brick_tile, num_segments=self._n_tiles)
+        return s1.reshape(-1), s2.reshape(-1)
+
+    def scale_columns(self, scale, center=None):
+        """Per-column rescale of the brick values.  ``scale`` is (p_loc,)
+        for a local design; with ``leading == 2`` it is (M, p_loc) — columns
+        vary only over the model axis, so one scale row serves every data
+        shard.  Centering is refused (it would densify the layout; callers
+        fall back to scale-only standardization — DESIGN.md §5)."""
+        if center is not None:
+            raise ValueError(
+                "BlockSparseDesign cannot center columns (centering fills "
+                "every empty brick); use scale-only standardization")
+        T = self.tile_size
+        if self.leading == 0:
+            scale2 = scale.reshape(self._n_tiles, T)
+            sb = scale2[self.brick_tile]               # (B, T)
+            bricks = self.bricks * sb[:, None, :]
+        elif self.leading == 2:
+            M = self.bricks.shape[1]
+            scale2 = scale.reshape(M, self._n_tiles, T)
+            # (D, M, B, T): per-brick column scales gathered by tile id
+            sb = scale2[jnp.arange(M)[None, :, None], self.brick_tile]
+            bricks = self.bricks * sb[:, :, :, None, :]
+        else:
+            raise ValueError(f"unsupported leading={self.leading}")
+        return BlockSparseDesign(
+            bricks, self.brick_row, self.brick_tile, self.tile_ptr,
+            self.tile_size, self.row_block, self.n_rows, self._n_tiles,
+            self.max_bricks_per_tile, leading=self.leading)
+
     def to_dense(self):
         rb, T = self.row_block, self.tile_size
         out = jnp.zeros((self.n_row_blocks, rb, self._n_tiles, T),
@@ -313,11 +375,18 @@ class DesignInfo:
         return np.asarray(beta_packed)[self.col_of_feature]
 
     def pack_beta(self, beta: np.ndarray, p_padded: int) -> np.ndarray:
-        out = np.zeros((p_padded,), np.float32)
+        return self.pack_cols(beta, p_padded, fill=0.0)
+
+    def pack_cols(self, values: np.ndarray, p_padded: int,
+                  fill: float = 0.0) -> np.ndarray:
+        """Scatter a per-original-feature vector into packed column order;
+        padding columns get ``fill`` (0 for β, 1 for penalty factors /
+        scales)."""
+        out = np.full((p_padded,), fill, np.float32)
         if self.col_of_feature is None:
-            out[:len(beta)] = beta
+            out[:len(values)] = values
         else:
-            out[self.col_of_feature] = beta
+            out[self.col_of_feature] = values
         return out
 
 

@@ -1,0 +1,10 @@
+"""Estimator-grade public frontend for the d-GLMNET solver stack.
+
+``repro.glm.estimators`` is the documented entry point (sklearn-style
+``fit/predict/score``); ``repro.core.solver.GLMSolver`` is the power-user
+session layer underneath.
+"""
+from repro.glm.estimators import (ElasticNetGLM, LogisticRegressionCD,
+                                  PoissonRegressorCD)
+
+__all__ = ["ElasticNetGLM", "LogisticRegressionCD", "PoissonRegressorCD"]

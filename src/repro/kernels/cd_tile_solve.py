@@ -27,7 +27,8 @@ from jax.experimental import pallas as pl
 MU, NU, LAM1, LAM2 = 0, 1, 2, 3
 
 
-def _kernel(G_ref, g_ref, h_ref, beta_ref, dbeta_ref, params_ref, out_ref):
+def _kernel(G_ref, g_ref, h_ref, beta_ref, dbeta_ref, params_ref, pf_ref,
+            out_ref):
     T = g_ref.shape[-1]
     mu = params_ref[0, MU]
     nu = params_ref[0, NU]
@@ -36,7 +37,9 @@ def _kernel(G_ref, g_ref, h_ref, beta_ref, dbeta_ref, params_ref, out_ref):
 
     h = h_ref[0, :]
     beta = beta_ref[0, :]
-    den = mu * h + nu + lam2
+    pf = pf_ref[0, :]
+    lam1v = lam1 * pf          # per-coordinate penalty factors (intercept: 0)
+    den = mu * h + nu + lam2 * pf
     den_safe = jnp.maximum(den, 1e-30)
 
     def body(j, carry):
@@ -46,11 +49,12 @@ def _kernel(G_ref, g_ref, h_ref, beta_ref, dbeta_ref, params_ref, out_ref):
         d_j = jax.lax.dynamic_index_in_dim(d, j, keepdims=False)
         b_j = jax.lax.dynamic_index_in_dim(beta, j, keepdims=False)
         h_j = jax.lax.dynamic_index_in_dim(h, j, keepdims=False)
+        l1_j = jax.lax.dynamic_index_in_dim(lam1v, j, keepdims=False)
         den_j = jax.lax.dynamic_index_in_dim(den, j, keepdims=False)
         dens_j = jax.lax.dynamic_index_in_dim(den_safe, j, keepdims=False)
 
         num = g_j + mu * h_j * (b_j + d_j) + nu * b_j
-        u = jnp.sign(num) * jnp.maximum(jnp.abs(num) - lam1, 0.0) / dens_j
+        u = jnp.sign(num) * jnp.maximum(jnp.abs(num) - l1_j, 0.0) / dens_j
         u = jnp.where(den_j > 0, u, b_j)
         d_new = u - b_j
         delta = d_new - d_j
@@ -67,8 +71,11 @@ def _kernel(G_ref, g_ref, h_ref, beta_ref, dbeta_ref, params_ref, out_ref):
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def cd_tile_solve_pallas(G, g, h, beta_t, dbeta_t, params, *, interpret=True):
-    """params: (4,) f32 [mu, nu, lam1, lam2]. Returns new dbeta_t (T,)."""
+def cd_tile_solve_pallas(G, g, h, beta_t, dbeta_t, params, penf, *,
+                         interpret=True):
+    """params: (4,) f32 [mu, nu, lam1, lam2]; penf: (T,) per-coordinate
+    penalty factors (all ones when unpenalized scaling is not in play).
+    Returns new dbeta_t (T,)."""
     T = g.shape[0]
     f32 = jnp.float32
     out = pl.pallas_call(
@@ -81,6 +88,7 @@ def cd_tile_solve_pallas(G, g, h, beta_t, dbeta_t, params, *, interpret=True):
             pl.BlockSpec((1, T), lambda i: (0, 0)),   # beta
             pl.BlockSpec((1, T), lambda i: (0, 0)),   # dbeta
             pl.BlockSpec((1, 4), lambda i: (0, 0)),   # params
+            pl.BlockSpec((1, T), lambda i: (0, 0)),   # penalty factors
         ],
         out_specs=pl.BlockSpec((1, T), lambda i: (0, 0)),
         out_shape=jax.ShapeDtypeStruct((1, T), f32),
@@ -92,5 +100,6 @@ def cd_tile_solve_pallas(G, g, h, beta_t, dbeta_t, params, *, interpret=True):
         beta_t.astype(f32)[None, :],
         dbeta_t.astype(f32)[None, :],
         params.astype(f32)[None, :],
+        penf.astype(f32)[None, :],
     )
     return out[0]

@@ -15,6 +15,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.glm import POISSON_W_CLIP
+
 _SQRT2 = 1.4142135623730951
 _LOG_SQRT_2PI = 0.9189385332046727
 
@@ -44,8 +46,10 @@ def _probit(y, m):
 
 
 def _poisson(y, m):
+    # curvature clipped at POISSON_W_CLIP (glm.py): the effective curvature
+    # bound of the unbounded poisson family; loss/gradient stay exact
     mu = jnp.exp(m)
-    return mu - y * m, y - mu, mu
+    return mu - y * m, y - mu, jnp.minimum(mu, POISSON_W_CLIP)
 
 
 _STATS = {"logistic": _logistic, "squared": _squared,
@@ -53,6 +57,8 @@ _STATS = {"logistic": _logistic, "squared": _squared,
 
 
 def _kernel(y_ref, xb_ref, mask_ref, loss_ref, s_ref, w_ref, *, family):
+    # mask carries the full per-example observation weight (sample weight ×
+    # fold mask × row padding) — weighting and masking are the same multiply
     y = y_ref[...]
     m = xb_ref[...]
     mask = mask_ref[...]

@@ -17,9 +17,11 @@ import os
 import jax
 import jax.numpy as jnp
 
+from repro.core import glm as glm_lib
 from repro.kernels import ref
 from repro.kernels.alpha_search import alpha_search_pallas
 from repro.kernels.cd_tile_solve import cd_tile_solve_pallas
+from repro.kernels.glm_stats import _STATS as _PALLAS_STATS
 from repro.kernels.glm_stats import glm_stats_pallas
 from repro.kernels.tile_gram import tile_gram_pallas
 
@@ -54,16 +56,24 @@ def _pack_2d(*vecs, block_rows):
 # ---------------------------------------------------------------------------
 
 
-def cd_tile_solve(G, g, h, beta_t, dbeta_t, mu, nu, lam1, lam2, *, backend=None):
-    """Exact sequential tile solve; see kernels/cd_tile_solve.py."""
+def cd_tile_solve(G, g, h, beta_t, dbeta_t, mu, nu, lam1, lam2, *,
+                  penf=None, backend=None):
+    """Exact sequential tile solve; see kernels/cd_tile_solve.py.
+
+    ``penf``: optional (T,) per-coordinate penalty factors — coordinate j is
+    solved under (lam1·penf_j, lam2·penf_j); 0 = unpenalized (intercept).
+    """
     backend = backend or default_backend()
     if backend == "ref":
-        return ref.cd_tile_solve(G, g, h, beta_t, dbeta_t, mu, nu, lam1, lam2)
+        return ref.cd_tile_solve(G, g, h, beta_t, dbeta_t, mu, nu, lam1,
+                                 lam2, penf=penf)
     params = jnp.stack([jnp.asarray(mu, jnp.float32),
                         jnp.asarray(nu, jnp.float32),
                         jnp.asarray(lam1, jnp.float32),
                         jnp.asarray(lam2, jnp.float32)])
-    return cd_tile_solve_pallas(G, g, h, beta_t, dbeta_t, params,
+    if penf is None:
+        penf = jnp.ones_like(g)
+    return cd_tile_solve_pallas(G, g, h, beta_t, dbeta_t, params, penf,
                                 interpret=_interpret())
 
 
@@ -81,35 +91,57 @@ def tile_gram(bricks, rows, n_valid, w2, r2, *, backend=None):
                             interpret=_interpret())
 
 
-def glm_stats(y, xb, family, *, mask=None, backend=None, block_rows=256):
-    """(loss_i, s_i, w_i) per example. 1-D in, 1-D out."""
+def _family_name(family):
+    return family if isinstance(family, str) else family.name
+
+
+def glm_stats(y, xb, family, *, weights=None, offset=None, backend=None,
+              block_rows=256):
+    """(loss_i, s_i, w_i) per example. 1-D in, 1-D out.
+
+    ``weights`` is the combined per-example observation weight (sample
+    weight × CV fold mask × row-padding mask — all the same multiply);
+    ``offset`` shifts the margins (stats evaluated at ``xb + offset``).
+    """
     backend = backend or default_backend()
+    fname = _family_name(family)
+    if fname not in _PALLAS_STATS and backend != "ref":
+        backend = "ref"      # families without a Pallas stats body
     n = y.shape[0]
-    if mask is None:
-        mask = jnp.ones((n,), jnp.float32)
+    if weights is None:
+        weights = jnp.ones((n,), jnp.float32)
     if backend == "ref":
-        return ref.glm_stats(y, xb, mask, family)
-    packed, pad_mask, _ = _pack_2d(y, xb, mask, block_rows=block_rows)
-    y2, xb2, mask_user = packed
-    mask2 = mask_user * pad_mask  # combine user mask with padding mask
-    loss2, s2, w2 = glm_stats_pallas(y2, xb2, mask2, family=family,
+        return ref.glm_stats(y, xb, weights, family, offset=offset)
+    if offset is not None:
+        xb = xb + offset              # fold the offset into the margins
+    packed, pad_mask, _ = _pack_2d(y, xb, weights, block_rows=block_rows)
+    y2, xb2, w_user = packed
+    mask2 = w_user * pad_mask  # combine observation weights + padding mask
+    loss2, s2, w2 = glm_stats_pallas(y2, xb2, mask2, family=fname,
                                      block_rows=block_rows,
                                      interpret=_interpret())
     flat = lambda a: a.reshape(-1)[:n]
     return flat(loss2), flat(s2), flat(w2)
 
 
-def alpha_search(y, xb, xdb, alphas, family, *, mask=None, backend=None,
-                 block_rows=256):
-    """losses[k] = sum_i l(y_i, xb_i + alphas[k]*xdb_i)."""
+def alpha_search(y, xb, xdb, alphas, family, *, weights=None, offset=None,
+                 backend=None, block_rows=256):
+    """losses[k] = sum_i weights_i * l(y_i, xb_i + o_i + alphas[k]*xdb_i)."""
     backend = backend or default_backend()
+    fname = _family_name(family)
+    if fname not in _PALLAS_STATS and backend != "ref":
+        backend = "ref"      # families without a Pallas stats body
     n = y.shape[0]
-    if mask is None:
-        mask = jnp.ones((n,), jnp.float32)
+    if weights is None:
+        weights = jnp.ones((n,), jnp.float32)
     if backend == "ref":
-        return ref.alpha_search(y, xb, xdb, mask, alphas, family)
-    packed, pad_mask, _ = _pack_2d(y, xb, xdb, mask, block_rows=block_rows)
-    y2, xb2, xdb2, mask2 = packed
-    mask2 = mask2 * pad_mask
-    return alpha_search_pallas(y2, xb2, xdb2, mask2, alphas, family=family,
+        return ref.alpha_search(y, xb, xdb, weights, alphas, family,
+                                offset=offset)
+    if offset is not None:
+        xb = xb + offset
+    packed, pad_mask, _ = _pack_2d(y, xb, xdb, weights,
+                                   block_rows=block_rows)
+    y2, xb2, xdb2, w2 = packed
+    mask2 = w2 * pad_mask
+    return alpha_search_pallas(y2, xb2, xdb2, mask2, alphas, family=fname,
                                block_rows=block_rows, interpret=_interpret())

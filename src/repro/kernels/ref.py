@@ -18,7 +18,7 @@ from repro.core import glm as glm_lib
 # tile, using the tile Gram matrix (GLMNET "covariance updates" re-blocked).
 # ---------------------------------------------------------------------------
 
-def cd_tile_solve(G, g, h, beta_t, dbeta_t, mu, nu, lam1, lam2):
+def cd_tile_solve(G, g, h, beta_t, dbeta_t, mu, nu, lam1, lam2, penf=None):
     """One cyclic pass of exact coordinate minimization over a feature tile.
 
     Args:
@@ -30,6 +30,9 @@ def cd_tile_solve(G, g, h, beta_t, dbeta_t, mu, nu, lam1, lam2):
       beta_t:  (T,) current outer-iterate weights for the tile (FIXED).
       dbeta_t: (T,) current accumulated step for the tile (updated).
       mu, nu, lam1, lam2: scalars (see DESIGN.md update rule).
+      penf: optional (T,) per-coordinate penalty factors — coordinate j sees
+        the effective penalties (lam1 penf_j, lam2 penf_j); penf_j = 0 is an
+        unpenalized coordinate (intercept).  None = all ones.
 
     Returns:
       (T,) new dbeta_t.
@@ -38,12 +41,15 @@ def cd_tile_solve(G, g, h, beta_t, dbeta_t, mu, nu, lam1, lam2):
     g_k by  -mu * delta * G[k, j]  for every k — no re-touch of X needed.
     """
     T = g.shape[0]
-    den = mu * h + nu + lam2
+    pf = jnp.ones_like(g) if penf is None else penf
+    lam1v = lam1 * pf
+    lam2v = lam2 * pf
+    den = mu * h + nu + lam2v
 
     def body(j, carry):
         g_c, d_c = carry
         num = g_c[j] + mu * h[j] * (beta_t[j] + d_c[j]) + nu * beta_t[j]
-        u = glm_lib.soft_threshold(num, lam1) / jnp.maximum(den[j], 1e-30)
+        u = glm_lib.soft_threshold(num, lam1v[j]) / jnp.maximum(den[j], 1e-30)
         # dead coordinate (all-zero column, nu == lam2 == 0): keep at 0
         u = jnp.where(den[j] > 0, u, beta_t[j])
         d_new = u - beta_t[j]
@@ -86,23 +92,25 @@ def tile_gram(bricks, rows, n_valid, w2, r2):
 # glm_stats: fused per-example link statistics.
 # ---------------------------------------------------------------------------
 
-def glm_stats(y, xb, mask, family: str):
-    """(loss_i, s_i, w_i) for margin xb, masked (padding rows -> 0)."""
-    fam = glm_lib.get_family(family)
-    loss, s, w = fam.stats(y, xb)
-    return loss * mask, s * mask, w * mask
+def glm_stats(y, xb, weights, family, offset=None):
+    """(loss_i, s_i, w_i) at margins ``xb + offset``, scaled by the
+    per-example ``weights`` (observation weights; padding rows carry 0)."""
+    fam = glm_lib.resolve_family(family)
+    return fam.stats(y, xb, weights=weights, offset=offset)
 
 
 # ---------------------------------------------------------------------------
 # alpha_search: K-candidate line-search objective sweep in one data pass.
 # ---------------------------------------------------------------------------
 
-def alpha_search(y, xb, xdb, mask, alphas, family: str):
-    """losses[k] = sum_i mask_i * l(y_i, xb_i + alphas[k] * xdb_i).
+def alpha_search(y, xb, xdb, weights, alphas, family, offset=None):
+    """losses[k] = sum_i weights_i * l(y_i, xb_i + o_i + alphas[k] * xdb_i).
 
-    Shapes: y, xb, xdb, mask: (n,);  alphas: (K,);  out: (K,).
+    Shapes: y, xb, xdb, weights[, offset]: (n,);  alphas: (K,);  out: (K,).
     """
-    fam = glm_lib.get_family(family)
+    fam = glm_lib.resolve_family(family)
+    if offset is not None:
+        xb = xb + offset
     m = xb[None, :] + alphas[:, None] * xdb[None, :]        # (K, n)
     loss, _, _ = fam.stats(y[None, :], m)
-    return jnp.sum(loss * mask[None, :], axis=-1)
+    return jnp.sum(loss * weights[None, :], axis=-1)

@@ -187,10 +187,12 @@ def lower_glm_cell(shape_name: str, mesh, *, do_compile=True,
         x_specs = P(row_axes, "model")
         X = sds((n, p), jnp.float32, x_specs)
     y = sds((n,), jnp.float32, row_spec)
-    mask = sds((n,), jnp.float32, row_spec)
+    weights = sds((n,), jnp.float32, row_spec)   # obs weights × fold × pad
+    offset = sds((n,), jnp.float32, row_spec)    # margin offsets
     budget = sds((M,), jnp.int32, feat_spec)
     lams = sds((2,), jnp.float32, P())        # runtime [λ1, λ2] (replicated)
     active = sds((p,), jnp.float32, feat_spec)  # screening mask
+    penf = sds((p,), jnp.float32, feat_spec)    # per-feature penalty factors
     state = FitState(
         beta=sds((p,), jnp.float32, feat_spec),
         xb=sds((n,), jnp.float32, row_spec),
@@ -208,11 +210,12 @@ def lower_glm_cell(shape_name: str, mesh, *, do_compile=True,
     if "pod" in mesh.shape:
         axis_data_names = ("pod", "data")
 
-        def superstep_mp(X, y, mask, budget, lams, active, state):
+        def superstep_mp(X, y, weights, offset, budget, lams, active, penf,
+                         state):
             return make_superstep(cfg, axis_data=axis_data_names,
                                   axis_model="model",
-                                  n_tiles_local=n_tiles)(X, y, mask, budget,
-                                                         lams, active, state)
+                                  n_tiles_local=n_tiles)(
+                X, y, weights, offset, budget, lams, active, penf, state)
         fn = superstep_mp
     else:
         fn = superstep
@@ -221,10 +224,11 @@ def lower_glm_cell(shape_name: str, mesh, *, do_compile=True,
     with mesh:
         mapped = jax.jit(compat.shard_map(
             fn, mesh=mesh,
-            in_specs=(x_specs, row_spec, row_spec, feat_spec, P(),
-                      feat_spec, state_specs),
+            in_specs=(x_specs, row_spec, row_spec, row_spec, feat_spec, P(),
+                      feat_spec, feat_spec, state_specs),
             out_specs=(state_specs, metric_spec), check_vma=False))
-        lowered = mapped.lower(X, y, mask, budget, lams, active, state)
+        lowered = mapped.lower(X, y, weights, offset, budget, lams, active,
+                               penf, state)
     rec["lower_s"] = round(time.time() - t0, 2)
     if not do_compile:
         rec["status"] = "lowered"

@@ -2,7 +2,6 @@
 deliberately NOT set here — smoke tests must see the real single CPU
 device.  Multi-device tests run subprocesses (tests/progs/) that set
 XLA_FLAGS before importing jax."""
-import importlib.util
 import os
 import pathlib
 import subprocess
@@ -11,15 +10,10 @@ import sys
 import numpy as np
 import pytest
 
-# Property-test modules need hypothesis; skip them at collection time when it
-# is not installed (clean machines without the `test` extra) instead of
-# erroring the whole run.  (test_kernels.py and test_sharding_utils.py guard
-# the import themselves so their non-property tests still run.)
-if importlib.util.find_spec("hypothesis") is None:
-    collect_ignore = [
-        "test_glm.py",
-        "test_linesearch.py",
-    ]
+# Property-test modules guard their hypothesis import themselves (like
+# test_kernels.py): with hypothesis installed they run the full generative
+# sweeps, without it they fall back to fixed-seed parametrizations — no
+# module is skipped at collection time anymore.
 
 REPO = pathlib.Path(__file__).resolve().parents[1]
 SRC = REPO / "src"

@@ -204,3 +204,83 @@ def test_rmatvec_matches_dense_math(rng):
     dd, _ = design_lib.as_design(dense, 16)
     np.testing.assert_allclose(np.asarray(dd.rmatvec(jnp.asarray(r))),
                                dense.T @ r, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# weighted column moments + column scaling (the standardization operators)
+# ---------------------------------------------------------------------------
+
+def test_col_moments_matches_dense_math(rng):
+    """Bricks and dense designs agree with the direct weighted sums."""
+    coo = _rand_coo(rng)
+    design, info = build_block_sparse(coo, 16, row_block=32)
+    Xp = _packed_dense(coo, design, info)
+    w = rng.uniform(0.0, 2.0, size=design.shape[0]).astype(np.float32)
+    s1, s2 = design.col_moments(jnp.asarray(w))
+    np.testing.assert_allclose(np.asarray(s1), Xp.T @ w, rtol=1e-5,
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(s2), (Xp * Xp).T @ w, rtol=1e-5,
+                               atol=1e-5)
+    dd = DenseDesign(jnp.asarray(Xp), 16)
+    d1, d2 = dd.col_moments(jnp.asarray(w))
+    np.testing.assert_allclose(np.asarray(d1), np.asarray(s1), rtol=1e-5,
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(d2), np.asarray(s2), rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_scale_columns_parity_and_center(rng):
+    coo = _rand_coo(rng)
+    design, info = build_block_sparse(coo, 16, row_block=32)
+    Xp = _packed_dense(coo, design, info)
+    p_pad = design.shape[1]
+    scale = rng.uniform(0.25, 4.0, size=p_pad).astype(np.float32)
+
+    scaled = design.scale_columns(jnp.asarray(scale))
+    np.testing.assert_allclose(np.asarray(scaled.to_dense()),
+                               Xp * scale[None, :], rtol=1e-6, atol=1e-6)
+    # centering would densify the brick layout — refused loudly
+    with pytest.raises(ValueError, match="center"):
+        design.scale_columns(jnp.asarray(scale),
+                             jnp.zeros(p_pad, jnp.float32) + 0.1)
+
+    center = rng.normal(size=p_pad).astype(np.float32)
+    dd = DenseDesign(jnp.asarray(Xp), 16)
+    got = dd.scale_columns(jnp.asarray(scale), jnp.asarray(center))
+    np.testing.assert_allclose(np.asarray(got.to_dense()),
+                               (Xp - center[None, :]) * scale[None, :],
+                               rtol=1e-6, atol=1e-6)
+    # scaled designs keep operator semantics: matvec of the scaled design
+    v = rng.normal(size=p_pad).astype(np.float32)
+    np.testing.assert_allclose(np.asarray(scaled.matvec(jnp.asarray(v))),
+                               (Xp * scale[None, :]) @ v, rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_scale_columns_sharded_leading_axes(rng):
+    """The (D, M)-leading brick layout scales per model-shard column block,
+    matching the localized per-shard scaling."""
+    from repro.data.design import build_block_sparse_sharded
+    coo = _rand_coo(rng, n=64, p=64, nnz=400)
+    D, M, T = 2, 2, 8
+    design, info = build_block_sparse_sharded(coo, D=D, M=M, tile_size=T,
+                                              row_block=16)
+    p_loc = design.shape[1]
+    scale = rng.uniform(0.5, 2.0, size=(M, p_loc)).astype(np.float32)
+    scaled = design.scale_columns(jnp.asarray(scale))
+    for d in range(D):
+        for m in range(M):
+            loc = BlockSparseDesign(
+                design.bricks[d, m], design.brick_row[d, m],
+                design.brick_tile[d, m], design.tile_ptr[d, m],
+                design.tile_size, design.row_block, design.n_rows,
+                design.n_tiles, design.max_bricks_per_tile, leading=0)
+            loc_scaled = loc.scale_columns(jnp.asarray(scale[m]))
+            got = BlockSparseDesign(
+                scaled.bricks[d, m], scaled.brick_row[d, m],
+                scaled.brick_tile[d, m], scaled.tile_ptr[d, m],
+                T, design.row_block, design.n_rows, design.n_tiles,
+                design.max_bricks_per_tile, leading=0)
+            np.testing.assert_allclose(np.asarray(got.to_dense()),
+                                       np.asarray(loc_scaled.to_dense()),
+                                       rtol=1e-6, atol=1e-6)

@@ -1,0 +1,113 @@
+"""Estimator frontend (repro.glm.estimators): sklearn-style fit/predict/
+score semantics, label encoding, CV-driven λ selection and its agreement
+with a direct fit at the selected λ (acceptance criterion)."""
+import numpy as np
+import pytest
+
+from repro.core.dglmnet import DGLMNETConfig
+from repro.data import synthetic
+from repro.glm import ElasticNetGLM, LogisticRegressionCD, PoissonRegressorCD
+
+CFG = dict(tile_size=16, max_outer=80, tol=1e-10, n_lambdas=10, cv=4)
+
+
+def test_logistic_estimator_01_labels():
+    ds = synthetic.make_dense(n=500, p=24, k_true=6, seed=20, intercept=0.3)
+    y01 = (ds.train.y > 0).astype(np.int64)           # {0, 1} encoding
+    est = LogisticRegressionCD(lam1=0.1, lam2=0.05, **CFG)
+    est.fit(ds.train.X, y01)
+    np.testing.assert_array_equal(est.classes_, [0, 1])
+    assert est.coef_.shape == (24,)
+    assert isinstance(est.intercept_, float)
+
+    yhat = est.predict(ds.test.X)
+    assert set(np.unique(yhat)) <= {0, 1}
+    acc = est.score(ds.test.X, (ds.test.y > 0).astype(np.int64))
+    assert acc >= 0.75
+
+    proba = est.predict_proba(ds.test.X)
+    assert proba.shape == (len(ds.test.y), 2)
+    np.testing.assert_allclose(proba.sum(axis=1), 1.0, atol=1e-6)
+    # column 1 is P(classes_[1]) and drives the label
+    np.testing.assert_array_equal(yhat, est.classes_[
+        (proba[:, 1] > 0.5).astype(int)])
+
+
+def test_logistic_estimator_pm1_labels_match_01():
+    """The same data under {−1,+1} vs {0,1} encodings gives the same β."""
+    ds = synthetic.make_dense(n=300, p=16, k_true=4, seed=21)
+    e1 = LogisticRegressionCD(lam1=0.2, **CFG).fit(ds.train.X, ds.train.y)
+    e2 = LogisticRegressionCD(lam1=0.2, **CFG).fit(
+        ds.train.X, (ds.train.y > 0).astype(int))
+    np.testing.assert_allclose(e1.coef_, e2.coef_, atol=1e-6)
+    with pytest.raises(ValueError, match="exactly 2 classes"):
+        LogisticRegressionCD(**CFG).fit(ds.train.X,
+                                        np.arange(len(ds.train.y)))
+
+
+def test_cv_selection_reproduced_by_direct_fit():
+    """Acceptance: fit_cv's selected λ, re-fed to a plain
+    LogisticRegressionCD.fit, reproduces the CV-fitted coefficients."""
+    ds = synthetic.make_dense(n=400, p=32, k_true=5, seed=22)
+    est_cv = LogisticRegressionCD(lam1=None, **CFG)      # λ by 4-fold CV
+    est_cv.fit(ds.train.X, ds.train.y)
+    assert est_cv.cv_result_ is not None
+    K = len(est_cv.cv_result_.lambdas)
+    assert 0 < est_cv.cv_result_.best_index < K - 1      # interior λ
+
+    est_direct = LogisticRegressionCD(lam1=est_cv.lam1_, **CFG)
+    est_direct.fit(ds.train.X, ds.train.y)
+    np.testing.assert_allclose(est_cv.coef_, est_direct.coef_, rtol=1e-3,
+                               atol=2e-3)
+    assert est_cv.intercept_ == pytest.approx(est_direct.intercept_,
+                                              abs=2e-3)
+
+
+def test_poisson_estimator_counts_and_d2():
+    ds = synthetic.make_dense(n=500, p=16, k_true=4, family="poisson",
+                              seed=23)
+    est = PoissonRegressorCD(lam1=0.05, lam2=0.05, **CFG)
+    est.fit(ds.train.X, ds.train.y)
+    mu = est.predict(ds.test.X)
+    assert (mu > 0).all()                      # exp link
+    d2 = est.score(ds.test.X, ds.test.y)
+    assert 0.0 < d2 <= 1.0
+    with pytest.raises(ValueError, match="nonnegative"):
+        PoissonRegressorCD(**CFG).fit(ds.train.X,
+                                      -np.ones(len(ds.train.y)))
+
+
+def test_elasticnet_glm_generic_family_and_offset():
+    ds = synthetic.make_dense(n=400, p=16, k_true=4, family="squared",
+                              seed=24)
+    est = ElasticNetGLM(family="squared", lam1=0.05, lam2=0.05,
+                        standardize=True, **CFG)
+    off = np.full(len(ds.train.y), 0.5, np.float32)
+    est.fit(ds.train.X, ds.train.y, offset=off)
+    # R² on held-out rows, evaluated with the matching offset
+    r2 = est.score(ds.test.X, ds.test.y,
+                   offset=np.full(len(ds.test.y), 0.5, np.float32))
+    assert r2 > 0.5
+    # offset shifts the link by exactly the given amount
+    m0 = est.decision_function(ds.test.X)
+    m1 = est.decision_function(ds.test.X,
+                               offset=np.ones(len(ds.test.y), np.float32))
+    np.testing.assert_allclose(m1 - m0, 1.0, atol=1e-6)
+
+
+def test_family_pinning_and_unfitted_errors():
+    with pytest.raises(ValueError, match="fixed to the"):
+        LogisticRegressionCD(family="poisson")
+    est = ElasticNetGLM(lam1=0.1, **CFG)
+    with pytest.raises(ValueError, match="not fitted"):
+        est.predict(np.zeros((3, 2), np.float32))
+
+
+def test_estimator_config_passthrough():
+    """An explicit DGLMNETConfig wins over the convenience knobs."""
+    cfg = DGLMNETConfig(tile_size=32, coupling="jacobi", max_outer=40)
+    ds = synthetic.make_dense(n=200, p=16, k_true=4, seed=25)
+    est = ElasticNetGLM(lam1=0.3, config=cfg)
+    est.fit(ds.train.X, ds.train.y)
+    assert est.solver_.config.tile_size == 32
+    assert est.solver_.config.coupling == "jacobi"

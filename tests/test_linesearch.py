@@ -1,9 +1,16 @@
 """Line-search unit/property tests (paper Algorithm 3): penalty evaluation
-exactness, Armijo guarantee, trust-region interplay."""
-import hypothesis
-import hypothesis.strategies as st
+exactness (including per-feature penalty factors), Armijo guarantee,
+weighted candidate objectives, trust-region interplay."""
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:          # fixed-seed fallbacks below still run
+    HAVE_HYPOTHESIS = False
 
 from repro.core import glm, linesearch
 from repro.kernels import ops
@@ -32,9 +39,28 @@ def test_penalty_terms_match_direct():
         np.testing.assert_allclose(g, want, rtol=1e-5)
 
 
-@hypothesis.given(seed=st.integers(0, 10_000))
-@hypothesis.settings(deadline=None, max_examples=25)
-def test_armijo_guarantee(seed):
+def test_penalty_terms_with_penalty_factors():
+    """pf scales both L1 and L2 per coordinate; pf = 0 removes a coordinate
+    from the penalty entirely (the intercept mechanism)."""
+    rng = np.random.default_rng(1)
+    p = 30
+    beta = rng.normal(size=p).astype(np.float32)
+    dbeta = rng.normal(size=p).astype(np.float32)
+    pf = rng.uniform(0.0, 2.0, size=p).astype(np.float32)
+    pf[::7] = 0.0
+    alphas = np.array([0.0, 0.5, 1.0], np.float32)
+    lam1, lam2 = 0.9, 0.4
+    got = linesearch.penalty_terms(jnp.asarray(beta), jnp.asarray(dbeta),
+                                   jnp.asarray(alphas), lam1, lam2, None,
+                                   jnp.asarray(pf))
+    for a, g in zip(alphas, np.asarray(got)):
+        b = beta + a * dbeta
+        want = lam1 * (pf * np.abs(b)).sum() \
+            + 0.5 * lam2 * (pf * b ** 2).sum()
+        np.testing.assert_allclose(g, want, rtol=1e-5)
+
+
+def _armijo_guarantee(seed):
     """Whatever direction we hand it, the accepted step satisfies the
     Armijo inequality (or is the final fallback) and never increases f for
     a descent direction scaled small enough."""
@@ -63,6 +89,78 @@ def test_armijo_guarantee(seed):
                                 jnp.asarray(bn), lam1, lam2))
     np.testing.assert_allclose(f_new, float(res.f_new), rtol=2e-4, atol=1e-3)
     assert f_new <= f0 + 1e-4 * max(1.0, abs(f0))
+
+
+if HAVE_HYPOTHESIS:
+    @hypothesis.given(seed=st.integers(0, 10_000))
+    @hypothesis.settings(deadline=None, max_examples=25)
+    def test_armijo_guarantee(seed):
+        _armijo_guarantee(seed)
+else:
+    @pytest.mark.parametrize("seed", [0, 1, 7, 42, 1234])
+    def test_armijo_guarantee(seed):
+        _armijo_guarantee(seed)
+
+
+def test_weighted_search_matches_replicated_rows():
+    """A search under integer observation weights equals the search over
+    the replicated-row problem: identical chosen α and objective."""
+    X, y, beta, _ = _setup(5, n=60, p=12)
+    rng = np.random.default_rng(5)
+    w = rng.integers(1, 4, size=60).astype(np.float32)
+    rep = np.repeat(np.arange(60), w.astype(int))
+    Xr, yr = X[rep], y[rep]
+    lam1, lam2 = 0.2, 0.1
+    fam = glm.LOGISTIC
+    # a genuine descent direction of the WEIGHTED smooth part, so the
+    # search is well-posed (random directions make the fallback tie-prone)
+    _, s_w, _ = fam.stats(jnp.asarray(y), jnp.asarray(X @ beta),
+                          weights=jnp.asarray(w))
+    grad = -(X.T @ np.asarray(s_w))
+    dbeta = (-grad / max(np.linalg.norm(grad), 1e-9)).astype(np.float32)
+
+    def run(Xa, ya, weights):
+        xb = jnp.asarray(Xa @ beta)
+        xdb = jnp.asarray(Xa @ dbeta)
+        wj = None if weights is None else jnp.asarray(weights)
+        loss, s, _ = fam.stats(jnp.asarray(ya), xb, weights=wj)
+        f0 = float(jnp.sum(loss)) + float(glm.penalty(jnp.asarray(beta),
+                                                      lam1, lam2))
+        gdd = float(-jnp.sum(s * xdb))
+        return linesearch.search(
+            jnp.asarray(ya), xb, xdb, jnp.asarray(beta), jnp.asarray(dbeta),
+            family="logistic", lam1=lam1, lam2=lam2, mu=1.0, nu=1e-6,
+            f_current=f0, grad_dot_dir=gdd, quad_form=0.0, weights=wj)
+
+    r_w = run(X, y, w)
+    r_r = run(Xr, yr, None)
+    assert float(r_w.alpha) == float(r_r.alpha)
+    np.testing.assert_allclose(float(r_w.f_new), float(r_r.f_new),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_search_offset_folds_into_margins():
+    """search(offset=o) == search at margins xb + o with no offset."""
+    X, y, beta, dbeta = _setup(9, n=80, p=10)
+    rng = np.random.default_rng(9)
+    o = rng.normal(size=80).astype(np.float32)
+    xb = jnp.asarray(X @ beta)
+    xdb = jnp.asarray(X @ dbeta)
+    fam = glm.LOGISTIC
+    loss, s, _ = fam.stats(jnp.asarray(y), xb, offset=jnp.asarray(o))
+    f0 = float(jnp.sum(loss)) + float(glm.penalty(jnp.asarray(beta),
+                                                  0.1, 0.1))
+    gdd = float(-jnp.sum(s * xdb))
+    kw = dict(family="logistic", lam1=0.1, lam2=0.1, mu=1.0, nu=1e-6,
+              f_current=f0, grad_dot_dir=gdd, quad_form=0.0)
+    r_off = linesearch.search(jnp.asarray(y), xb, xdb, jnp.asarray(beta),
+                              jnp.asarray(dbeta), offset=jnp.asarray(o),
+                              **kw)
+    r_man = linesearch.search(jnp.asarray(y), xb + jnp.asarray(o), xdb,
+                              jnp.asarray(beta), jnp.asarray(dbeta), **kw)
+    assert float(r_off.alpha) == float(r_man.alpha)
+    np.testing.assert_allclose(float(r_off.f_new), float(r_man.f_new),
+                               rtol=1e-6)
 
 
 def test_alpha_one_accepted_when_sufficient():

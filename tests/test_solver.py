@@ -289,3 +289,296 @@ def test_fit_deprecation_shim_warns_once_and_matches():
     session = GLMSolver(ds.train.X, ds.train.y, config=cfg).fit()
     np.testing.assert_array_equal(res.beta, session.beta)
     np.testing.assert_array_equal(res2.beta, session.beta)
+
+
+# ---------------------------------------------------------------------------
+# observation model: sample weights, offsets, intercept, standardization,
+# penalty factors (DESIGN.md §5)
+# ---------------------------------------------------------------------------
+
+def test_integer_sample_weight_equals_replicated_rows():
+    """Σ w_i l_i with integer w must solve the SAME problem as physically
+    replicating each row w_i times — β agreement to 1e-6.
+
+    The design is diagonal (±1 per row) with integer targets, so the
+    weighted Gram/gradient sums are exact in f32 and BOTH fits land on the
+    machine-accurate optimum: the 1e-6 bar tests the weighted plumbing
+    (Gram, gradient, line search), not float summation order.
+    """
+    rng = np.random.default_rng(7)
+    p = 16
+    X = np.diag(rng.choice([-1.0, 1.0], p)).astype(np.float32)
+    y = rng.integers(-3, 4, size=p).astype(np.float32)
+    w = rng.integers(1, 4, size=p).astype(np.float32)
+    Xr = np.repeat(X, w.astype(int), axis=0)
+    yr = np.repeat(y, w.astype(int))
+    cfg = DGLMNETConfig(family="squared", tile_size=16, max_outer=400,
+                        tol=0.0)
+    b_w = GLMSolver(X, y, config=cfg, sample_weight=w).fit(
+        lam1=0.3, lam2=0.5).beta
+    b_r = GLMSolver(Xr, yr, config=cfg).fit(lam1=0.3, lam2=0.5).beta
+    np.testing.assert_allclose(b_w, b_r, rtol=0, atol=1e-6)
+    assert (b_w != 0).any()
+    # closed form per (diagonal) coordinate pins both fits down exactly
+    want = np.sign(w * y) * np.maximum(np.abs(w * y) - 0.3, 0) / (w + 0.5)
+    want = want * np.sign(np.diag(X))
+    np.testing.assert_allclose(b_w, want, rtol=0, atol=1e-6)
+
+
+def test_sample_weight_logistic_close_to_replicated():
+    """Same equivalence for the non-quadratic family, at the f32 CD
+    convergence floor."""
+    ds = synthetic.make_dense(n=150, p=16, k_true=4, seed=8)
+    X, y = ds.train.X, ds.train.y
+    rng = np.random.default_rng(8)
+    w = rng.integers(1, 4, size=len(y)).astype(np.float32)
+    Xr = np.repeat(X, w.astype(int), axis=0)
+    yr = np.repeat(y, w.astype(int))
+    cfg = DGLMNETConfig(tile_size=16, max_outer=500, tol=0.0)
+    b_w = GLMSolver(X, y, config=cfg, sample_weight=w).fit(
+        lam1=0.3, lam2=0.3).beta
+    b_r = GLMSolver(Xr, yr, config=cfg).fit(lam1=0.3, lam2=0.3).beta
+    np.testing.assert_allclose(b_w, b_r, rtol=0, atol=5e-4)
+
+
+def test_offset_squared_equals_shifted_targets():
+    """For squared loss, l(y, m + o) = l(y − o, m): an offset fit must
+    match the fit on shifted targets exactly (same compiled problem)."""
+    ds = synthetic.make_dense(n=200, p=24, family="squared", seed=9)
+    X, y = ds.train.X, ds.train.y
+    rng = np.random.default_rng(9)
+    o = rng.normal(size=len(y)).astype(np.float32)
+    cfg = DGLMNETConfig(family="squared", tile_size=16, max_outer=200,
+                        tol=1e-13)
+    b_off = GLMSolver(X, y, config=cfg, offset=o).fit(lam1=0.2,
+                                                      lam2=0.1).beta
+    b_shift = GLMSolver(X, y - o, config=cfg).fit(lam1=0.2, lam2=0.1).beta
+    # identical problems computed along different f32 paths: β at the CD
+    # convergence floor, objectives at fp resolution
+    np.testing.assert_allclose(b_off, b_shift, rtol=1e-3, atol=5e-4)
+    f_off = _obj("squared", X, y - o, b_off, 0.2, 0.1)
+    f_shift = _obj("squared", X, y - o, b_shift, 0.2, 0.1)
+    assert abs(f_off - f_shift) <= 1e-5 * max(1.0, abs(f_shift))
+
+
+def test_offset_enters_lambda_max_and_kkt():
+    """λ_max must be computed at margins = offset: fitting just above it
+    gives β = 0, just below gives support — with a nonzero offset."""
+    ds = synthetic.make_dense(n=250, p=32, seed=10)
+    X, y = ds.train.X, ds.train.y
+    o = np.linspace(-1.0, 1.0, len(y)).astype(np.float32)
+    s = GLMSolver(X, y, config=DGLMNETConfig(tile_size=16, max_outer=60,
+                                             tol=1e-12), offset=o)
+    lmax = s.lambda_max()
+    assert lmax != pytest.approx(lambda_max(X, y, "logistic"), rel=1e-3)
+    assert lmax == pytest.approx(
+        lambda_max(X, y, "logistic", offset=o), rel=1e-5)
+    assert (s.fit(lam1=lmax * 1.0001, lam2=0.0).beta == 0).all()
+    assert (s.fit(lam1=lmax * 0.9, lam2=0.0).beta != 0).any()
+
+
+def test_fit_intercept_equals_manual_ones_column():
+    """fit_intercept=True ≡ appending a ones column with penalty_factor 0."""
+    ds = synthetic.make_dense(n=300, p=24, k_true=6, seed=11, intercept=0.8)
+    X, y = ds.train.X, ds.train.y
+    cfg = DGLMNETConfig(tile_size=16, max_outer=300, tol=1e-13)
+    s_auto = GLMSolver(X, y, config=cfg, fit_intercept=True)
+    r_auto = s_auto.fit(lam1=0.4, lam2=0.1)
+    X1 = np.concatenate([X, np.ones((len(y), 1), np.float32)], axis=1)
+    pf = np.concatenate([np.ones(24, np.float32), [0.0]])
+    r_man = GLMSolver(X1, y, config=cfg, penalty_factor=pf).fit(
+        lam1=0.4, lam2=0.1)
+    np.testing.assert_allclose(r_auto.beta, r_man.beta[:24], atol=1e-6)
+    assert s_auto.intercept_ == pytest.approx(float(r_man.beta[24]),
+                                              abs=1e-6)
+    assert abs(s_auto.intercept_) > 0.05      # data has a real intercept
+    # predict must add it
+    m = s_auto.predict(ds.test.X, kind="link")
+    np.testing.assert_allclose(
+        m, ds.test.X @ r_auto.beta + s_auto.intercept_, rtol=1e-5,
+        atol=1e-5)
+
+
+def test_standardize_returns_original_scale_beta():
+    """standardize=True must equal an explicitly pre-standardized fit
+    (weighted mean/std), with β mapped back to the original scale."""
+    ds = synthetic.make_dense(n=300, p=20, k_true=5, seed=12, intercept=0.5)
+    X, y = ds.train.X.copy(), ds.train.y
+    X[:, 3] *= 40.0                      # force a badly scaled column
+    X[:, 7] *= 0.02
+    rng = np.random.default_rng(12)
+    sw = rng.uniform(0.5, 2.0, size=len(y)).astype(np.float32)
+    cfg = DGLMNETConfig(tile_size=16, max_outer=400, tol=1e-13)
+
+    sol = GLMSolver(X, y, config=cfg, sample_weight=sw, standardize=True,
+                    fit_intercept=True)
+    r = sol.fit(lam1=0.4, lam2=0.1)
+
+    mu = (sw @ X) / sw.sum()
+    sg = np.sqrt(np.maximum((sw @ (X ** 2)) / sw.sum() - mu ** 2, 0))
+    Xs = ((X - mu) / sg).astype(np.float32)
+    sol_m = GLMSolver(Xs, y, config=cfg, sample_weight=sw,
+                      fit_intercept=True)
+    r_m = sol_m.fit(lam1=0.4, lam2=0.1)
+    beta_m = r_m.beta / sg
+    b0_m = sol_m.intercept_ - float(mu @ beta_m)
+
+    np.testing.assert_allclose(r.beta, beta_m, rtol=1e-3, atol=5e-3)
+    assert sol.intercept_ == pytest.approx(b0_m, abs=5e-3)
+    # identical objectives on the original scale
+    f = _obj("logistic", X, y, r.beta, 0.4, 0.0) \
+        + 0.05 * float((np.asarray(r.beta) ** 2).sum())
+    f_m = _obj("logistic", X, y, beta_m, 0.4, 0.0) \
+        + 0.05 * float((np.asarray(beta_m) ** 2).sum())
+    assert abs(f - f_m) <= 1e-3 * max(1.0, abs(f_m))
+
+
+def test_standardize_sparse_scale_only():
+    """Brick layouts standardize scale-only (no centering): equals a fit on
+    the explicitly column-scaled sparse matrix."""
+    ds = synthetic.make_sparse(n=300, p=128, avg_nnz=10, seed=13)
+    X, y = ds.train.X, ds.train.y
+    cfg = DGLMNETConfig(tile_size=16, max_outer=300, tol=1e-13)
+    sol = GLMSolver(X, y, config=cfg, standardize=True)
+    r = sol.fit(lam1=0.5, lam2=0.1)
+
+    Xd = X.to_dense()
+    n = Xd.shape[0]
+    mu = Xd.mean(axis=0)
+    sg = np.sqrt(np.maximum((Xd ** 2).mean(axis=0) - mu ** 2, 0))
+    scale = np.where(sg > 1e-7, 1.0 / np.maximum(sg, 1e-30), 1.0)
+    r_m = GLMSolver(Xd * scale[None, :], y, config=cfg).fit(lam1=0.5,
+                                                            lam2=0.1)
+    np.testing.assert_allclose(r.beta, r_m.beta * scale, rtol=1e-2,
+                               atol=1e-2)
+
+
+def test_penalty_factor_zero_and_large():
+    """pf = 0 keeps a coordinate active at λ_max; a huge pf kills one."""
+    ds = synthetic.make_dense(n=250, p=24, k_true=8, seed=14)
+    X, y = ds.train.X, ds.train.y
+    cfg = DGLMNETConfig(tile_size=16, max_outer=120, tol=1e-12)
+    pf = np.ones(24, np.float32)
+    pf[2] = 0.0
+    pf[5] = 1e4
+    s = GLMSolver(X, y, config=cfg, penalty_factor=pf)
+    lmax = s.lambda_max()
+    r_hi = s.fit(lam1=lmax * 1.001, lam2=0.0)
+    assert r_hi.beta[2] != 0.0                 # unpenalized: always fit
+    assert (np.delete(r_hi.beta, 2) == 0).all()
+    r_lo = s.fit(lam1=lmax * 0.05, lam2=0.0)
+    assert r_lo.beta[5] == 0.0                 # pf huge: never enters
+    assert (np.delete(r_lo.beta, [5]) != 0).sum() > 2
+    # λ_max is the KKT threshold AT THE NULL MODEL (the pf=0 coordinate is
+    # fitted first): just below it some penalized coordinate activates
+    r_below = s.fit(lam1=lmax * 0.95, lam2=0.0)
+    assert (np.delete(r_below.beta, 2) != 0).any()
+    # sanity: in the same ballpark as the naive at-zero-margins threshold
+    # (the null fit perturbs the gradient, it does not replace it)
+    g0 = np.abs(X.T @ np.asarray(
+        glm.LOGISTIC.stats(jnp.asarray(y),
+                           jnp.zeros(len(y), jnp.float32))[1]))
+    naive = (np.delete(g0, 2) / np.delete(pf, 2)).max()
+    assert lmax == pytest.approx(naive, rel=0.25)
+
+
+def test_warm_start_roundtrip_with_standardize_and_intercept():
+    """fit(beta0=fitted) under standardize+intercept converges immediately:
+    the user-scale ↔ packed-scale transform must be a true inverse pair."""
+    ds = synthetic.make_dense(n=250, p=20, k_true=5, seed=15, intercept=0.4)
+    cfg = DGLMNETConfig(tile_size=16, max_outer=300, tol=1e-13)
+    s = GLMSolver(ds.train.X, ds.train.y, config=cfg, standardize=True,
+                  fit_intercept=True)
+    cold = s.fit(lam1=0.3, lam2=0.1)
+    warm = s.fit(lam1=0.3, lam2=0.1, beta0=cold.beta,
+                 intercept0=s.intercept_)
+    assert warm.n_iter <= 3
+    np.testing.assert_allclose(warm.beta, cold.beta, rtol=1e-3, atol=2e-3)
+
+
+def test_family_instances_accepted():
+    """resolve_family satellite: GLMFamily instances work anywhere a
+    family string does."""
+    ds = synthetic.make_dense(n=120, p=16, k_true=4, seed=16)
+    X, y = ds.train.X, ds.train.y
+    assert lambda_max(X, y, glm.LOGISTIC) == \
+        pytest.approx(lambda_max(X, y, "logistic"))
+    s = GLMSolver(X, y, family=glm.LOGISTIC,
+                  config=DGLMNETConfig(tile_size=16, max_outer=30))
+    assert s.config.family == "logistic"
+    r = s.fit(lam1=1.0)
+    assert np.isfinite(r.history["f"][-1])
+    from repro.baselines.lbfgs import LBFGSConfig, fit_lbfgs
+    beta, _ = fit_lbfgs(X, y, LBFGSConfig(lam2=1.0, max_iter=5,
+                                          family=glm.LOGISTIC))
+    assert np.isfinite(beta).all()
+
+
+# ---------------------------------------------------------------------------
+# mask-based K-fold CV on one compiled superstep
+# ---------------------------------------------------------------------------
+
+def test_fit_cv_one_compile_interior_lambda_and_refit():
+    """The acceptance triple: K=5 CV reports exactly one superstep compile,
+    selects an interior λ, and its returned coefficients are the full-data
+    path refit at that λ."""
+    ds = synthetic.make_dense(n=400, p=40, k_true=6, seed=17)
+    cfg = DGLMNETConfig(tile_size=16, coupling="jacobi", max_outer=60,
+                        tol=1e-10)
+    s = GLMSolver(ds.train.X, ds.train.y, config=cfg, fit_intercept=True,
+                  standardize=True)
+    c0 = s.compile_count
+    cv = s.fit_cv(n_folds=5, n_lambdas=12, lam_ratio=1e-3)
+    assert s.compile_count - c0 <= 1           # ONE compile for everything
+    K = len(cv.lambdas)
+    assert cv.dev_folds.shape == (5, K)
+    assert np.isfinite(cv.dev_mean).all()
+    assert 0 < cv.best_index < K - 1           # interior λ
+    assert cv.lam_best == float(cv.lambdas[cv.best_index])
+    np.testing.assert_array_equal(cv.beta, cv.path.betas[cv.best_index])
+    np.testing.assert_array_equal(s.beta_, cv.beta)
+    # the full-data path in the result is a real PathResult over the grid
+    assert isinstance(cv.path, PathResult)
+    assert cv.path.nnz[-1] > cv.path.nnz[0]
+
+
+def test_fit_cv_weighted_folds_respect_sample_weight():
+    """Fold masks multiply the session sample weights — a zero-weight row
+    never contributes to training or validation deviance."""
+    ds = synthetic.make_dense(n=200, p=16, k_true=4, seed=18)
+    X, y = ds.train.X.copy(), ds.train.y.copy()
+    # poison 30 rows but zero them out via weights: CV must be unaffected
+    sw = np.ones(len(y), np.float32)
+    y2 = y.copy()
+    y2[:30] = -y2[:30]
+    sw2 = sw.copy()
+    sw2[:30] = 0.0
+    cfg = DGLMNETConfig(tile_size=16, coupling="jacobi", max_outer=50,
+                        tol=1e-10)
+    cv_clean = GLMSolver(X[30:], y[30:], config=cfg).fit_cv(
+        n_folds=4, n_lambdas=8, lam_ratio=1e-2, seed=3)
+    cv_masked = GLMSolver(X, y2, config=cfg, sample_weight=sw2).fit_cv(
+        n_folds=4, n_lambdas=8, lam_ratio=1e-2, seed=3)
+    # same grid anchor (λ_max ignores zero-weight rows) and similar curve
+    np.testing.assert_allclose(cv_masked.lambdas[0], cv_clean.lambdas[0],
+                               rtol=1e-4)
+    assert np.isfinite(cv_masked.dev_mean).all()
+
+
+def test_lambda_max_anchored_at_null_model_with_intercept():
+    """With an unpenalized intercept, λ_max is the KKT threshold at the
+    NULL model (intercept fitted first): fitting exactly at λ_max yields
+    all-zero penalized coefficients with a nonzero intercept, and the
+    value genuinely differs from the naive at-zero-margins threshold on
+    imbalanced data."""
+    ds = synthetic.make_dense(n=400, p=24, k_true=5, seed=30, intercept=1.8)
+    X, y = ds.train.X, ds.train.y
+    s = GLMSolver(X, y, config=DGLMNETConfig(tile_size=16, max_outer=120,
+                                             tol=1e-12), fit_intercept=True)
+    lmax = s.lambda_max()
+    naive = lambda_max(X, y, "logistic")
+    assert abs(lmax - naive) > 0.01 * naive    # the anchoring does work
+    r = s.fit(lam1=lmax * 1.0001, lam2=0.0)
+    assert (r.beta == 0).all()                 # true all-zero path head
+    assert abs(s.intercept_) > 0.1
+    assert (s.fit(lam1=lmax * 0.85, lam2=0.0).beta != 0).any()
