@@ -4,22 +4,11 @@ interpreter, not the kernel; TPU wall-times come from the roofline model in
 EXPERIMENTS.md) plus derived per-call FLOP counts."""
 from __future__ import annotations
 
-import time
-
-import jax
 import numpy as np
 import jax.numpy as jnp
 
 from repro.kernels import ops
-
-
-def _time(fn, *args, iters=20, **kw):
-    fn(*args, **kw)  # compile
-    t0 = time.perf_counter()
-    for _ in range(iters):
-        out = fn(*args, **kw)
-    jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / iters * 1e6
+from repro.timing import timeit as _time
 
 
 def run():

@@ -28,6 +28,11 @@ BENCH_COLUMNS = {
                  "naive_s", "naive_setup_s", "wall_ratio_vs_naive",
                  "compiles_masked", "compiles_naive", "best_index",
                  "lam_best"],
+    "streaming_bench": ["case", "n", "p", "chunk_rows", "n_chunks",
+                        "total_row_mb", "chunk_buffer_mb", "buffer_ratio",
+                        "transfer_s", "fit_s", "fit_serial_s",
+                        "overlap_efficiency", "iters", "nnz",
+                        "max_abs_beta_diff_vs_dense"],
 }
 
 ARCH_ORDER = ["gemma3-12b", "qwen2.5-32b", "phi4-mini-3.8b",

@@ -13,7 +13,10 @@ checkpointer):
     commit (never before);
   * saves can run on a background thread (``async_save=True``) so the train
     loop overlaps serialization with the next step — ``wait()`` joins before
-    the next save or process exit;
+    the next save, and an ``atexit`` hook (plus ``__del__``) joins any
+    in-flight writer at interpreter exit, so the LAST checkpoint of a run
+    is durable even when nobody calls ``wait()`` after it (writer threads
+    are daemonic; without the hook a prompt exit silently dropped it);
   * restore is **elastic**: arrays are loaded as host numpy and re-placed
     with whatever sharding the *current* mesh prescribes, so a run
     checkpointed on mesh (D₁, M₁) resumes on (D₂, M₂) (d-GLMNET state is a
@@ -26,16 +29,42 @@ single-writer rendezvous — the control flow here is exactly that protocol.
 """
 from __future__ import annotations
 
+import atexit
 import json
 import os
 import pathlib
 import shutil
 import threading
 import time
+import weakref
 from typing import Any, Optional
 
 import jax
 import numpy as np
+
+# Managers with potentially in-flight async writers.  One process-wide
+# atexit hook joins them all: the writer threads are daemonic (a hung
+# filesystem must not wedge interpreter shutdown forever), so without the
+# join an exit right after the last save() dropped that checkpoint.
+_LIVE_MANAGERS: "weakref.WeakSet[CheckpointManager]" = weakref.WeakSet()
+
+
+@atexit.register
+def _join_pending_saves():
+    for mgr in list(_LIVE_MANAGERS):
+        mgr.wait()
+
+
+def _list_steps(directory: pathlib.Path):
+    out = []
+    for p in directory.glob("ckpt_*"):
+        if p.suffix == ".tmp" or not (p / "manifest.json").exists():
+            continue  # incomplete write — ignored by design
+        try:
+            out.append(int(p.name.split("_")[1]))
+        except ValueError:
+            pass
+    return sorted(out)
 
 
 def _flatten(tree) -> dict:
@@ -55,6 +84,14 @@ class CheckpointManager:
         self.keep_last = keep_last
         self.async_save = async_save
         self._thread: Optional[threading.Thread] = None
+        _LIVE_MANAGERS.add(self)
+
+    def __del__(self):
+        # a manager dropped mid-save still commits its last checkpoint
+        try:
+            self.wait()
+        except Exception:
+            pass
 
     # ------------------------------------------------------------- save
 
@@ -71,15 +108,22 @@ class CheckpointManager:
             "metadata": metadata or {},
         }
         if self.async_save:
+            # the writer is a STATIC function over plain values: it holds no
+            # reference to the manager, so a manager dropped mid-save is
+            # collectable and its __del__ can join the in-flight write
             self._thread = threading.Thread(
-                target=self._write, args=(step, flat, meta), daemon=True)
+                target=CheckpointManager._write,
+                args=(self.dir, self.keep_last, step, flat, meta),
+                daemon=True)
             self._thread.start()
         else:
-            self._write(step, flat, meta)
+            self._write(self.dir, self.keep_last, step, flat, meta)
 
-    def _write(self, step: int, flat: dict, meta: dict):
-        tmp = self.dir / f"ckpt_{step}.tmp"
-        final = self.dir / f"ckpt_{step}"
+    @staticmethod
+    def _write(directory: pathlib.Path, keep_last: int, step: int,
+               flat: dict, meta: dict):
+        tmp = directory / f"ckpt_{step}.tmp"
+        final = directory / f"ckpt_{step}"
         if tmp.exists():
             shutil.rmtree(tmp)
         tmp.mkdir()
@@ -94,30 +138,23 @@ class CheckpointManager:
         if final.exists():
             shutil.rmtree(final)
         os.replace(tmp, final)
-        self._gc()
+        CheckpointManager._gc(directory, keep_last)
 
     def wait(self):
         if self._thread is not None:
             self._thread.join()
             self._thread = None
 
-    def _gc(self):
-        steps = sorted(self.all_steps())
-        for s in steps[:-self.keep_last] if self.keep_last else []:
-            shutil.rmtree(self.dir / f"ckpt_{s}", ignore_errors=True)
+    @staticmethod
+    def _gc(directory: pathlib.Path, keep_last: int):
+        steps = sorted(_list_steps(directory))
+        for s in steps[:-keep_last] if keep_last else []:
+            shutil.rmtree(directory / f"ckpt_{s}", ignore_errors=True)
 
     # ---------------------------------------------------------- restore
 
     def all_steps(self):
-        out = []
-        for p in self.dir.glob("ckpt_*"):
-            if p.suffix == ".tmp" or not (p / "manifest.json").exists():
-                continue  # incomplete write — ignored by design
-            try:
-                out.append(int(p.name.split("_")[1]))
-            except ValueError:
-                pass
-        return sorted(out)
+        return _list_steps(self.dir)
 
     def latest_step(self) -> Optional[int]:
         steps = self.all_steps()

@@ -40,8 +40,14 @@ def alb_budgets(speeds: np.ndarray, n_tiles: int, kappa: float,
         raise ValueError("node speeds must be positive")
     # the superstep ends when a κ-fraction of nodes completed a full cycle:
     # the pivot node is the (1-κ)-quantile *fastest* ... i.e. κ-th slowest
-    # completes exactly n_tiles.
-    pivot = np.quantile(speeds, 1.0 - kappa)
+    # completes exactly n_tiles.  The pivot must be an ACTUAL node speed —
+    # linear quantile interpolation lands between nodes and hands the pivot
+    # node budget n_tiles ± 1, breaking the "pivot completes exactly one
+    # cycle" invariant (tests/test_sharding_utils.py pins it).
+    try:
+        pivot = np.quantile(speeds, 1.0 - kappa, method="lower")
+    except TypeError:  # numpy < 1.22 spells the kwarg "interpolation"
+        pivot = np.quantile(speeds, 1.0 - kappa, interpolation="lower")
     budgets = np.round(n_tiles * speeds / max(pivot, 1e-12)).astype(np.int64)
     cap = budget_cap if budget_cap is not None else max_budget(n_tiles)
     return np.clip(budgets, 1, cap).astype(np.int32)

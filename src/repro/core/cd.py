@@ -164,3 +164,118 @@ def sweep_jacobi(design, s, w, beta, dbeta, xdb, *, mu, nu, lam1, lam2,
 
 
 SWEEPS = {"gauss-seidel": sweep_gauss_seidel, "jacobi": sweep_jacobi}
+
+
+# ---------------------------------------------------------------------------
+# gram-mode sweeps (chunked statistics / StreamingDesign, DESIGN.md §6)
+# ---------------------------------------------------------------------------
+#
+# When the rows are out of core, one pass over the chunks accumulates the
+# full weighted Gram G_w = XᵀWX and gradient g0 = Xᵀs; the sweeps then run
+# entirely on device from those statistics.  They are ALGEBRAICALLY the
+# row-space sweeps above: at tile t the residual gradient is
+#
+#     g_t(r) = X_tᵀ (s − μ·W·XΔβ) = g0_t − μ·(G_w Δβ)_t
+#
+# so maintaining u = G_w Δβ (updated per tile by a (p, T) matmul) replaces
+# maintaining the (n,) margin delta xdb.  Both sweeps return u, from which
+# the line-search quadratic Σ w·xdb² = Δβᵀ G_w Δβ = Δβᵀu follows exactly.
+# Entering Δβ is zero (the supersteps always start a sweep from Δβ = 0).
+
+
+def sweep_gauss_seidel_gram(G_full, g0, beta, *, mu, nu, lam1, lam2,
+                            tile_size, start_tile=0, num_tiles=None,
+                            max_num_tiles: Optional[int] = None,
+                            active=None, penf=None,
+                            backend: Optional[str] = None):
+    """Cyclic tile sweep from the full Gram; returns (dbeta, u, tiles_done)
+    with u = G_full @ dbeta (for the line-search quadratic)."""
+    T = tile_size
+    p = g0.shape[0]
+    n_tiles_total = p // T
+    if num_tiles is None:
+        num_tiles = n_tiles_total
+    num_tiles = jnp.asarray(num_tiles, jnp.int32)
+    static_bound = int(max_num_tiles if max_num_tiles is not None
+                       else n_tiles_total)
+
+    def tile_body(t, carry):
+        dbeta_c, u = carry
+        live = t < num_tiles
+        tid = jax.lax.rem(jnp.asarray(start_tile, jnp.int32) + t,
+                          n_tiles_total)
+        col0 = tid * T
+        Gt = jax.lax.dynamic_slice(G_full, (col0, col0), (T, T))
+        g_t = jax.lax.dynamic_slice(g0, (col0,), (T,)) \
+            - mu * jax.lax.dynamic_slice(u, (col0,), (T,))
+        h = jnp.diagonal(Gt)
+        bt = jax.lax.dynamic_slice(beta, (col0,), (T,))
+        dt = jax.lax.dynamic_slice(dbeta_c, (col0,), (T,))
+        pf_t = None if penf is None else \
+            jax.lax.dynamic_slice(penf, (col0,), (T,))
+        dt_new = ops.cd_tile_solve(Gt, g_t, h, bt, dt, mu, nu, lam1, lam2,
+                                   penf=pf_t, backend=backend)
+        if active is not None:
+            at = jax.lax.dynamic_slice(active, (col0,), (T,))
+            dt_new = jnp.where(at > 0, dt_new, dt)
+        dt_new = jnp.where(live, dt_new, dt)
+        u = u + jax.lax.dynamic_slice(G_full, (0, col0), (p, T)) \
+            @ (dt_new - dt)
+        dbeta_c = jax.lax.dynamic_update_slice(dbeta_c, dt_new, (col0,))
+        return dbeta_c, u
+
+    dbeta, u = jax.lax.fori_loop(
+        0, static_bound, tile_body,
+        (jnp.zeros_like(beta), jnp.zeros_like(beta)))
+    return dbeta, u, jnp.minimum(num_tiles, static_bound)
+
+
+def sweep_jacobi_gram(G_full, g0, beta, *, mu, nu, lam1, lam2, tile_size,
+                      start_tile=0, num_tiles=None,
+                      max_num_tiles: Optional[int] = None,
+                      active=None, penf=None,
+                      backend: Optional[str] = None):
+    """Jacobi-across-tiles from the full Gram: block-diagonal tile solves
+    from the iteration-start gradient, vmapped; (dbeta, u, tiles_done)."""
+    T = tile_size
+    p = g0.shape[0]
+    n_tiles_total = p // T
+    if num_tiles is None:
+        num_tiles = n_tiles_total
+    num_tiles = jnp.asarray(num_tiles, jnp.int32)
+
+    tids = jnp.arange(n_tiles_total, dtype=jnp.int32)
+    Gr = G_full.reshape(n_tiles_total, T, n_tiles_total, T)
+    G_all = Gr[tids, :, tids, :]                        # (nt, T, T) diagonal
+    g_all = g0.reshape(n_tiles_total, T)
+    h_all = jnp.diagonal(G_all, axis1=-2, axis2=-1)
+    beta_r = beta.reshape(n_tiles_total, T)
+    dbeta_r = jnp.zeros_like(beta_r)
+
+    solve = functools.partial(ops.cd_tile_solve, mu=mu, nu=nu, lam1=lam1,
+                              lam2=lam2, backend=backend)
+    if penf is None:
+        d_new = jax.vmap(
+            lambda Gt, gt, ht, bt, dt: solve(Gt, gt, ht, bt, dt))(
+            G_all, g_all, h_all, beta_r, dbeta_r)
+    else:
+        penf_r = penf.reshape(n_tiles_total, T)
+        d_new = jax.vmap(
+            lambda Gt, gt, ht, bt, dt, pt: solve(Gt, gt, ht, bt, dt,
+                                                 penf=pt))(
+            G_all, g_all, h_all, beta_r, dbeta_r, penf_r)
+
+    offset = jax.lax.rem(tids - jnp.asarray(start_tile, jnp.int32),
+                         jnp.asarray(n_tiles_total, jnp.int32))
+    offset = jnp.where(offset < 0, offset + n_tiles_total, offset)
+    live = offset < jnp.minimum(num_tiles, n_tiles_total)
+    d_new = jnp.where(live[:, None], d_new, 0.0)
+    if active is not None:
+        d_new = jnp.where(active.reshape(n_tiles_total, T) > 0, d_new, 0.0)
+
+    dbeta = d_new.reshape(p)
+    return dbeta, G_full @ dbeta, jnp.minimum(num_tiles, n_tiles_total)
+
+
+GRAM_SWEEPS = {"gauss-seidel": sweep_gauss_seidel_gram,
+               "jacobi": sweep_jacobi_gram}

@@ -21,6 +21,7 @@ Superstep structure (paper Algorithm 4):
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import NamedTuple, Optional
 
 import jax
@@ -183,6 +184,150 @@ def make_superstep(config: DGLMNETConfig, *, axis_data=None, axis_model=None,
         return FitState(beta_new, xb_new, mu_new, cursor_new, step + 1), metrics
 
     return superstep
+
+
+# ---------------------------------------------------------------------------
+# streaming superstep (out-of-core row chunks, DESIGN.md §6)
+# ---------------------------------------------------------------------------
+
+
+class StreamingSuperstep(NamedTuple):
+    """The jitted pieces of one out-of-core outer iteration.
+
+    A streaming superstep is the in-memory superstep re-cut at the chunk
+    boundary: per-example work happens inside per-chunk kernels, everything
+    feature-sized runs once per iteration from accumulated statistics.
+
+      pass 1   stats_chunk × n_chunks — accumulate (G_w = XᵀWX, g0 = Xᵀs,
+               L = Σ w·l) over double-buffered chunks (margins Xβ are
+               re-materialized per chunk, never carried);
+      sweep    prepare — budgeted gram-mode CD sweep (cd.GRAM_SWEEPS: exact
+               Gauss-Seidel/Jacobi tile coupling via g_t = g0_t − μ(G_wΔβ)_t)
+               plus the line-search scalars and the full candidate-α set;
+      pass 2   ls_chunk × n_chunks — ONE chunk pass accumulates the losses
+               of EVERY line-search candidate (the unit step, the α-init
+               grid, and all backtracking chains α_i·b^j), so the Armijo
+               selection needs no further data passes;
+      finish   — Algorithm-3 selection over the accumulated candidate
+               losses, β/μ/cursor update, metrics (same keys as the
+               in-memory superstep).
+    """
+    stats_chunk: object
+    prepare: object
+    ls_chunk: object
+    finish: object
+    n_candidates: int
+
+
+def make_streaming_superstep(config: DGLMNETConfig,
+                             on_trace=None) -> StreamingSuperstep:
+    """Build the jitted per-chunk/per-iteration pieces for streaming fits.
+
+    Shapes are bound at first call (one compile per chunk geometry);
+    ``on_trace`` is an optional trace-time callback (compile counting).
+    The candidate-α layout is ``[1, grid(ls_grid_size)]`` followed by the
+    ``max_backtracks`` backtracking chain of each of those candidates, so
+    ``finish`` can read the chain of the argmin candidate with a dynamic
+    slice — replicating ``linesearch.search`` exactly from per-candidate
+    loss sums alone.
+    """
+    backend = config.kernel_backend
+    fam = config.family
+    T = config.tile_size
+    sweep = cd_lib.GRAM_SWEEPS[config.coupling]
+    K0 = 1 + config.ls_grid_size
+    B = config.max_backtracks
+
+    def _candidates():
+        alphas0 = linesearch.candidate_alphas(config.ls_delta,
+                                              config.ls_grid_size)
+        chains = linesearch.backtrack_chains(alphas0, config.backtrack_b, B)
+        return jnp.concatenate([alphas0, chains.reshape(-1)])
+
+    @functools.partial(jax.jit, donate_argnums=(5,))
+    def stats_chunk(Xc, yc, wc, oc, beta, acc):
+        G, g0, L = acc
+        if on_trace is not None:
+            on_trace()
+        xb = Xc @ beta
+        loss_i, s, w = ops.glm_stats(yc, xb, fam, weights=wc, offset=oc,
+                                     backend=backend)
+        return (G + (Xc * w[:, None]).T @ Xc, g0 + Xc.T @ s,
+                L + jnp.sum(loss_i))
+
+    @jax.jit
+    def prepare(acc, beta, mu, lams, active, penf, cursor, budget):
+        G, g0, L = acc
+        lam1, lam2 = lams[0], lams[1]
+        R0 = linesearch.penalty_terms(beta, jnp.zeros_like(beta),
+                                      jnp.zeros((1,)), lam1, lam2, None,
+                                      penf)[0]
+        dbeta, u, tiles_done = sweep(
+            G, g0, beta, mu=mu, nu=config.nu, lam1=lam1, lam2=lam2,
+            tile_size=T, start_tile=cursor[0], num_tiles=budget[0],
+            active=active, penf=penf, backend=backend)
+        return {
+            "dbeta": dbeta,
+            "cand": _candidates(),
+            "loss": L,
+            "f_cur": L + R0,
+            "R0": R0,
+            "grad_dot_dir": -jnp.dot(g0, dbeta),
+            "quad_form": mu * jnp.dot(dbeta, u)
+            + config.nu * jnp.dot(dbeta, dbeta),
+            "tiles_done": tiles_done,
+        }
+
+    @functools.partial(jax.jit, donate_argnums=(7,))
+    def ls_chunk(Xc, yc, wc, oc, beta, dbeta, cand, losses):
+        xb = Xc @ beta
+        xdb = Xc @ dbeta
+        return losses + ops.alpha_search(yc, xb, xdb, cand, fam,
+                                         weights=wc, offset=oc,
+                                         backend=backend)
+
+    @jax.jit
+    def finish(losses, prep, state: FitState, lams, penf):
+        beta, xb, mu, cursor, step = state
+        lam1, lam2 = lams[0], lams[1]
+        dbeta, cand = prep["dbeta"], prep["cand"]
+        f_cur = prep["f_cur"]
+        pens = linesearch.penalty_terms(beta, dbeta, cand, lam1, lam2, None,
+                                        penf)
+        f_cand = losses + pens
+        # Algorithm 3 through the SAME helpers as linesearch.search —
+        # unit step, α_init grid argmin, Armijo backtracking over
+        # α_init·b^j — but the candidate losses were all accumulated in
+        # ONE chunk pass, so the backtracking chain of the argmin is a
+        # dynamic slice instead of a second data pass.
+        R1 = pens[0]
+        D = prep["grad_dot_dir"] + config.gamma * prep["quad_form"] \
+            + R1 - prep["R0"]
+        i0 = jnp.argmin(f_cand[:K0])
+        bt_alpha = jax.lax.dynamic_slice(cand, (K0 + i0 * B,), (B,))
+        f_bt = jax.lax.dynamic_slice(f_cand, (K0 + i0 * B,), (B,))
+        ls = linesearch.armijo_select(f_cand[0], f_bt, bt_alpha, f_cur,
+                                      config.sigma, D)
+
+        beta_new = beta + ls.alpha * dbeta
+        if config.adaptive_mu:
+            mu_new = jnp.where(ls.alpha < 1.0, config.eta1 * mu,
+                               jnp.maximum(1.0, mu / config.eta2))
+        else:
+            mu_new = mu
+        n_tiles = beta.shape[0] // T
+        cursor_new = jnp.remainder(cursor + prep["tiles_done"], n_tiles)
+        metrics = {
+            "f": ls.f_new, "f_before": f_cur, "loss": prep["loss"],
+            "alpha": ls.alpha, "mu": mu_new,
+            "nnz": jnp.sum((beta_new != 0.0).astype(jnp.int32)),
+            "accepted_unit": ls.accepted_unit.astype(jnp.int32),
+            "D": ls.D,
+        }
+        return FitState(beta_new, xb, mu_new, cursor_new, step + 1), metrics
+
+    return StreamingSuperstep(stats_chunk, prepare, ls_chunk, finish,
+                              K0 * (1 + B))
 
 
 # ---------------------------------------------------------------------------

@@ -32,6 +32,37 @@ def _psum(x, axis):
     return jax.lax.psum(x, axis) if axis is not None else x
 
 
+def candidate_alphas(delta, grid_size):
+    """Algorithm 3's candidate set: ``[1, logspace(delta … 1)]`` — the unit
+    step first, then the α_init pre-search grid.  Shared by the in-memory
+    search below and the streaming superstep (which precomputes the losses
+    of every candidate in one chunk pass), so the two paths can never
+    drift apart."""
+    grid = jnp.logspace(jnp.log10(delta), 0.0, grid_size)
+    return jnp.concatenate([jnp.ones((1,)), grid])
+
+
+def backtrack_chains(alphas, b, max_backtracks):
+    """(K, max_backtracks) matrix of Armijo chains ``alphas[i]·b^j``."""
+    powers = jnp.power(b, jnp.arange(max_backtracks, dtype=jnp.float32))
+    return alphas[:, None] * powers[None, :]
+
+
+def armijo_select(f_unit, f_bt, bt, f_current, sigma, D) -> LineSearchResult:
+    """Branch-free Algorithm-3 acceptance from precomputed objectives:
+    take α = 1 if it satisfies the Armijo condition, else the first
+    (largest-α) passing backtrack candidate, falling back to the smallest
+    step.  ``f_unit`` is f(β + Δβ); ``f_bt``/``bt`` the backtracking
+    chain's objectives and step sizes."""
+    ok_unit = f_unit <= f_current + sigma * D
+    ok_bt = f_bt <= f_current + bt * sigma * D
+    idx = jnp.argmax(ok_bt)
+    idx = jnp.where(jnp.any(ok_bt), idx, bt.shape[0] - 1)
+    alpha = jnp.where(ok_unit, 1.0, bt[idx])
+    f_new = jnp.where(ok_unit, f_unit, f_bt[idx])
+    return LineSearchResult(alpha, f_new, ok_unit, D)
+
+
 def penalty_terms(beta, dbeta, alphas, lam1, lam2, axis_model, penf=None):
     """R(β + α·Δβ) for every α: (K,). beta/dbeta are the LOCAL shards.
 
@@ -79,8 +110,7 @@ def search(y, xb, xdb, beta, dbeta, *, family, lam1, lam2, mu, nu,
     quad_form: Δβᵀ(μ(H̃+νI))Δβ (global scalar) — only used when γ>0.
     """
     # Candidate set: [1.0, grid...] — grid log-spaced on [delta, 1].
-    grid = jnp.logspace(jnp.log10(delta), 0.0, grid_size)
-    alphas = jnp.concatenate([jnp.ones((1,)), grid])
+    alphas = candidate_alphas(delta, grid_size)
 
     losses = _psum(ops.alpha_search(y, xb, xdb, alphas, family,
                                     weights=weights, offset=offset,
@@ -94,22 +124,11 @@ def search(y, xb, xdb, beta, dbeta, *, family, lam1, lam2, mu, nu,
                        penf)[0]
     D = grad_dot_dir + gamma * quad_form + R1 - R0
 
-    ok_unit = f_cand[0] <= f_current + sigma * D
-
     a_init = alphas[jnp.argmin(f_cand)]
-    bt = a_init * jnp.power(b, jnp.arange(max_backtracks, dtype=jnp.float32))
+    bt = backtrack_chains(a_init[None], b, max_backtracks)[0]
     losses_bt = _psum(ops.alpha_search(y, xb, xdb, bt, family,
                                        weights=weights, offset=offset,
                                        backend=backend), axis_data)
     f_bt = losses_bt + penalty_terms(beta, dbeta, bt, lam1, lam2, axis_model,
                                      penf)
-    ok_bt = f_bt <= f_current + bt * sigma * D
-    # first (largest-α) passing candidate; fall back to the smallest step
-    idx = jnp.argmax(ok_bt)
-    idx = jnp.where(jnp.any(ok_bt), idx, max_backtracks - 1)
-    alpha_bt = bt[idx]
-    f_alpha_bt = f_bt[idx]
-
-    alpha = jnp.where(ok_unit, 1.0, alpha_bt)
-    f_new = jnp.where(ok_unit, f_cand[0], f_alpha_bt)
-    return LineSearchResult(alpha, f_new, ok_unit, D)
+    return armijo_select(f_cand[0], f_bt, bt, f_current, sigma, D)

@@ -57,6 +57,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import functools
 from typing import NamedTuple, Optional
 
 import jax
@@ -67,7 +68,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.core import dglmnet, glm
 from repro.core.dglmnet import DGLMNETConfig, FitResult, FitState
 from repro.data import design as design_lib
-from repro.data.design import BlockSparseDesign, DesignMatrix, SparseCOO
+from repro.data.design import (BlockSparseDesign, DesignMatrix, SparseCOO,
+                               StreamingDesign)
 from repro.kernels import ops
 from repro.sharding import compat
 
@@ -193,7 +195,10 @@ class CVResult(NamedTuple):
 
 def _with_intercept_column(X, n: int):
     """Append an all-ones column (the unpenalized intercept) to a raw host
-    input; pre-built designs cannot be augmented after packing."""
+    input; pre-built designs cannot be augmented after packing (a
+    StreamingDesign can — its chunks are produced on demand)."""
+    if isinstance(X, StreamingDesign):
+        return X.with_ones_column()
     if isinstance(X, SparseCOO):
         p = X.shape[1]
         rows = np.concatenate([X.rows,
@@ -245,6 +250,15 @@ class GLMSolver:
     and features over ``axis_model``; ``speeds``/``seed`` drive ALB
     straggler simulation; ``row_block``/``reorder`` the sparse brick
     packing; ``design_info`` accompanies a pre-built design.
+
+    Passing a ``StreamingDesign`` (DESIGN.md §6) switches the session to
+    the OUT-OF-CORE mode: rows stay on host (or are produced by a pure
+    chunk callable), each superstep is two double-buffered passes over
+    fixed-size row chunks (chunked Gram/gradient statistics, then every
+    line-search candidate in one sweep), and checkpoints gain a chunk
+    cursor (``fit(..., ckpt_every_chunks=k)``).  The whole observation
+    model, λ-paths with screening, and mask-based ``fit_cv`` work
+    unchanged on top; ``mesh`` must be None.
     """
 
     def __init__(self, X, y, *, family=None,
@@ -280,6 +294,7 @@ class GLMSolver:
         self._matvec_fn = None
         self._grad_fn = None
         self._dev_fn = None
+        self._streaming = False
 
         y = np.asarray(y, np.float32)
         n = y.shape[0]
@@ -304,17 +319,32 @@ class GLMSolver:
             design, info = design_lib.as_design(
                 X, T, row_block=row_block, reorder=reorder, info=design_info)
             self._info = info
+            self._streaming = isinstance(design, StreamingDesign)
+            if self._streaming and design.tile_size != T:
+                raise ValueError(
+                    f"StreamingDesign was built with tile_size="
+                    f"{design.tile_size} but the config says {T}; the "
+                    "column padding is a function of the tile size, so "
+                    "build the design with the session's tile_size")
             n_rows, p_pad = design.shape
             self._n_tot, self._p_tot = n_rows, p_pad
             self._n_tiles_local = design.n_tiles
             self._max_budget = design.n_tiles
             self._D = self._M = 1
             self._Xs = design
-            self._ys = jnp.asarray(np.pad(y, (0, n_rows - n),
-                                          constant_values=1.0))
+            y_pad = np.pad(y, (0, n_rows - n), constant_values=1.0)
+            # streaming fits keep the (n,) row vectors on HOST — the driver
+            # slices them per chunk (DESIGN.md §6)
+            self._ys = y_pad if self._streaming else jnp.asarray(y_pad)
             self._budget_const = jnp.full((1,), design.n_tiles, jnp.int32)
             self._base_speeds = None
-            if isinstance(design, BlockSparseDesign):
+            if self._streaming:
+                self._design_layout = {
+                    "kind": "streaming", "tile": T,
+                    "chunk_rows": design.chunk_rows}
+                layout_key = ("streaming", T, design.chunk_rows,
+                              design.n_chunks, p_pad)
+            elif isinstance(design, BlockSparseDesign):
                 self._design_layout = {
                     "kind": "bricks", "D": 1, "M": 1, "tile": T,
                     "row_block": design.row_block, "reorder": bool(reorder)}
@@ -326,6 +356,11 @@ class GLMSolver:
             self._x_specs = self._row_spec = self._feat_spec = None
             self._state_specs = None
         else:
+            if isinstance(X, StreamingDesign):
+                raise ValueError(
+                    "StreamingDesign is a single-process out-of-core layout; "
+                    "it cannot be mesh-sharded (mesh=None). Shard rows by "
+                    "giving each process its own chunk range instead")
             D = mesh.shape[axis_data] if axis_data else 1
             M = mesh.shape[axis_model]
             self._D, self._M = D, M
@@ -461,6 +496,10 @@ class GLMSolver:
                               NamedSharding(self.mesh, self._feat_spec))
 
     def _place_row(self, arr):
+        if self._streaming:
+            # row vectors stay host-side; the streaming driver slices them
+            # per chunk and ships each slice with its design chunk
+            return np.asarray(arr, np.float32)
         if self.mesh is None:
             return jnp.asarray(arr)
         return jax.device_put(np.asarray(arr),
@@ -468,6 +507,10 @@ class GLMSolver:
 
     def _build_superstep(self):
         key = self._key
+        if self._streaming:
+            return dglmnet.make_streaming_superstep(
+                self.config,
+                on_trace=lambda k=key: _TRACE_COUNTS.update([k]))
         raw = dglmnet.make_superstep(
             self.config, axis_data=self.axis_data, axis_model=self.axis_model,
             n_tiles_local=self._n_tiles_local, max_budget=self._max_budget)
@@ -542,6 +585,27 @@ class GLMSolver:
         return np.asarray(self._grad_fn(self._Xs, self._ys, weights,
                                         self._offsets, xb_dev))
 
+    def _grad_state(self, state: FitState, weights=None):
+        """g = Xᵀ s(β) at a fit state — in-memory reads the maintained
+        margins; streaming re-materializes them chunk by chunk."""
+        if not self._streaming:
+            return self._grad(state.xb, weights)
+        if self._grad_fn is None:
+            fam = self.config.family
+            backend = self.config.kernel_backend
+
+            @functools.partial(jax.jit, donate_argnums=(5,))
+            def grad_chunk(Xc, yc, wc, oc, beta, g):
+                _, s, _ = ops.glm_stats(yc, Xc @ beta, fam, weights=wc,
+                                        offset=oc, backend=backend)
+                return g + Xc.T @ s
+
+            self._grad_fn = grad_chunk
+        g = jnp.zeros((self._p_tot,), jnp.float32)
+        for _, Xc, yc, wc, oc in self._iter_row_chunks(weights):
+            g = self._grad_fn(Xc, yc, wc, oc, state.beta, g)
+        return np.asarray(g)
+
     # ------------------------------------------------------ standardization
 
     def _col_moments(self):
@@ -580,7 +644,9 @@ class GLMSolver:
         sigma = np.sqrt(var)
         scale = np.where(sigma > _SIGMA_EPS, 1.0 / np.maximum(sigma, 1e-30),
                          1.0).astype(np.float32)
-        dense = self._design_layout is None      # both mesh and local dense
+        # dense and streaming layouts can center (chunks are dense on
+        # device); brick layouts are scale-only (DESIGN.md §5)
+        dense = self._design_layout is None or self._streaming
         center = mu.astype(np.float32) if (dense and self.fit_intercept) \
             else np.zeros_like(scale)
         if self.fit_intercept:
@@ -652,7 +718,11 @@ class GLMSolver:
             packed = self._pack_user(np.asarray(beta0, np.float32),
                                      intercept0)
             beta = self._place_feat(packed)
-            xb = self._matvec(beta)
+            xb = self._stream_xb() if self._streaming \
+                else self._matvec(beta)
+        elif self._streaming:
+            beta = self._place_feat(np.zeros((self._p_tot,), np.float32))
+            xb = self._stream_xb()
         else:
             beta = self._place_feat(np.zeros((self._p_tot,), np.float32))
             xb = self._place_row(np.zeros((self._n_tot,), np.float32))
@@ -676,7 +746,8 @@ class GLMSolver:
 
     def _run(self, state: FitState, lam1: float, lam2: float, *,
              weights=None, active=None, max_outer=None, tol=None,
-             verbose=False, ckpt_manager=None, ckpt_every: int = 10):
+             verbose=False, ckpt_manager=None, ckpt_every: int = 10,
+             ckpt_every_chunks: Optional[int] = None):
         """Drive supersteps at fixed (λ1, λ2) until the objective plateaus.
 
         Returns (state, history, n_iter, converged).  ``active`` is a host
@@ -684,6 +755,12 @@ class GLMSolver:
         ``weights`` a placed (n_tot,) row-weight vector (None = the session
         weights — CV fold fits pass fold-masked vectors).
         """
+        if self._streaming:
+            return self._run_streaming(
+                state, lam1, lam2, weights=weights, active=active,
+                max_outer=max_outer, tol=tol, verbose=verbose,
+                ckpt_manager=ckpt_manager, ckpt_every=ckpt_every,
+                ckpt_every_chunks=ckpt_every_chunks)
         cfg = self.config
         max_outer = cfg.max_outer if max_outer is None else int(max_outer)
         tol = cfg.tol if tol is None else float(tol)
@@ -741,6 +818,132 @@ class GLMSolver:
             ckpt_manager.wait()
         return state, history, it, converged
 
+    # ------------------------------------------------- streaming outer loop
+
+    def _stream_xb(self):
+        """Streaming fits never carry the (n,) margins: Xβ is
+        re-materialized chunk by chunk inside every pass, so the state's
+        margin slot is an empty placeholder."""
+        return jnp.zeros((0,), jnp.float32)
+
+    def _iter_row_chunks(self, weights=None, start: int = 0):
+        """Yield ``(i, X_chunk, y, w, offset)`` — the design's
+        double-buffered device chunks zipped with the matching slices of
+        the session's host row vectors.  THE one place chunk addressing
+        lives; every streaming pass (stats, line search, gradient,
+        deviance) iterates through here."""
+        sd: StreamingDesign = self._Xs
+        w = self._wobs if weights is None \
+            else np.asarray(weights, np.float32)
+        for i, Xc in sd.iter_chunks(start=start):
+            sl = sd.row_slice(i)
+            yield i, Xc, self._ys[sl], w[sl], self._offsets[sl]
+
+    def _run_streaming(self, state: FitState, lam1: float, lam2: float, *,
+                       weights=None, active=None, max_outer=None, tol=None,
+                       verbose=False, ckpt_manager=None, ckpt_every: int = 10,
+                       ckpt_every_chunks: Optional[int] = None):
+        """Out-of-core twin of ``_run`` (DESIGN.md §6): each superstep is
+        two double-buffered passes over the design's row chunks — pass 1
+        accumulates (XᵀWX, Xᵀs, Σ loss), pass 2 accumulates every
+        line-search candidate's loss — with the budgeted CD sweep and the
+        Armijo selection running on device between and after them.
+
+        Checkpoints grow a CHUNK CURSOR: besides the superstep-boundary
+        saves (every ``ckpt_every`` iterations, like the in-memory path),
+        ``ckpt_every_chunks`` saves the partial pass-1 accumulators every k
+        chunks, so a mid-epoch crash resumes at the right chunk instead of
+        replaying the whole pass.
+        """
+        cfg = self.config
+        sd: StreamingDesign = self._Xs
+        fns = self._superstep
+        max_outer = cfg.max_outer if max_outer is None else int(max_outer)
+        tol = cfg.tol if tol is None else float(tol)
+        lams = jnp.asarray([lam1, lam2], jnp.float32)
+        active_dev = self._active_ones if active is None else \
+            self._place_feat(np.asarray(active, np.float32))
+        p = self._p_tot
+
+        def zero_acc():
+            return (jnp.zeros((p, p), jnp.float32),
+                    jnp.zeros((p,), jnp.float32), jnp.float32(0.0))
+
+        history = {k: [] for k in _HISTORY_KEYS}
+        f_prev, converged, it = np.inf, False, 0
+        start_it, resume_chunk, acc = 1, 0, None
+        if ckpt_manager is not None and ckpt_manager.latest_step() is not None:
+            md = ckpt_manager.read_metadata()
+            if "next_it" not in md:
+                raise ValueError(
+                    "checkpoint was written by fit_path (path state), not a "
+                    "single fit; resume it with fit_path(ckpt_manager=...)")
+            self._check_layout(md)
+            template = {"beta": state.beta, "mu": state.mu}
+            chunk_cursor = md.get("stream_chunk")
+            if chunk_cursor is not None:
+                template.update(G=np.zeros((p, p), np.float32),
+                                g0=np.zeros((p,), np.float32),
+                                L=np.float32(0.0))
+            saved, _ = ckpt_manager.restore(template)
+            state = state._replace(
+                beta=self._place_feat(self._adapt_cols(saved["beta"])),
+                mu=jnp.float32(np.asarray(saved["mu"])),
+                step=jnp.int32(md["next_it"] - 1))
+            f_prev = md.get("f_prev", np.inf)
+            start_it = int(md["next_it"])
+            if chunk_cursor is not None:
+                resume_chunk = int(chunk_cursor)
+                acc = (jnp.asarray(saved["G"]), jnp.asarray(saved["g0"]),
+                       jnp.asarray(np.float32(saved["L"])))
+
+        for it in range(start_it, max_outer + 1):
+            # ---- pass 1: chunked statistics (G_w, g0, loss) ----
+            if acc is None:
+                acc, resume_chunk = zero_acc(), 0
+            for i, Xc, yc, wc, oc in self._iter_row_chunks(
+                    weights, start=resume_chunk):
+                acc = fns.stats_chunk(Xc, yc, wc, oc, state.beta, acc)
+                if (ckpt_manager is not None and ckpt_every_chunks
+                        and (i + 1) % ckpt_every_chunks == 0
+                        and i + 1 < sd.n_chunks):
+                    G, g0, L = acc
+                    ckpt_manager.save(
+                        it, {"beta": state.beta, "mu": state.mu,
+                             "G": G, "g0": g0, "L": L},
+                        metadata={"next_it": it, "stream_chunk": i + 1,
+                                  "f_prev": float(f_prev),
+                                  "design_layout": self._design_layout})
+            prep = fns.prepare(acc, state.beta, state.mu, lams, active_dev,
+                               self._penf, state.cursor, self._budgets())
+            acc = None
+            # ---- pass 2: every line-search candidate in one sweep ----
+            losses = jnp.zeros((fns.n_candidates,), jnp.float32)
+            for _, Xc, yc, wc, oc in self._iter_row_chunks(weights):
+                losses = fns.ls_chunk(Xc, yc, wc, oc, state.beta,
+                                      prep["dbeta"], prep["cand"], losses)
+            state, m = fns.finish(losses, prep, state, lams, self._penf)
+            f = float(m["f"])
+            for k in history:
+                history[k].append(float(m[k]))
+            if verbose:
+                print(f"[dglmnet/stream x{sd.n_chunks}] it={it} "
+                      f"f={f:.8f} alpha={float(m['alpha']):.4f} "
+                      f"mu={float(m['mu']):.3f} nnz={int(m['nnz'])}")
+            if ckpt_manager is not None and it % ckpt_every == 0:
+                ckpt_manager.save(it, {"beta": state.beta, "mu": state.mu},
+                                  metadata={"next_it": it + 1, "f_prev": f,
+                                            "design_layout":
+                                                self._design_layout})
+            if np.isfinite(f_prev) and \
+                    abs(f_prev - f) <= tol * max(1.0, abs(f)):
+                converged = True
+                break
+            f_prev = f
+        if ckpt_manager is not None:
+            ckpt_manager.wait()
+        return state, history, it, converged
+
     def _check_layout(self, md):
         if md.get("design_layout") != self._design_layout:
             raise ValueError(
@@ -780,15 +983,18 @@ class GLMSolver:
 
     def fit(self, lam1: Optional[float] = None, lam2: Optional[float] = None,
             *, beta0=None, intercept0: float = 0.0, max_outer=None, tol=None,
-            verbose=False, ckpt_manager=None, ckpt_every: int = 10
-            ) -> FitResult:
+            verbose=False, ckpt_manager=None, ckpt_every: int = 10,
+            ckpt_every_chunks: Optional[int] = None) -> FitResult:
         """Fit one (λ1, λ2) point; defaults come from the session config.
 
         ``beta0`` (+ ``intercept0``) warm-starts from a host β in ORIGINAL
         feature order and scale (the margins are recomputed through the
         placed design).  Checkpointing matches the historical driver:
         superstep-boundary saves of (β, Xβ, μ), elastic resume onto this
-        session's mesh.
+        session's mesh.  Streaming sessions additionally accept
+        ``ckpt_every_chunks``: the partial pass-1 accumulators are saved
+        with a chunk cursor every k chunks, so a mid-epoch crash resumes at
+        the right chunk (DESIGN.md §6).
         """
         cfg = self.config
         lam1 = cfg.lam1 if lam1 is None else float(lam1)
@@ -796,7 +1002,8 @@ class GLMSolver:
         state = self._init_state(beta0, intercept0)
         state, history, n_iter, converged = self._run(
             state, lam1, lam2, max_outer=max_outer, tol=tol, verbose=verbose,
-            ckpt_manager=ckpt_manager, ckpt_every=ckpt_every)
+            ckpt_manager=ckpt_manager, ckpt_every=ckpt_every,
+            ckpt_every_chunks=ckpt_every_chunks)
         self._state = state
         self.beta_, self.intercept_ = self._unpack_user(
             np.asarray(state.beta))
@@ -821,7 +1028,7 @@ class GLMSolver:
                 state, _, _, _ = self._run(
                     state, 0.0, 0.0, active=(~pen).astype(np.float32),
                     max_outer=50)
-            g = np.abs(self._grad(state.xb))
+            g = np.abs(self._grad_state(state))
             self._lmax = float((g[pen] / self._penf_host[pen]).max())
         return self._lmax
 
@@ -858,6 +1065,25 @@ class GLMSolver:
                     check_vma=False))
         return float(self._dev_fn(self._ys, xb_dev, weights_dev,
                                   self._offsets))
+
+    def _deviance_state(self, state: FitState, weights) -> float:
+        """Total weighted deviance at a fit state; the streaming variant
+        accumulates it over re-materialized per-chunk margins (one scalar
+        lives on device, the rows never do)."""
+        if not self._streaming:
+            return self._deviance(state.xb, weights)
+        if self._dev_fn is None:
+            fam = glm.get_family(self.config.family)
+
+            @functools.partial(jax.jit, donate_argnums=(5,))
+            def dev_chunk(Xc, yc, wc, oc, beta, d):
+                return d + fam.deviance(yc, Xc @ beta, weights=wc, offset=oc)
+
+            self._dev_fn = dev_chunk
+        d = jnp.float32(0.0)
+        for _, Xc, yc, wc, oc in self._iter_row_chunks(weights):
+            d = self._dev_fn(Xc, yc, wc, oc, state.beta, d)
+        return float(d)
 
     def _path_impl(self, lambdas: np.ndarray, lam2: float, *,
                    weights=None, eval_weights=None, screen=True,
@@ -910,7 +1136,8 @@ class GLMSolver:
                     "pass the same lambdas/lam2 to resume")
             state = state._replace(
                 beta=self._place_feat(self._adapt_cols(saved["beta"])),
-                xb=self._place_row(self._adapt_rows(saved["xb"])),
+                xb=state.xb if self._streaming
+                else self._place_row(self._adapt_rows(saved["xb"])),
                 mu=jnp.float32(np.asarray(saved["mu"])))
             saved_betas = self._adapt_cols(saved["path_betas"])
             betas_packed[:start_k] = saved_betas[:start_k]
@@ -931,7 +1158,7 @@ class GLMSolver:
                 # every currently-active and every unpenalized coordinate;
                 # the previous λ's final KKT gradient IS the gradient at
                 # this warm iterate, so reuse it
-                g = self._grad(state.xb, weights) if g_warm is None \
+                g = self._grad_state(state, weights) if g_warm is None \
                     else g_warm
                 thresh = 2.0 * lam1 - (lam_prev if lam_prev is not None
                                        else lam1)
@@ -946,7 +1173,7 @@ class GLMSolver:
                     # KKT post-check on the FULL gradient: a screened-out
                     # coordinate (β_j = 0) is truly optimal iff
                     # |g_j| ≤ λ1 pf_j
-                    g = self._grad(state.xb, weights)
+                    g = self._grad_state(state, weights)
                     viol = (~active) & (np.abs(g) >
                                         pf * lam1 * (1.0 + kkt_slack) + 1e-7)
                     if not viol.any():
@@ -964,7 +1191,7 @@ class GLMSolver:
             n_iters[k] = it_k
             converged[k] = conv_k
             if val_dev is not None:
-                val_dev[k] = self._deviance(state.xb, ew_dev) / ew_sum \
+                val_dev[k] = self._deviance_state(state, ew_dev) / ew_sum \
                     if ew_sum > 0 else np.nan
             lam_prev = lam1
             if verbose:

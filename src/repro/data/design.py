@@ -26,6 +26,16 @@ pack a ``SparseCOO`` into bricks **without ever materializing the dense
 (n, p) matrix**: features are frequency-sorted so hot features share tiles
 (maximizing brick occupancy, DESIGN.md §2), then whole tiles are dealt
 round-robin across feature shards so per-shard nnz stays balanced.
+
+A third layout, ``StreamingDesign`` (DESIGN.md §6), keeps the rows out of
+device memory entirely: the matrix is a host array or a chunk-producing
+callable (a pure function of the chunk index, à la ``data/pipeline.py``),
+and every operator method is an accumulation loop over fixed-size row
+chunks with double-buffered host→device transfer.  Its methods run at the
+HOST level (they drive jit'd per-chunk kernels; they cannot themselves be
+traced), which is why the solver session owns a dedicated streaming outer
+loop (``core/solver.py``) built from the same kernels as the in-memory
+superstep.
 """
 from __future__ import annotations
 
@@ -351,6 +361,262 @@ class BlockSparseDesign(DesignMatrix):
 
 
 # ---------------------------------------------------------------------------
+# streaming (out-of-core row chunks)
+# ---------------------------------------------------------------------------
+
+
+class StreamingDesign(DesignMatrix):
+    """Out-of-core row-chunked design: rows live on host (or are produced on
+    demand), the device only ever sees one ``(chunk_rows, p_pad)`` buffer.
+
+    The chunk source is ``chunk_fn(i) -> (rows_i, p_src)`` — a host callable
+    returning chunk ``i``'s raw rows (``rows_i == chunk_rows`` except
+    possibly the last chunk).  For an array input the builder
+    (``streaming_design``) wraps a slicer; for synthetic / disk-backed data
+    pass a pure function of the chunk index so a resumed run replays the
+    exact byte stream without data-state checkpointing (the
+    ``data/pipeline.py`` contract).
+
+    Per-tile Gram/gradient statistics are sums over rows, so every operator
+    method is an accumulation loop over chunks.  ``iter_chunks`` issues the
+    NEXT chunk's host→device transfer before the caller dispatches compute
+    on the current one (double buffering: with async dispatch the copy
+    overlaps the in-flight compute).  These methods run at the host level —
+    a ``StreamingDesign`` cannot cross a ``jit`` boundary (``localize``
+    raises), which is why ``core/solver.py`` drives streaming fits with a
+    dedicated chunked-statistics outer loop (DESIGN.md §6).
+
+    Column transforms (standardization) are folded into chunk production:
+    ``scale_columns`` returns a new design whose chunks come out as
+    ``(x - center) * scale`` — centering is fine here (chunks are dense on
+    device), exactly matching ``DenseDesign`` semantics including the inert
+    ``-center`` rows in the padding (observation weights are 0 there).
+    """
+
+    def __init__(self, chunk_fn, *, n_rows: int, n_cols: int, chunk_rows: int,
+                 tile_size: int, add_ones: bool = False, scale=None,
+                 center=None, prefetch: bool = True):
+        if chunk_rows <= 0:
+            raise ValueError("chunk_rows must be positive")
+        self._chunk_fn = chunk_fn
+        self.prefetch = bool(prefetch)   # default for iter_chunks (benches
+        #                                  flip it to measure overlap)
+        self.n_rows_data = int(n_rows)          # true (unpadded) row count
+        self.n_cols_src = int(n_cols)           # raw columns per chunk_fn
+        self.chunk_rows = int(chunk_rows)
+        self.tile_size = int(tile_size)
+        self.add_ones = bool(add_ones)
+        self.p_user = self.n_cols_src + (1 if add_ones else 0)
+        self.p_pad = self.p_user + ((-self.p_user) % tile_size)
+        self.n_chunks = -(-self.n_rows_data // self.chunk_rows)
+        self._scale = None if scale is None else \
+            np.asarray(scale, np.float32)
+        self._center = None if center is None else \
+            np.asarray(center, np.float32)
+
+    @property
+    def shape(self):
+        return (self.n_chunks * self.chunk_rows, self.p_pad)
+
+    @property
+    def n_tiles(self) -> int:
+        return self.p_pad // self.tile_size
+
+    def localize(self):
+        raise TypeError(
+            "StreamingDesign cannot cross into jit/shard_map: its rows are "
+            "host-resident and its operator methods are host-level chunk "
+            "loops; use GLMSolver's streaming mode (core/solver.py)")
+
+    def with_ones_column(self) -> "StreamingDesign":
+        """New design whose chunks carry an appended all-ones column (the
+        unpenalized intercept), placed before the tile padding."""
+        if self.add_ones:
+            raise ValueError("design already carries an intercept column")
+        if self._scale is not None or self._center is not None:
+            raise ValueError("append the intercept before scaling")
+        return StreamingDesign(
+            self._chunk_fn, n_rows=self.n_rows_data, n_cols=self.n_cols_src,
+            chunk_rows=self.chunk_rows, tile_size=self.tile_size,
+            add_ones=True, prefetch=self.prefetch)
+
+    def scale_columns(self, scale, center=None):
+        scale = np.asarray(scale, np.float32)
+        new_center = np.zeros((self.p_pad,), np.float32) if center is None \
+            else np.asarray(center, np.float32)
+        old_scale = np.ones((self.p_pad,), np.float32) if self._scale is None \
+            else self._scale
+        old_center = np.zeros((self.p_pad,), np.float32) \
+            if self._center is None else self._center
+        # compose: ((x - c0)·s0 - c1)·s1 = (x - (c0 + c1/s0)) · (s0·s1)
+        safe = np.where(old_scale != 0, old_scale, 1.0)
+        out = StreamingDesign(
+            self._chunk_fn, n_rows=self.n_rows_data, n_cols=self.n_cols_src,
+            chunk_rows=self.chunk_rows, tile_size=self.tile_size,
+            add_ones=self.add_ones, prefetch=self.prefetch,
+            scale=old_scale * scale, center=old_center + new_center / safe)
+        return out
+
+    # -- chunk production ----------------------------------------------------
+
+    def _host_chunk(self, i: int) -> np.ndarray:
+        """(chunk_rows, p_pad) f32 host buffer for chunk ``i``: raw rows →
+        optional ones column → zero row/column padding → (x - center)·scale
+        (applied to padded rows too, matching ``DenseDesign.scale_columns``;
+        inert because observation weights are 0 on padding)."""
+        lo = i * self.chunk_rows
+        rows = min(self.chunk_rows, self.n_rows_data - lo)
+        if rows <= 0:
+            raise IndexError(f"chunk {i} out of range ({self.n_chunks})")
+        raw = np.asarray(self._chunk_fn(i), np.float32)
+        if raw.shape != (rows, self.n_cols_src):
+            raise ValueError(
+                f"chunk_fn({i}) returned {raw.shape}; expected "
+                f"({rows}, {self.n_cols_src})")
+        out = np.zeros((self.chunk_rows, self.p_pad), np.float32)
+        out[:rows, :self.n_cols_src] = raw
+        if self.add_ones:
+            out[:rows, self.n_cols_src] = 1.0
+        if self._center is not None:
+            out = out - self._center[None, :]
+        if self._scale is not None:
+            out = out * self._scale[None, :]
+        return out
+
+    def iter_chunks(self, start: int = 0,
+                    *, prefetch: Optional[bool] = None):
+        """Yield ``(i, device_chunk)`` for chunks ``[start, n_chunks)``.
+
+        With ``prefetch`` (the default) chunk i+1's host materialization and
+        host→device copy are issued while the consumer's compute on chunk i
+        is still in flight (jax dispatch is async) — the double-buffering
+        the benchmarks measure.  ``prefetch=False`` is the serial baseline;
+        ``None`` falls back to the design's ``prefetch`` attribute.
+        """
+        prefetch = self.prefetch if prefetch is None else prefetch
+        if start >= self.n_chunks:
+            return
+        if not prefetch:
+            for i in range(start, self.n_chunks):
+                yield i, jax.device_put(self._host_chunk(i))
+            return
+        nxt = jax.device_put(self._host_chunk(start))
+        for i in range(start, self.n_chunks):
+            cur = nxt
+            if i + 1 < self.n_chunks:
+                nxt = jax.device_put(self._host_chunk(i + 1))
+            yield i, cur
+
+    def row_slice(self, i: int) -> slice:
+        """Row range of chunk ``i`` in the padded (n_tot,) coordinates."""
+        return slice(i * self.chunk_rows, (i + 1) * self.chunk_rows)
+
+    # -- operator interface (host-level accumulation loops) ------------------
+
+    def _row_chunks(self, *vecs):
+        for i, Xc in self.iter_chunks():
+            sl = self.row_slice(i)
+            yield Xc, tuple(jnp.asarray(np.asarray(v)[sl]) for v in vecs)
+
+    def tile_gram(self, tid, w, r, *, backend=None):
+        T = self.tile_size
+        G = jnp.zeros((T, T), jnp.float32)
+        g = jnp.zeros((T,), jnp.float32)
+        c0 = int(tid) * T
+        for Xc, (wc, rc) in self._row_chunks(w, r):
+            Xt = Xc[:, c0:c0 + T]
+            G = G + (Xt * wc[:, None]).T @ Xt
+            g = g + Xt.T @ rc
+        return G, g
+
+    def tile_matvec(self, tid, v_t):
+        T = self.tile_size
+        c0 = int(tid) * T
+        parts = [Xc[:, c0:c0 + T] @ jnp.asarray(v_t)
+                 for _, Xc in self.iter_chunks()]
+        return jnp.concatenate(parts)
+
+    def all_tile_grams(self, w, r, *, backend=None):
+        nt, T = self.n_tiles, self.tile_size
+        G_all = jnp.zeros((nt, T, T), jnp.float32)
+        g_all = jnp.zeros((nt, T), jnp.float32)
+        for Xc, (wc, rc) in self._row_chunks(w, r):
+            Xr = Xc.reshape(self.chunk_rows, nt, T)
+            G_all = G_all + jnp.einsum("nti,ntj->tij", Xr * wc[:, None, None],
+                                       Xr)
+            g_all = g_all + (Xc.T @ rc).reshape(nt, T)
+        return G_all, g_all
+
+    def full_gram(self, w, r):
+        """(XᵀWX (p_pad, p_pad), Xᵀr (p_pad,)) accumulated over chunks — the
+        chunked-statistics form the streaming solver consumes (the full
+        Gram carries the cross-tile coupling the Gauss-Seidel sweep needs;
+        device footprint is p_pad², the streaming contract's n ≫ p regime)."""
+        p = self.p_pad
+        G = jnp.zeros((p, p), jnp.float32)
+        g = jnp.zeros((p,), jnp.float32)
+        for Xc, (wc, rc) in self._row_chunks(w, r):
+            G = G + (Xc * wc[:, None]).T @ Xc
+            g = g + Xc.T @ rc
+        return G, g
+
+    def matvec(self, v):
+        v = jnp.asarray(v)
+        return jnp.concatenate([Xc @ v for _, Xc in self.iter_chunks()])
+
+    def rmatvec(self, r):
+        out = jnp.zeros((self.p_pad,), jnp.float32)
+        for Xc, (rc,) in self._row_chunks(r):
+            out = out + Xc.T @ rc
+        return out
+
+    def col_moments(self, weights):
+        s1 = jnp.zeros((self.p_pad,), jnp.float32)
+        s2 = jnp.zeros((self.p_pad,), jnp.float32)
+        for Xc, (wc,) in self._row_chunks(weights):
+            s1 = s1 + Xc.T @ wc
+            s2 = s2 + (Xc * Xc).T @ wc
+        return s1, s2
+
+    def to_dense(self):
+        """Materialize ALL chunks (tests / tiny data only)."""
+        return jnp.concatenate([Xc for _, Xc in self.iter_chunks()], axis=0)
+
+
+def streaming_design(X, tile_size: int, *, chunk_rows: int,
+                     n_rows: Optional[int] = None,
+                     n_cols: Optional[int] = None):
+    """(StreamingDesign, DesignInfo) from an (n, p) host array-like or a
+    chunk-producing callable.
+
+    Array input: chunks are host slices (zero host copies beyond the chunk
+    staging buffer).  Callable input: ``X(i)`` must return chunk ``i``'s raw
+    rows — a pure function of ``i`` so resumes replay identically — and
+    ``n_rows``/``n_cols`` are required.  The column layout is the identity
+    (features keep their order; tile padding trails), so no column map is
+    needed to unpack β.
+    """
+    if isinstance(X, SparseCOO):
+        raise ValueError(
+            "StreamingDesign chunks are dense device buffers; stream a "
+            "sparse source by passing a callable that densifies chunk i "
+            "(rows beyond device memory amortize the densification)")
+    if callable(X) and not hasattr(X, "shape"):
+        if n_rows is None or n_cols is None:
+            raise ValueError(
+                "callable chunk sources need explicit n_rows/n_cols")
+        design = StreamingDesign(X, n_rows=n_rows, n_cols=n_cols,
+                                 chunk_rows=chunk_rows, tile_size=tile_size)
+        return design, DesignInfo(shape=(n_rows, n_cols))
+    Xh = np.asarray(X, np.float32)
+    n, p = Xh.shape
+    design = StreamingDesign(
+        lambda i, _X=Xh, _cr=chunk_rows: _X[i * _cr:(i + 1) * _cr],
+        n_rows=n, n_cols=p, chunk_rows=chunk_rows, tile_size=tile_size)
+    return design, DesignInfo(shape=(n, p))
+
+
+# ---------------------------------------------------------------------------
 # host-side builders
 # ---------------------------------------------------------------------------
 
@@ -556,6 +822,13 @@ def as_design(X, tile_size: int, *, row_block: int = 256,
                 "returned by its builder (pass design_info=...); the brick "
                 "layout reorders columns and beta must be unpacked with it")
         return X, info
+    if isinstance(X, StreamingDesign):
+        # The identity column layout makes the info canonical, so ALWAYS
+        # rebuild it from the design: a caller-supplied info can be stale —
+        # fit_intercept appends a ones column via with_ones_column() AFTER
+        # the builder returned its info, and honoring the old shape would
+        # silently treat the last real feature as the intercept.
+        return X, DesignInfo(shape=(X.n_rows_data, X.p_user))
     if isinstance(X, DesignMatrix):
         if info is None:
             raise ValueError(

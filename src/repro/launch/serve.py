@@ -5,7 +5,6 @@
 """
 import argparse
 import sys
-import time
 
 import numpy as np
 
@@ -24,6 +23,7 @@ def main():
     from repro.configs.registry import get_arch, smoke_variant
     from repro.models import lm
     from repro.models.common import init_params
+    from repro.timing import timed
 
     cfg = smoke_variant(args.arch) if args.smoke else get_arch(args.arch)
     model = lm.build_model(cfg)
@@ -42,24 +42,26 @@ def main():
             jax.random.PRNGKey(2), (B, cfg.n_audio_frames, cfg.d_model))
 
     caches = lm.init_cache(cfg, B, s_max)
-    t0 = time.time()
-    logits, caches = model.forward(params, prompts, mode="prefill",
-                                   caches=caches, **extra)
+    # timed() blocks on the result — bare time.time() around jitted calls
+    # measures async dispatch, not compute (repro.timing convention)
+    (logits, caches), dt = timed(model.forward, params, prompts,
+                                 mode="prefill", caches=caches, **extra)
     tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
-    print(f"prefill {args.prompt_len} tokens x{B}: "
-          f"{time.time() - t0:.2f}s")
+    print(f"prefill {args.prompt_len} tokens x{B}: {dt:.2f}s")
 
     decode = jax.jit(
         lambda p, c, t, i: model.forward(p, t, mode="decode", caches=c,
                                          cache_len=i, **extra))
-    outs = [tok]
-    t0 = time.time()
-    for i in range(args.prompt_len, args.prompt_len + args.gen - 1):
-        logits, caches = decode(params, caches, tok, jnp.int32(i))
-        tok = jnp.argmax(logits[:, 0], axis=-1)[:, None]
-        outs.append(tok)
-    dt = time.time() - t0
-    seq = jnp.concatenate(outs, axis=1)
+
+    def decode_loop(caches, tok):
+        outs = [tok]
+        for i in range(args.prompt_len, args.prompt_len + args.gen - 1):
+            logits, caches = decode(params, caches, tok, jnp.int32(i))
+            tok = jnp.argmax(logits[:, 0], axis=-1)[:, None]
+            outs.append(tok)
+        return jnp.concatenate(outs, axis=1)
+
+    seq, dt = timed(decode_loop, caches, tok)
     print(f"decoded {seq.shape[1]} tokens x{B} in {dt:.2f}s "
           f"({B * seq.shape[1] / max(dt, 1e-9):.1f} tok/s)")
     print("sample:", np.asarray(seq[0])[:16].tolist())

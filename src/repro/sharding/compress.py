@@ -9,10 +9,21 @@ natural target for lossy compression.
 Modes:
   * ``None``  — plain f32 psum.
   * ``bf16``  — cast to bfloat16 before the psum (2x wire bytes saved).
-  * ``int8``  — per-shard symmetric quantization to int8 with a psum'd
-    scale (≈4x wire bytes saved).  Deterministic round-to-nearest keeps the
-    SPMD program replay-identical (stochastic rounding would need per-device
-    rng plumbing; measured unnecessary at the accuracy we validate in tests).
+  * ``int8``  — symmetric quantization to int8 under ONE shared scale: each
+    shard's |x|-max is pmax'd over the axis, so every peer quantizes with
+    the identical scale ``amax_global / 127`` and the int32-accumulated psum
+    dequantizes exactly once (≈4x wire bytes saved).  A shared scale — not
+    per-shard scales — is what makes the quantized values summable on the
+    wire; the price is that a shard whose local amplitude is far below the
+    global max loses proportionally more resolution (bounded below and in
+    tests).  Deterministic round-to-nearest keeps the SPMD program
+    replay-identical (stochastic rounding would need per-device rng
+    plumbing; measured unnecessary at the accuracy we validate in tests).
+
+Per-element error bound for int8: quantization error is ≤ scale/2 =
+amax_global/254 per shard, so the dequantized sum over an axis of size M is
+within M·amax_global/254 of the exact psum (all-zero inputs round-trip to
+exactly zero — the scale floors at 1e-30, never divides by zero).
 
 Accuracy impact is bounded by tests (fit quality deltas) and by the Armijo
 rule at runtime: a corrupted direction can only shrink the accepted step,

@@ -1,0 +1,43 @@
+"""Wall-clock helpers that actually measure COMPUTE, not dispatch.
+
+jax dispatch is asynchronous: a jitted call returns as soon as the work is
+enqueued, so ``t0 = time.time(); out = f(x); dt = time.time() - t0``
+measures the Python overhead of launching the program, not the program.
+Every timing of a jitted call must block on the result first — the
+convention for this repo's benchmarks and launchers (README §Benchmarks):
+
+    out, dt = timed(model.forward, params, tokens)       # one call
+    us = timeit(ops.glm_stats, y, xb, "logistic")        # steady-state
+
+``timed`` returns the (blocked-on) result and seconds.  ``timeit`` runs a
+compile/warmup call first, then ``iters`` timed calls, and returns the
+steady-state microseconds per call.  Both call ``jax.block_until_ready`` on
+the output pytree; non-jax outputs pass through unharmed (it ignores
+non-array leaves), so the helpers are safe around host-side code too.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+def timed(fn, *args, **kwargs):
+    """(result, seconds) of one call, blocking until the result is ready."""
+    t0 = time.perf_counter()
+    out = fn(*args, **kwargs)
+    jax.block_until_ready(out)
+    return out, time.perf_counter() - t0
+
+
+def timeit(fn, *args, iters: int = 20, warmup: int = 1, **kwargs) -> float:
+    """Steady-state microseconds per call (median-free mean over ``iters``
+    calls after ``warmup`` compile/warmup calls, blocked per batch)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args, **kwargs))
+    t0 = time.perf_counter()
+    out = None
+    for _ in range(iters):
+        out = fn(*args, **kwargs)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6

@@ -1,8 +1,15 @@
 """Checkpoint manager: atomic commit, keep-k GC, async save, crash-partial
-write tolerance, trainer resume-equals-uninterrupted."""
+write tolerance, exit-durability of the last async save, trainer
+resume-equals-uninterrupted."""
+import gc
 import json
+import os
 import pathlib
 import shutil
+import subprocess
+import sys
+import textwrap
+import time
 
 import jax
 import jax.numpy as jnp
@@ -73,6 +80,58 @@ def test_async_save(tmp_path):
     mgr.save(1, _tree(1))
     mgr.wait()
     assert mgr.all_steps() == [1]
+
+
+def test_async_last_save_survives_interpreter_exit(tmp_path):
+    """The module docstring promises the last checkpoint is durable at
+    process exit.  Writer threads are daemonic, so WITHOUT the atexit join
+    an exit right after save() kills the writer mid-write — this subprocess
+    slows the serializer down to force exactly that race and exits without
+    calling wait()."""
+    script = textwrap.dedent("""
+        import sys, time
+        import numpy as np
+        import repro.checkpoint.manager as M
+
+        _orig = M.np.savez
+        def slow_savez(*a, **kw):
+            time.sleep(1.0)          # exit reaches atexit before the write
+            _orig(*a, **kw)
+        M.np.savez = slow_savez
+
+        mgr = M.CheckpointManager(sys.argv[1], async_save=True)
+        mgr.save(7, {"w": np.arange(5.0, dtype=np.float32)})
+        # no wait(), no explicit join — straight to interpreter exit
+    """)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(pathlib.Path(__file__).resolve().parents[1] /
+                            "src")
+    out = subprocess.run([sys.executable, "-c", script, str(tmp_path)],
+                         capture_output=True, text=True, timeout=120,
+                         env=env)
+    assert out.returncode == 0, out.stderr[-2000:]
+    mgr = CheckpointManager(tmp_path)
+    assert mgr.latest_step() == 7
+    restored, _ = mgr.restore({"w": np.zeros(5, np.float32)})
+    np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                  np.arange(5.0, dtype=np.float32))
+
+
+def test_del_joins_inflight_writer(tmp_path, monkeypatch):
+    """Dropping the manager (its __del__) also commits an in-flight save."""
+    import repro.checkpoint.manager as M
+    orig = np.savez
+
+    def slow_savez(*a, **kw):
+        time.sleep(0.3)
+        orig(*a, **kw)
+
+    monkeypatch.setattr(M.np, "savez", slow_savez)
+    mgr = CheckpointManager(tmp_path, async_save=True)
+    mgr.save(3, {"w": np.arange(4.0, dtype=np.float32)})
+    del mgr
+    gc.collect()
+    assert CheckpointManager(tmp_path).latest_step() == 3
 
 
 def test_tree_mismatch_raises(tmp_path):

@@ -123,6 +123,72 @@ def test_operator_methods_match_dense_math(backend, rng):
                                rtol=1e-4, atol=1e-4)
 
 
+@pytest.mark.parametrize("backend", ["ref", "pallas"])
+def test_gather_tile_empty_tiles_and_zero_rows(backend, rng):
+    """``_gather_tile`` edge cases (ISSUE 4): feature tiles with ZERO
+    non-empty bricks and all-zero rows, under nonuniform sample weights,
+    must match ``DenseDesign`` BIT-FOR-BIT through tile_gram/col_moments —
+    empty structure contributes exact 0.0, never a clamped-gather artifact.
+    """
+    T, rb = 16, 32
+    n, p = 96, 64
+    # cols only in tiles 0 and 2 → tile 1 and 3 have zero bricks
+    # (reorder=False keeps the tile layout literal); rows 32..63 (the middle
+    # row block) are all-zero → no bricks touch them
+    nnz = 300
+    rows = rng.integers(0, n, nnz)
+    rows = np.where((rows >= 32) & (rows < 64), rows % 32, rows)
+    cols = rng.integers(0, p, nnz)
+    cols = np.where((cols // T) % 2 == 1, cols - T, cols)
+    vals = rng.normal(size=nnz).astype(np.float32)
+    coo = SparseCOO(rows, cols, vals, (n, p)).dedupe()
+    design, info = build_block_sparse(coo, T, row_block=rb, reorder=False)
+    dense = DenseDesign(jnp.asarray(_packed_dense(coo, design, info)), T)
+
+    w = rng.uniform(0.1, 3.0, design.shape[0]).astype(np.float32)  # nonuniform
+    r = rng.normal(size=design.shape[0]).astype(np.float32)
+
+    empty_tiles = [t for t in range(design.n_tiles)
+                   if int(design.tile_ptr[t]) == int(design.tile_ptr[t + 1])]
+    assert empty_tiles, "construction must produce at least one empty tile"
+    for tid in range(design.n_tiles):
+        G_b, g_b = design.tile_gram(jnp.int32(tid), jnp.asarray(w),
+                                    jnp.asarray(r), backend=backend)
+        G_d, g_d = dense.tile_gram(jnp.int32(tid), jnp.asarray(w),
+                                   jnp.asarray(r))
+        if tid in empty_tiles:
+            # bit-for-bit: exact zeros on both layouts
+            np.testing.assert_array_equal(np.asarray(G_b), 0.0)
+            np.testing.assert_array_equal(np.asarray(g_b), 0.0)
+            np.testing.assert_array_equal(np.asarray(G_b), np.asarray(G_d))
+            np.testing.assert_array_equal(np.asarray(g_b), np.asarray(g_d))
+        else:
+            np.testing.assert_allclose(np.asarray(G_b), np.asarray(G_d),
+                                       rtol=1e-5, atol=1e-5)
+            np.testing.assert_allclose(np.asarray(g_b), np.asarray(g_d),
+                                       rtol=1e-5, atol=1e-5)
+
+    s1_b, s2_b = design.col_moments(jnp.asarray(w))
+    s1_d, s2_d = dense.col_moments(jnp.asarray(w))
+    zero_cols = np.asarray(dense.to_dense() == 0).all(axis=0)
+    for got, want in ((s1_b, s1_d), (s2_b, s2_d)):
+        got, want = np.asarray(got), np.asarray(want)
+        np.testing.assert_array_equal(got[zero_cols], 0.0)     # bit-for-bit
+        np.testing.assert_array_equal(want[zero_cols], 0.0)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    # the all-zero row block contributes nothing even at extreme weights
+    w_hot = w.copy()
+    w_hot[32:64] = 1e6
+    for tid in range(design.n_tiles):
+        G_b, _ = design.tile_gram(jnp.int32(tid), jnp.asarray(w_hot),
+                                  jnp.asarray(r), backend=backend)
+        G_d, _ = dense.tile_gram(jnp.int32(tid), jnp.asarray(w_hot),
+                                 jnp.asarray(r))
+        np.testing.assert_allclose(np.asarray(G_b), np.asarray(G_d),
+                                   rtol=1e-5, atol=1e-5)
+
+
 def test_dense_design_wraps_raw_arrays(rng):
     X = rng.normal(size=(40, 35)).astype(np.float32)
     design, info = design_lib.as_design(X, 16)

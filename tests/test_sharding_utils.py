@@ -1,5 +1,6 @@
 """Sharding/scale utilities: compression error bounds, ALB budget rule,
 TP padding rules for every assigned arch."""
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -11,10 +12,43 @@ try:
 except ImportError:          # the rest of this module runs without it
     HAVE_HYPOTHESIS = False
 
+from jax.sharding import PartitionSpec as P
+
 from repro.configs.base import tp_pad_config
 from repro.configs.registry import ARCHS
 from repro.core import alb
+from repro.sharding import compat
 from repro.sharding.compress import psum_compressed
+
+
+def _psum_int8_via_shard_map(x):
+    """Run psum_compressed(int8) through a real (1-device) mesh axis so the
+    pmax'd-shared-scale path is exercised, not the axis=None passthrough."""
+    mesh = compat.make_mesh((1,), ("model",))
+    fn = jax.jit(compat.shard_map(
+        lambda v: psum_compressed(v, "model", "int8"), mesh=mesh,
+        in_specs=(P(),), out_specs=P()))
+    return np.asarray(fn(jnp.asarray(x)))
+
+
+def test_int8_psum_dequantization_error_bound():
+    """Shared-scale int8 psum: |dequant − x| ≤ scale/2 = amax/254 per
+    element (the docstring's bound, measured through the real collective)."""
+    rng = np.random.default_rng(0)
+    for scale in (1e-3, 1.0, 1e3):
+        x = (rng.normal(size=512) * scale).astype(np.float32)
+        out = _psum_int8_via_shard_map(x)
+        amax = np.abs(x).max()
+        bound = (amax / 127.0) * 0.5 + amax * 1e-6
+        assert np.max(np.abs(out - x)) <= bound, (scale, np.max(np.abs(out - x)))
+
+
+def test_int8_psum_all_zero_shard():
+    """An all-zero shard must round-trip to exactly zero (the scale floors
+    at 1e-30; no 0/0, no NaN)."""
+    out = _psum_int8_via_shard_map(np.zeros(64, np.float32))
+    assert np.isfinite(out).all()
+    np.testing.assert_array_equal(out, 0.0)
 
 
 def test_compress_none_axis_is_identity():
@@ -70,6 +104,30 @@ class TestALB:
     def test_homogeneous_is_one_cycle(self):
         b = alb.alb_budgets(np.ones(8), n_tiles=64, kappa=0.75)
         np.testing.assert_array_equal(b, np.full(8, 64))
+
+    def test_pivot_completes_exactly_one_cycle(self):
+        """The κ-pivot node's budget is EXACTLY n_tiles.  Linear quantile
+        interpolation would put the pivot speed between two nodes (here
+        1.0 and 1.3 → 1.225) and give the pivot node round(100/1.225) = 82
+        tiles — the regression the method="lower" fix pins down."""
+        speeds = np.array([1.0, 1.3, 2.0, 4.0])
+        for kappa in (0.75, 0.5, 0.25):
+            b = alb.alb_budgets(speeds, n_tiles=100, kappa=kappa)
+            # the pivot is the (1-κ)-quantile speed, snapped DOWN to an
+            # actual node; that node's budget is exactly one full cycle
+            try:
+                pivot = np.quantile(speeds, 1.0 - kappa, method="lower")
+            except TypeError:
+                pivot = np.quantile(speeds, 1.0 - kappa,
+                                    interpolation="lower")
+            assert pivot in speeds
+            np.testing.assert_array_equal(b[speeds == pivot], 100)
+        # irregular speeds where interpolation is guaranteed off-node
+        rng = np.random.default_rng(7)
+        for _ in range(20):
+            speeds = rng.uniform(0.3, 3.0, size=rng.integers(2, 12))
+            b = alb.alb_budgets(speeds, n_tiles=64, kappa=0.75)
+            assert (b == 64).any(), (speeds, b)
 
     def test_rejects_nonpositive(self):
         with pytest.raises(ValueError):

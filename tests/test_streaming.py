@@ -1,0 +1,324 @@
+"""StreamingDesign (DESIGN.md §6): out-of-core row-chunked training.
+
+Parity contract: the streaming solver runs the SAME superstep sequence as
+the in-memory DenseDesign path — pass-1 chunk accumulation reproduces the
+row-space statistics, the gram-mode sweeps are algebraically the row-space
+sweeps, and the one-pass candidate line search replicates Algorithm 3 — so
+with a fixed iteration budget the two fits agree to float accumulation
+noise (≪ 1e-5).  Free-running fits are compared loosely only, because the
+f32 objective plateau can stop the two trajectories at different iterates.
+"""
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.core.dglmnet import DGLMNETConfig
+from repro.core.solver import GLMSolver
+from repro.data import synthetic
+from repro.data.design import (DenseDesign, StreamingDesign, dense_design,
+                               streaming_design)
+
+TILE = 16
+
+
+def _data(family="logistic", n=300, p=40, seed=3):
+    ds = synthetic.make_dense(n=n, p=p, k_true=6, seed=seed, family=family)
+    return ds.train.X, ds.train.y
+
+
+def _obs_model(n, seed=1):
+    rng = np.random.default_rng(seed)
+    return dict(sample_weight=rng.uniform(0.5, 2.0, n).astype(np.float32),
+                offset=(0.1 * rng.normal(size=n)).astype(np.float32),
+                fit_intercept=True, standardize=True)
+
+
+# ---------------------------------------------------------------------------
+# fit parity
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("family,max_outer", [
+    ("logistic", 25), ("squared", 10), ("probit", 25), ("poisson", 10)])
+def test_fit_parity_weighted_offset_intercept(family, max_outer):
+    """Chunked fit ≡ DenseDesign fit (≤1e-5 on β) for every family, under
+    the full observation model; per-family budgets stay below the exact f32
+    objective plateau (where stopping noise would decouple the runs)."""
+    X, y = _data(family)
+    kw = _obs_model(y.shape[0])
+    cfg = DGLMNETConfig(family=family, tile_size=TILE, max_outer=max_outer,
+                        tol=0.0)
+    ref = GLMSolver(X, y, config=cfg, **kw)
+    r1 = ref.fit(lam1=0.05, lam2=0.01)
+    sd, _ = streaming_design(X, TILE, chunk_rows=77)   # ragged last chunk
+    sol = GLMSolver(sd, y, config=cfg, **kw)
+    r2 = sol.fit(lam1=0.05, lam2=0.01)
+    assert r1.n_iter == r2.n_iter
+    np.testing.assert_allclose(r2.beta, r1.beta, atol=1e-5)
+    assert abs(ref.intercept_ - sol.intercept_) <= 1e-5
+
+
+@pytest.mark.parametrize("coupling", ["gauss-seidel", "jacobi"])
+def test_fit_parity_couplings(coupling):
+    """Both tile-coupling modes survive the gram-mode re-derivation."""
+    X, y = _data()
+    cfg = DGLMNETConfig(tile_size=TILE, coupling=coupling, max_outer=20,
+                        tol=0.0)
+    r1 = GLMSolver(X, y, config=cfg).fit(lam1=0.05, lam2=0.01)
+    sd, _ = streaming_design(X, TILE, chunk_rows=96)
+    r2 = GLMSolver(sd, y, config=cfg).fit(lam1=0.05, lam2=0.01)
+    np.testing.assert_allclose(r2.beta, r1.beta, atol=1e-5)
+
+
+def test_single_chunk_equals_multi_chunk():
+    """Chunk geometry must not matter: one huge chunk ≡ many small ones."""
+    X, y = _data()
+    cfg = DGLMNETConfig(tile_size=TILE, max_outer=15, tol=0.0)
+    res = []
+    for cr in (X.shape[0], 64, 17):
+        sd, _ = streaming_design(X, TILE, chunk_rows=cr)
+        res.append(GLMSolver(sd, y, config=cfg).fit(lam1=0.05).beta)
+    np.testing.assert_allclose(res[1], res[0], atol=1e-5)
+    np.testing.assert_allclose(res[2], res[0], atol=1e-5)
+
+
+def test_callable_chunk_source():
+    """A pure chunk-producing callable (the data/pipeline.py contract)
+    trains identically to the array-backed slicer."""
+    X, y = _data()
+    cr = 96
+    sd_arr, _ = streaming_design(X, TILE, chunk_rows=cr)
+    sd_fn, info = streaming_design(
+        lambda i: X[i * cr:(i + 1) * cr], TILE, chunk_rows=cr,
+        n_rows=X.shape[0], n_cols=X.shape[1])
+    assert info.shape == (X.shape[0], X.shape[1])
+    cfg = DGLMNETConfig(tile_size=TILE, max_outer=15, tol=0.0)
+    r1 = GLMSolver(sd_arr, y, config=cfg).fit(lam1=0.05)
+    r2 = GLMSolver(sd_fn, y, config=cfg).fit(lam1=0.05)
+    np.testing.assert_array_equal(r1.beta, r2.beta)
+
+
+def test_callable_needs_dims_and_validates_shape():
+    with pytest.raises(ValueError, match="n_rows/n_cols"):
+        streaming_design(lambda i: np.zeros((4, 4)), TILE, chunk_rows=4)
+    sd, _ = streaming_design(lambda i: np.zeros((3, 4), np.float32), TILE,
+                             chunk_rows=4, n_rows=8, n_cols=4)
+    with pytest.raises(ValueError, match="chunk_fn"):
+        sd._host_chunk(0)          # returned 3 rows, chunk 0 expects 4
+
+
+# ---------------------------------------------------------------------------
+# operator interface
+# ---------------------------------------------------------------------------
+
+
+def test_operator_parity_with_dense(rng):
+    X = rng.normal(size=(130, 35)).astype(np.float32)
+    dd, _ = dense_design(X, TILE)
+    sd, _ = streaming_design(X, TILE, chunk_rows=48)
+    assert sd.shape[1] == dd.shape[1]
+    n_tot = sd.shape[0]
+    w = np.zeros(n_tot, np.float32)
+    r = np.zeros(n_tot, np.float32)
+    w[:130] = rng.uniform(0.1, 2.0, 130)
+    r[:130] = rng.normal(size=130)
+    wd = w[:dd.shape[0]]
+    rd = r[:dd.shape[0]]
+    for tid in (0, sd.n_tiles - 1):
+        G1, g1 = dd.tile_gram(tid, wd, rd)
+        G2, g2 = sd.tile_gram(tid, w, r)
+        np.testing.assert_allclose(G2, G1, atol=1e-4)
+        np.testing.assert_allclose(g2, g1, atol=1e-4)
+    Ga1, ga1 = dd.all_tile_grams(wd, rd)
+    Ga2, ga2 = sd.all_tile_grams(w, r)
+    np.testing.assert_allclose(Ga2, Ga1, atol=1e-4)
+    np.testing.assert_allclose(ga2, ga1, atol=1e-4)
+    v = rng.normal(size=sd.shape[1]).astype(np.float32)
+    np.testing.assert_allclose(np.asarray(sd.matvec(v))[:130],
+                               np.asarray(dd.matvec(v)), atol=1e-4)
+    np.testing.assert_allclose(sd.rmatvec(r), dd.rmatvec(rd), atol=1e-4)
+    s1d, s2d = dd.col_moments(wd)
+    s1s, s2s = sd.col_moments(w)
+    np.testing.assert_allclose(s1s, s1d, atol=1e-4)
+    np.testing.assert_allclose(s2s, s2d, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(sd.to_dense())[:130],
+                               np.asarray(dd.to_dense()), atol=1e-6)
+
+
+def test_scale_columns_compose(rng):
+    X = rng.normal(size=(50, 20)).astype(np.float32)
+    sd, _ = streaming_design(X, TILE, chunk_rows=32)
+    p = sd.p_pad
+    s1 = rng.uniform(0.5, 2.0, p).astype(np.float32)
+    c1 = rng.normal(size=p).astype(np.float32)
+    s2 = rng.uniform(0.5, 2.0, p).astype(np.float32)
+    c2 = rng.normal(size=p).astype(np.float32)
+    two_step = sd.scale_columns(s1, c1).scale_columns(s2, c2).to_dense()
+    ref = (np.asarray(sd.to_dense()) - c1) * s1
+    ref = (ref - c2) * s2
+    np.testing.assert_allclose(np.asarray(two_step), ref, atol=1e-5)
+
+
+def test_streaming_cannot_cross_jit_or_mesh():
+    from repro.sharding import compat
+
+    X, y = _data()
+    sd, _ = streaming_design(X, TILE, chunk_rows=64)
+    with pytest.raises(TypeError, match="jit"):
+        sd.localize()
+    mesh = compat.make_mesh((1, 1), ("data", "model"))
+    with pytest.raises(ValueError, match="mesh"):
+        GLMSolver(sd, y, mesh=mesh)
+
+
+def test_double_buffer_matches_serial(rng):
+    X = rng.normal(size=(100, 20)).astype(np.float32)
+    sd, _ = streaming_design(X, TILE, chunk_rows=33)
+    pre = [np.asarray(c) for _, c in sd.iter_chunks()]
+    ser = [np.asarray(c) for _, c in sd.iter_chunks(prefetch=False)]
+    assert len(pre) == sd.n_chunks == 4
+    for a, b in zip(pre, ser):
+        np.testing.assert_array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# λ-path / CV / compile behavior
+# ---------------------------------------------------------------------------
+
+
+def test_fit_path_parity_and_compile_once():
+    X, y = _data(n=350, p=48, seed=7)
+    cfg = DGLMNETConfig(tile_size=TILE, max_outer=30, tol=1e-9)
+    ref = GLMSolver(X, y, config=cfg)
+    p1 = ref.fit_path(n_lambdas=6, lam_ratio=1e-2)
+    sd, _ = streaming_design(X, TILE, chunk_rows=96)
+    sol = GLMSolver(sd, y, config=cfg)
+    c0 = sol.compile_count
+    p2 = sol.fit_path(n_lambdas=6, lam_ratio=1e-2)
+    # λ_max agrees (same gradient, accumulated over chunks)
+    np.testing.assert_allclose(sol.lambda_max(), ref.lambda_max(), rtol=1e-5)
+    # free-running per-λ fits: loose parity (f32 plateau stopping noise)
+    np.testing.assert_allclose(p2.betas, p1.betas, atol=5e-3)
+    # one pass-1 kernel compile serves the entire path
+    assert sol.compile_count - c0 <= 1
+
+
+def test_fit_cv_streaming():
+    X, y = _data(n=350, p=48, seed=7)
+    cfg = DGLMNETConfig(tile_size=TILE, max_outer=30, tol=1e-9)
+    cv1 = GLMSolver(X, y, config=cfg).fit_cv(n_folds=3, n_lambdas=5,
+                                             lam_ratio=1e-2)
+    sd, _ = streaming_design(X, TILE, chunk_rows=96)
+    cv2 = GLMSolver(sd, y, config=cfg).fit_cv(n_folds=3, n_lambdas=5,
+                                              lam_ratio=1e-2)
+    assert cv1.best_index == cv2.best_index
+    np.testing.assert_allclose(cv2.dev_mean, cv1.dev_mean, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# checkpointing: chunk cursor
+# ---------------------------------------------------------------------------
+
+
+class _Abort(Exception):
+    pass
+
+
+def _fit_interrupted(tmp_path, X, y, cfg, *, abort_at):
+    """Fit with mid-pass checkpoints, aborting right after the save whose
+    metadata matches ``abort_at`` (simulating a crash at that chunk)."""
+    mgr = CheckpointManager(tmp_path)
+    orig = mgr.save
+
+    def save(step, tree, **kw):
+        orig(step, tree, **kw)
+        md = kw.get("metadata") or {}
+        if (md.get("stream_chunk"), md.get("next_it")) == abort_at:
+            raise _Abort
+
+    mgr.save = save
+    sd, _ = streaming_design(X, TILE, chunk_rows=64)
+    with pytest.raises(_Abort):
+        GLMSolver(sd, y, config=cfg).fit(lam1=0.05, ckpt_manager=mgr,
+                                         ckpt_every=3, ckpt_every_chunks=2)
+
+
+def test_mid_epoch_chunk_cursor_resume(tmp_path):
+    """A crash mid-pass resumes at the saved chunk cursor and reproduces the
+    uninterrupted fit EXACTLY (the partial accumulators are part of the
+    checkpoint, so no chunk is recounted or skipped)."""
+    X, y = _data(n=400, p=48, seed=5)
+    cfg = DGLMNETConfig(tile_size=TILE, max_outer=12, tol=0.0)
+    sd, _ = streaming_design(X, TILE, chunk_rows=64)
+    full = GLMSolver(sd, y, config=cfg).fit(lam1=0.05)
+
+    _fit_interrupted(tmp_path, X, y, cfg, abort_at=(4, 4))
+    mgr = CheckpointManager(tmp_path)
+    assert mgr.read_metadata()["stream_chunk"] == 4
+    sd2, _ = streaming_design(X, TILE, chunk_rows=64)
+    res = GLMSolver(sd2, y, config=cfg).fit(lam1=0.05, ckpt_manager=mgr,
+                                            ckpt_every=3,
+                                            ckpt_every_chunks=2)
+    np.testing.assert_array_equal(res.beta, full.beta)
+    assert res.n_iter == 12
+
+
+def test_boundary_checkpoint_resume(tmp_path):
+    """Superstep-boundary checkpoints (no chunk cursor) resume too."""
+    X, y = _data(n=400, p=48, seed=5)
+    cfg = DGLMNETConfig(tile_size=TILE, max_outer=10, tol=0.0)
+    sd, _ = streaming_design(X, TILE, chunk_rows=64)
+    full = GLMSolver(sd, y, config=cfg).fit(lam1=0.05)
+
+    mgr = CheckpointManager(tmp_path)
+    cfg6 = DGLMNETConfig(tile_size=TILE, max_outer=6, tol=0.0)
+    sd2, _ = streaming_design(X, TILE, chunk_rows=64)
+    GLMSolver(sd2, y, config=cfg6).fit(lam1=0.05, ckpt_manager=mgr,
+                                       ckpt_every=3)
+    assert mgr.latest_step() == 6
+    sd3, _ = streaming_design(X, TILE, chunk_rows=64)
+    res = GLMSolver(sd3, y, config=cfg).fit(lam1=0.05, ckpt_manager=mgr,
+                                            ckpt_every=3)
+    np.testing.assert_array_equal(res.beta, full.beta)
+
+
+def test_streaming_checkpoint_rejects_other_layout(tmp_path):
+    X, y = _data()
+    cfg = DGLMNETConfig(tile_size=TILE, max_outer=4, tol=0.0)
+    sd, _ = streaming_design(X, TILE, chunk_rows=64)
+    mgr = CheckpointManager(tmp_path)
+    GLMSolver(sd, y, config=cfg).fit(lam1=0.05, ckpt_manager=mgr,
+                                     ckpt_every=2)
+    with pytest.raises(ValueError, match="layout"):
+        GLMSolver(X, y, config=cfg).fit(lam1=0.05, ckpt_manager=mgr,
+                                        ckpt_every=2)
+
+
+def test_stale_design_info_is_ignored():
+    """Passing the builder's (pre-intercept) DesignInfo must not mis-size
+    the model: fit_intercept appends a column AFTER the builder ran, so
+    as_design rebuilds the canonical streaming info instead of honoring a
+    stale shape (which would penalize the intercept and report feature
+    p−1's coefficient as the intercept)."""
+    X, y = _data()
+    sd, stale_info = streaming_design(X, TILE, chunk_rows=64)
+    cfg = DGLMNETConfig(tile_size=TILE, max_outer=10, tol=0.0)
+    ref = GLMSolver(X, y, config=cfg, fit_intercept=True)
+    r1 = ref.fit(lam1=0.05)
+    sol = GLMSolver(sd, y, config=cfg, design_info=stale_info,
+                    fit_intercept=True)
+    assert sol._p_user == X.shape[1]
+    r2 = sol.fit(lam1=0.05)
+    np.testing.assert_allclose(r2.beta, r1.beta, atol=1e-5)
+    assert abs(sol.intercept_ - ref.intercept_) <= 1e-5
+
+
+def test_with_ones_column_rules():
+    X, _ = _data()
+    sd, _ = streaming_design(X, TILE, chunk_rows=64)
+    sd2 = sd.with_ones_column()
+    assert sd2.p_user == sd.p_user + 1
+    col = np.asarray(sd2.to_dense())[:sd.n_rows_data, sd.p_user]
+    np.testing.assert_array_equal(col, 1.0)
+    with pytest.raises(ValueError, match="intercept"):
+        sd2.with_ones_column()

@@ -1,0 +1,42 @@
+"""repro.timing: the blocking-timing convention (README §Benchmarks).
+
+The regression these pin down: timings of jitted calls taken with bare
+``time.time()`` measure async dispatch, not compute — ``timed``/``timeit``
+must block on the result pytree before reading the clock.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import timing
+
+
+def test_timed_returns_result_and_blocks(monkeypatch):
+    blocked = []
+    orig = jax.block_until_ready
+    monkeypatch.setattr(timing.jax, "block_until_ready",
+                        lambda out: blocked.append(out) or orig(out))
+
+    fn = jax.jit(lambda x: (x * 2.0).sum())
+    x = jnp.arange(8, dtype=jnp.float32)
+    out, dt = timing.timed(fn, x)
+    assert float(out) == float(np.arange(8).sum() * 2)
+    assert dt >= 0.0
+    # the clock was read only after block_until_ready saw the result
+    assert len(blocked) == 1 and blocked[0] is out
+
+
+def test_timed_passes_kwargs_and_host_results():
+    out, dt = timing.timed(lambda a, b=1: a + b, 2, b=3)
+    assert out == 5 and dt >= 0.0
+
+
+def test_timeit_blocks_and_warms_up(monkeypatch):
+    calls = []
+    fn = jax.jit(lambda x: x + 1.0)
+    monkeypatch.setattr(timing.jax, "block_until_ready",
+                        lambda out: calls.append(out) or out)
+    us = timing.timeit(fn, jnp.ones(4), iters=3, warmup=2)
+    assert us >= 0.0
+    # one block per warmup call + one closing the timed batch
+    assert len(calls) == 3
