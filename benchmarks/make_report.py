@@ -33,6 +33,12 @@ BENCH_COLUMNS = {
                         "transfer_s", "fit_s", "fit_serial_s",
                         "overlap_efficiency", "iters", "nnz",
                         "max_abs_beta_diff_vs_dense"],
+    "serving_bench": ["case", "mode", "dtype", "n_requests", "rows_per_s",
+                      "p50_ms", "p99_ms", "mean_batch",
+                      "speedup_vs_batch1", "artifact_bytes",
+                      "size_ratio_fp32_over_int8", "max_margin_err",
+                      "max_err_bound", "max_abs_err_vs_oracle",
+                      "n_active", "compiled_shapes"],
 }
 
 ARCH_ORDER = ["gemma3-12b", "qwen2.5-32b", "phi4-mini-3.8b",

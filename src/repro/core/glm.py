@@ -33,6 +33,7 @@ from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 # Effective curvature bound for the poisson family: margins above
 # log(POISSON_W_CLIP) ~= 13.8 contribute at most this much curvature to the
@@ -222,3 +223,21 @@ def objective(family, y, X, beta, lam1, lam2, *, weights=None, offset=None,
 def soft_threshold(x, a):
     """T(x, a) = sgn(x) max(|x| - a, 0)."""
     return jnp.sign(x) * jnp.maximum(jnp.abs(x) - a, 0.0)
+
+
+def margin_score(family, y, margins) -> float:
+    """Family-appropriate goodness of fit from raw margins — THE shared
+    metric behind ``GLMSolver.score`` and the estimator ``score``s:
+    accuracy for the binary families (y in {-1, +1}), R² for squared
+    loss, mean negative loss (higher is better) otherwise."""
+    fam = resolve_family(family)
+    y = np.asarray(y, np.float32)
+    m = np.asarray(margins, np.float32)
+    if fam.name in ("logistic", "probit"):
+        return float(((m > 0) == (y > 0)).mean())
+    if fam.name == "squared":
+        ss_res = float(np.sum((y - m) ** 2))
+        ss_tot = float(np.sum((y - y.mean()) ** 2))
+        return 1.0 - ss_res / max(ss_tot, 1e-30)
+    loss = np.asarray(fam.stats(jnp.asarray(y), jnp.asarray(m))[0])
+    return float(-loss.mean())

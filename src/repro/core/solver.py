@@ -295,6 +295,7 @@ class GLMSolver:
         self._grad_fn = None
         self._dev_fn = None
         self._streaming = False
+        self._serve_cache = None        # (key, ScoringEngine) for predict
 
         y = np.asarray(y, np.float32)
         n = y.shape[0]
@@ -1333,10 +1334,31 @@ class GLMSolver:
 
     # ---------------------------------------------------------- evaluation
 
-    def _margins(self, X_new, beta):
-        if isinstance(X_new, SparseCOO):
-            return X_new.matvec(beta)
-        return np.asarray(X_new, np.float32) @ beta
+    def _serve_engine(self, beta: np.ndarray, intercept: float):
+        """Serving engine over (β, b₀) — the SparseCOO prediction path
+        (DESIGN.md §7): sparse rows are scored by the active-set-compacted
+        gather-dot-link launch instead of a host matvec.  Cached on the
+        coefficient bytes so repeated predicts reuse the compacted table
+        and its compiled programs."""
+        from repro.serve.artifact import ServableModel
+        from repro.serve.engine import ScoringEngine
+        key = (beta.tobytes(), float(intercept))
+        if self._serve_cache is None or self._serve_cache[0] != key:
+            model = ServableModel(
+                betas=np.array(beta[None, :], np.float32),
+                intercepts=np.asarray([intercept], np.float32),
+                family=self.config.family)
+            self._serve_cache = (key, ScoringEngine(model))
+        return self._serve_cache[1]
+
+    def save(self, path, *, quantize=None, path_result=None):
+        """Export the fitted model as a versioned serving artifact
+        (``repro.serve.artifact``).  ``path_result`` exports a whole
+        fitted λ-path as a multi-output artifact; ``quantize="int8"``
+        writes the shared-scale quantized weight table."""
+        from repro.serve import artifact
+        return artifact.export(self, path, quantize=quantize,
+                               path_result=path_result)
 
     def predict(self, X_new, *, beta=None, intercept=None, offset=None,
                 kind: str = "response"):
@@ -1345,39 +1367,37 @@ class GLMSolver:
 
         ``kind="link"`` returns raw margins Xβ + b₀ + o; ``"response"``
         applies the family's inverse link (probabilities for
-        logistic/probit, means for squared/poisson).
+        logistic/probit, means for squared/poisson).  ``SparseCOO`` inputs
+        route through the serving engine's fused sparse scoring (gather +
+        dot + link over the compacted active set) rather than a host-side
+        matvec.
         """
         beta = self.beta_ if beta is None else np.asarray(beta, np.float32)
         if beta is None:
             raise ValueError("no fitted coefficients; call fit/fit_path "
                              "first or pass beta=...")
         intercept = self.intercept_ if intercept is None else float(intercept)
-        m = self._margins(X_new, beta) + intercept
+        if kind not in ("link", "response"):
+            raise ValueError(f"unknown kind {kind!r}; use 'link' or "
+                             "'response'")
+        if isinstance(X_new, SparseCOO):
+            eng = self._serve_engine(beta, intercept)
+            return eng.score_coo(X_new, kind=kind, offset=offset)[:, 0]
+        m = np.asarray(X_new, np.float32) @ beta + intercept
         if offset is not None:
             m = m + np.asarray(offset, np.float32)
         if kind == "link":
             return m
-        if kind != "response":
-            raise ValueError(f"unknown kind {kind!r}; use 'link' or "
-                             "'response'")
         fam = glm.get_family(self.config.family)
         return np.asarray(fam.predict(jnp.asarray(m)))
 
     def score(self, X_new, y_new, *, beta=None, intercept=None,
               offset=None) -> float:
-        """Family-appropriate goodness of fit on held-out rows: accuracy
-        for the binary families (labels in {-1, +1}), R² for squared loss,
-        and mean negative loss (higher is better) for poisson."""
-        y_new = np.asarray(y_new, np.float32)
+        """Family-appropriate goodness of fit on held-out rows
+        (``glm.margin_score``): accuracy for the binary families (labels
+        in {-1, +1}), R² for squared loss, and mean negative loss (higher
+        is better) for poisson."""
         m = self.predict(X_new, beta=beta, intercept=intercept,
                          offset=offset, kind="link")
-        family = self.config.family
-        if family in ("logistic", "probit"):
-            return float(((m > 0) == (y_new > 0)).mean())
-        if family == "squared":
-            ss_res = float(np.sum((y_new - m) ** 2))
-            ss_tot = float(np.sum((y_new - y_new.mean()) ** 2))
-            return 1.0 - ss_res / max(ss_tot, 1e-30)
-        fam = glm.get_family(family)
-        loss = np.asarray(fam.stats(jnp.asarray(y_new), jnp.asarray(m))[0])
-        return float(-loss.mean())
+        return glm.margin_score(self.config.family,
+                                np.asarray(y_new, np.float32), m)

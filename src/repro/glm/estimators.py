@@ -12,6 +12,14 @@ delegates.
 automatic λ_max → λ_max·``lam_ratio`` grid — the ``cv_result_`` attribute
 keeps the full ``CVResult``.
 
+A fitted estimator round-trips through the serving subsystem
+(DESIGN.md §7): ``est.save(path)`` exports a versioned artifact
+(``quantize="int8"`` for the shared-scale compressed table), and
+``ElasticNetGLM.load(path)`` reconstructs a predict/score-capable
+estimator whose margins come from the serving engine's active-set
+compacted scoring — no training state required.  Loaded and freshly
+fitted estimators predict identically (tests/test_serve.py).
+
   * ``ElasticNetGLM``       — any family (``family=`` name or GLMFamily)
   * ``LogisticRegressionCD`` — binary classifier; accepts {0, 1} or
     {-1, +1} labels, exposes ``predict_proba`` and class predictions
@@ -116,32 +124,103 @@ class ElasticNetGLM:
         return self
 
     def _check_fitted(self):
-        if not hasattr(self, "solver_"):
+        if getattr(self, "solver_", None) is None and \
+                getattr(self, "_engine_", None) is None:
             raise ValueError(f"{type(self).__name__} is not fitted yet; "
-                             "call fit(X, y) first")
+                             "call fit(X, y) or load(path) first")
+
+    # ------------------------------------------------------ artifact I/O
+
+    def save(self, path, *, quantize=None):
+        """Export as a versioned serving artifact (``repro.serve``):
+        original-scale coefficients, intercept, family, penalty metadata
+        and the label classes for the binary families.  ``quantize="int8"``
+        writes the shared-scale compressed weight table (artifact ≥ 2×
+        smaller, margins within the manifest's documented bound)."""
+        self._check_fitted()
+        from repro.serve import artifact
+        return artifact.export(self, path, quantize=quantize)
+
+    @classmethod
+    def load(cls, path):
+        """Load a saved artifact into a predict/score-capable estimator.
+
+        Serving state only: ``coef_`` / ``intercept_`` / ``classes_`` are
+        restored and margins come from a ``ScoringEngine`` over the
+        artifact (active-set compacted; SparseCOO inputs take the fused
+        sparse path) — there is no training session to resume.
+        """
+        from repro.serve.artifact import load_artifact
+        from repro.serve.engine import ScoringEngine
+        model = load_artifact(path)
+        if model.n_outputs != 1:
+            raise ValueError(
+                f"artifact at {path} holds {model.n_outputs} output "
+                "columns (a λ-path / A-B stack); estimators serve exactly "
+                "one — score it with repro.serve.ScoringEngine instead")
+        if cls._family is not None and model.family != cls._family:
+            raise ValueError(
+                f"{cls.__name__} is fixed to the {cls._family!r} family; "
+                f"the artifact was fitted with {model.family!r}")
+        est = cls() if cls._family is not None else cls(family=model.family)
+        est.solver_ = None
+        est.cv_result_ = None
+        est._servable_ = model
+        est._engine_ = ScoringEngine(model)
+        est.coef_ = np.array(model.betas[0])
+        est.intercept_ = float(model.intercepts[0])
+        # restore provenance the manifest preserves, so re-exporting a
+        # loaded estimator does not overwrite it with constructor defaults
+        est.standardize = bool(model.standardized)
+        if model.lam2 is not None:
+            est.lam2 = float(model.lam2)
+        pf = (model.penalty or {}).get("penalty_factor")
+        if pf is not None:
+            est.penalty_factor = np.asarray(pf, np.float32)
+        if model.lambdas is not None and len(model.lambdas):
+            est.lam1_ = float(model.lambdas[0])
+            est.lam1 = est.lam1_
+        extra = model.extra or {}
+        if extra.get("classes") is not None:
+            est.classes_ = np.asarray(extra["classes"])
+        elif glm.resolve_family(est.family).name in ("logistic", "probit"):
+            # artifact saved by GLMSolver.save (no frontend label state):
+            # the solver's binary families train on {-1, +1}, so that IS
+            # the original encoding — without this default, predict would
+            # crash on a missing classes_ attribute
+            est.classes_ = np.asarray([-1.0, 1.0])
+        return est
 
     # ---------------------------------------------------------- prediction
 
     def decision_function(self, X, *, offset=None):
-        """Raw margins Xβ + b₀ (+ offset)."""
+        """Raw margins Xβ + b₀ (+ offset) — via the training session when
+        fitted in-process, via the serving engine when loaded from an
+        artifact (identical results either way)."""
         self._check_fitted()
-        return self.solver_.predict(X, offset=offset, kind="link")
+        if getattr(self, "solver_", None) is not None:
+            return self.solver_.predict(X, offset=offset, kind="link")
+        return self._engine_.score(X, kind="link", offset=offset)[:, 0]
 
     def predict(self, X, *, offset=None):
         """Family response (inverse link of the margins)."""
-        self._check_fitted()
-        return self.solver_.predict(X, offset=offset, kind="response")
+        m = self.decision_function(X, offset=offset)
+        fam = glm.resolve_family(self.family)
+        return np.asarray(fam.predict(jnp.asarray(m)))
 
     def score(self, X, y, *, offset=None):
+        """Family-appropriate goodness of fit (``glm.margin_score``, the
+        same metric as ``GLMSolver.score``): accuracy for the binary
+        families on the fit-time encoding, R² for squared loss, mean
+        negative loss for the rest."""
         self._check_fitted()
         fam = glm.resolve_family(self.family)
+        m = self.decision_function(X, offset=offset)
+        y = np.asarray(y)
         if fam.name in ("logistic", "probit"):
-            # accuracy on the fit-time label encoding
-            m = self.decision_function(X, offset=offset)
-            y_enc = np.where(np.asarray(y) == self.classes_[1], 1.0, -1.0)
-            return float(((m > 0) == (y_enc > 0)).mean())
-        return self.solver_.score(X, np.asarray(y, np.float32),
-                                  offset=offset)
+            # map to the fit-time {-1, +1} encoding before the shared metric
+            y = np.where(y == self.classes_[1], 1.0, -1.0)
+        return glm.margin_score(fam, y.astype(np.float32), m)
 
 
 class LogisticRegressionCD(ElasticNetGLM):

@@ -23,6 +23,8 @@ from repro.kernels.alpha_search import alpha_search_pallas
 from repro.kernels.cd_tile_solve import cd_tile_solve_pallas
 from repro.kernels.glm_stats import _STATS as _PALLAS_STATS
 from repro.kernels.glm_stats import glm_stats_pallas
+from repro.kernels.predict_tile import _LINKS as _PALLAS_LINKS
+from repro.kernels.predict_tile import predict_tile_pallas
 from repro.kernels.tile_gram import tile_gram_pallas
 
 _LANES = 128
@@ -122,6 +124,48 @@ def glm_stats(y, xb, family, *, weights=None, offset=None, backend=None,
                                      interpret=_interpret())
     flat = lambda a: a.reshape(-1)[:n]
     return flat(loss2), flat(s2), flat(w2)
+
+
+def predict_tile(slots, vals, table, b0, family, *, kind="link",
+                 backend=None, block_b=8):
+    """Fused sparse scoring: gather + dot + inverse link in one launch.
+
+    slots/vals: (B, J) padded request rows (slots index the compacted weight
+    table; padding and inactive features point at the trailing all-zero
+    row); table: (A+1, L) f32; b0: (L,) or (1, L) intercepts.  Returns
+    (B, L) margins (``kind="link"``) or family responses (``"response"``).
+    Families without a Pallas link body fall back to the jnp oracle, as
+    does any non-TPU backend by default (kernels/predict_tile.py).
+    """
+    backend = backend or default_backend()
+    fname = _family_name(family)
+    if fname not in _PALLAS_LINKS and backend != "ref":
+        backend = "ref"      # families without a Pallas link body
+    b0 = jnp.asarray(b0, jnp.float32).reshape(1, -1)
+    if backend == "ref":
+        return ref.predict_tile(slots, vals, table, b0, fname, kind=kind)
+    # TPU tiling: pad every LAST dim to the 128-lane width and the table's
+    # sublane dim to a multiple of 8, like _pack_2d does for the training
+    # kernels — Mosaic rejects unaligned tiles that interpret mode forgives.
+    # Padding is inert by construction: extra request slots point at the
+    # trailing all-zero row with value 0, extra table rows/columns are 0.
+    B, J = slots.shape
+    A1, L = table.shape
+    zero_row = A1 - 1
+    pad_b, pad_j = (-B) % block_b, (-J) % _LANES
+    pad_a, pad_l = (-A1) % 8, (-L) % _LANES
+    if pad_b or pad_j:
+        slots = jnp.pad(slots, ((0, pad_b), (0, pad_j)),
+                        constant_values=zero_row)
+        vals = jnp.pad(vals, ((0, pad_b), (0, pad_j)))
+    if pad_a or pad_l:
+        table = jnp.pad(table, ((0, pad_a), (0, pad_l)))
+    if pad_l:
+        b0 = jnp.pad(b0, ((0, 0), (0, pad_l)))
+    out = predict_tile_pallas(slots, vals, table, b0, family=fname,
+                              kind=kind, block_b=block_b,
+                              interpret=_interpret())
+    return out[:B, :L]
 
 
 def alpha_search(y, xb, xdb, alphas, family, *, weights=None, offset=None,

@@ -114,3 +114,23 @@ def alpha_search(y, xb, xdb, weights, alphas, family, offset=None):
     m = xb[None, :] + alphas[:, None] * xdb[None, :]        # (K, n)
     loss, _, _ = fam.stats(y[None, :], m)
     return jnp.sum(loss * weights[None, :], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# predict_tile: fused sparse scoring (gather + dot + link) for serving.
+# ---------------------------------------------------------------------------
+
+def predict_tile(slots, vals, table, b0, family, kind="link"):
+    """out[b, l] = link(Σ_j vals[b, j] · table[slots[b, j], l] + b0[l]).
+
+    slots: (B, J) i32 rows of the compacted weight table — padding / inactive
+    features point at the table's trailing all-zero row; vals: (B, J) f32;
+    table: (A+1, L) f32; b0: (1, L).  ``kind="link"`` returns raw margins,
+    ``"response"`` the family's inverse link.
+    """
+    rows = jnp.take(table, slots, axis=0)                   # (B, J, L)
+    m = jnp.einsum("bj,bjl->bl", vals.astype(jnp.float32), rows) + b0
+    if kind == "link":
+        return m
+    fam = glm_lib.resolve_family(family)
+    return fam.predict(m)

@@ -1,4 +1,8 @@
-"""Serving launcher: batched prefill + greedy decode loop.
+"""LM-TEMPLATE serving demo: batched prefill + greedy decode loop over the
+toy transformer configs.  This is NOT the GLM serving path — the paper's
+models are served by ``repro.launch.serve_glm`` (artifact loading, fused
+sparse scoring, micro-batching; see ``repro.serve`` and DESIGN.md §7).
+README §Serving lists both entry points side by side.
 
     PYTHONPATH=src python -m repro.launch.serve --arch gemma3-12b --smoke \
         --batch 4 --prompt-len 16 --gen 24

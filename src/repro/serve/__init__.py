@@ -1,0 +1,26 @@
+"""``repro.serve``: the production serving half of the GLM lifecycle.
+
+Train → export → serve (DESIGN.md §7):
+
+  * ``artifact``  — versioned on-disk model artifacts (fp32 or
+    shared-scale int8) and the immutable ``ServableModel`` loader.
+  * ``engine``    — active-set-compacted batched scoring for dense rows
+    and sparse feature-list requests, backed by the fused
+    gather-dot-link kernel (``kernels/predict_tile.py``), multi-output
+    (several λs / models) per launch.
+  * ``batcher``   — deadline-flushed micro-batching with a bounded
+    shape-bucket set and p50/p99/rows-per-s instrumentation.
+
+CLI: ``python -m repro.launch.serve_glm --artifact DIR --smoke``.
+"""
+from repro.serve.artifact import (ServableModel, artifact_bytes,
+                                  dequantize_int8, export, load_artifact,
+                                  quantize_int8, save_artifact)
+from repro.serve.batcher import MicroBatcher
+from repro.serve.engine import ScoringEngine, coo_to_requests
+
+__all__ = [
+    "ServableModel", "ScoringEngine", "MicroBatcher", "coo_to_requests",
+    "save_artifact", "load_artifact", "export", "artifact_bytes",
+    "quantize_int8", "dequantize_int8",
+]
