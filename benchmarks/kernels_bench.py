@@ -1,19 +1,45 @@
-"""Kernel micro-benchmarks: us_per_call for the three Pallas kernels (ref
+"""Kernel micro-benchmarks: us_per_call for the training kernels (ref
 backend timings on CPU — interpret-mode Pallas timing measures the Python
 interpreter, not the kernel; TPU wall-times come from the roofline model in
-EXPERIMENTS.md) plus derived per-call FLOP counts."""
+EXPERIMENTS.md) plus derived per-call FLOP/byte counts.
+
+Derived metrics are read from the compiled HLO of the *jitted* op via
+roofline.analyze_hlo (trip-count-aware), not hand-counted: the historical
+rows both under-counted (cd_tile_solve's "flops~2T²" ignored the T-step
+axpy chain = 2T² MACs *plus* the per-step scalar work and slice traffic)
+and over-timed (the ops were timed WITHOUT jit, so every call paid eager
+re-dispatch — cd_tile_solve_T256 measured 61.5 ms/call against a true
+jitted ~0.4 ms).  Every timed callable here is jitted once and the same
+callable is lowered for the derived metrics, so time and FLOPs describe
+the same program.
+"""
 from __future__ import annotations
 
 import numpy as np
+import jax
 import jax.numpy as jnp
 
 from repro.kernels import ops
+from repro.roofline.hlo import analyze_hlo, superstep_launch_targets
 from repro.timing import timeit as _time
 
 
+def _derived(jitted, *args):
+    """flops/bytes of the compiled program (roofline.analyze_hlo)."""
+    st = analyze_hlo(jitted.lower(*args).compile().as_text())
+    return {"flops": int(st.flops), "bytes": int(st.bytes_accessed)}
+
+
 def run():
+    from repro.data import design as design_lib
+
     rng = np.random.default_rng(0)
     rows = []
+
+    def bench(name, jitted, *args):
+        us = _time(jitted, *args)
+        rows.append({"name": name, "us_per_call": round(us, 1),
+                     "derived": _derived(jitted, *args)})
 
     n, T = 4096, 256
     X = rng.normal(size=(n, T)).astype(np.float32)
@@ -23,26 +49,23 @@ def run():
     g = jnp.asarray(X.T @ s)
     h = jnp.diagonal(G)
     beta = jnp.zeros(T)
-    us = _time(ops.cd_tile_solve, G, g, h, beta, beta, 1.0, 1e-6, 0.3, 0.1,
-               backend="ref")
-    rows.append({"name": f"cd_tile_solve_T{T}", "us_per_call": round(us, 1),
-                 "derived": f"flops~{2*T*T}"})
+
+    solve = jax.jit(lambda G, g, h, b: ops.cd_tile_solve(
+        G, g, h, b, jnp.zeros_like(g), 1.0, 1e-6, 0.3, 0.1, backend="ref"))
+    bench(f"cd_tile_solve_T{T}", solve, G, g, h, beta)
 
     y = jnp.asarray(rng.choice([-1.0, 1.0], n).astype(np.float32))
     xb = jnp.asarray(rng.normal(size=n).astype(np.float32))
     for fam in ("logistic", "probit"):
-        us = _time(ops.glm_stats, y, xb, fam, backend="ref")
-        rows.append({"name": f"glm_stats_{fam}_n{n}",
-                     "us_per_call": round(us, 1),
-                     "derived": f"bytes~{n*4*5}"})
+        stats = jax.jit(lambda y, xb, f=fam: ops.glm_stats(
+            y, xb, f, backend="ref"))
+        bench(f"glm_stats_{fam}_n{n}", stats, y, xb)
 
     xdb = jnp.asarray(rng.normal(size=n).astype(np.float32))
     alphas = jnp.asarray(np.logspace(-3, 0, 21), jnp.float32)
-    us = _time(ops.alpha_search, y, xb, xdb, alphas, "logistic",
-               backend="ref")
-    rows.append({"name": f"alpha_search_K21_n{n}",
-                 "us_per_call": round(us, 1),
-                 "derived": f"loss_evals~{21*n}"})
+    asearch = jax.jit(lambda y, xb, xdb, a: ops.alpha_search(
+        y, xb, xdb, a, "logistic", backend="ref"))
+    bench(f"alpha_search_K21_n{n}", asearch, y, xb, xdb, alphas)
 
     # dense-vs-sparse occupancy sweep: per-tile Gram+gradient through the
     # dense tile matmul vs the brick-gather tile_gram at decreasing brick
@@ -52,19 +75,50 @@ def run():
     rb, n_rb = 256, n // 256
     w2 = jnp.asarray(w.reshape(n_rb, rb))
     r2 = jnp.asarray(s.reshape(n_rb, rb))
-    us_dense = _time(
-        lambda Xt, wv, rv: ((Xt * wv[:, None]).T @ Xt, Xt.T @ rv),
-        jnp.asarray(X), jnp.asarray(w), jnp.asarray(s))
-    rows.append({"name": f"tile_gram_dense_T{T}", "us_per_call":
-                 round(us_dense, 1), "derived": f"flops~{2*n*T*T}"})
+    dense_gram = jax.jit(
+        lambda Xt, wv, rv: ((Xt * wv[:, None]).T @ Xt, Xt.T @ rv))
+    bench(f"tile_gram_dense_T{T}", dense_gram,
+          jnp.asarray(X), jnp.asarray(w), jnp.asarray(s))
     for occ in (1.0, 0.5, 0.25, 0.05):
         nb = max(1, int(round(occ * n_rb)))
         bricks = jnp.asarray(
             rng.normal(size=(nb, rb, T)).astype(np.float32))
         brick_rows = jnp.asarray(np.arange(nb, dtype=np.int32) % n_rb)
-        us = _time(ops.tile_gram, bricks, brick_rows, jnp.int32(nb),
-                   w2, r2, backend="ref")
-        rows.append({"name": f"tile_gram_bricks_T{T}_occ{occ:g}",
-                     "us_per_call": round(us, 1),
-                     "derived": f"flops~{2*nb*rb*T*T}"})
+        tg = jax.jit(lambda b, r, nv, w2, r2: ops.tile_gram(
+            b, r, nv, w2, r2, backend="ref"))
+        bench(f"tile_gram_bricks_T{T}_occ{occ:g}", tg,
+              bricks, brick_rows, jnp.int32(nb), w2, r2)
+
+    # fused superstep launches (DESIGN.md §8): stats+Gram+solve in one
+    # program, margin+candidate-losses in the other — compare their
+    # us_per_call against the sum of the unfused rows above.  p/T = 8
+    # tiles: the minimum at which the ref backend's active-set compaction
+    # (shaped_tile_grams) engages, so the live0.25 row shows the win
+    p = 2048
+    nt = p // T
+    Xp = rng.normal(size=(n, p)).astype(np.float32)
+    dd, _ = design_lib.dense_design(jnp.asarray(Xp), tile_size=T)
+    beta_p = jnp.asarray(
+        (rng.normal(size=p) * (rng.random(p) < 0.2)).astype(np.float32))
+    xb_p = dd.matvec(beta_p)
+    live = jnp.ones((nt,), bool)
+    fsweep = jax.jit(lambda d, y, xb, b, tl: ops.fused_stats_sweep(
+        d, y, xb, b, "logistic", mu=1.0, nu=1e-6, lam1=0.3, lam2=0.1,
+        tile_live=tl, backend="ref"))
+    bench(f"fused_stats_sweep_n{n}_p{p}", fsweep, dd, y, xb_p, beta_p, live)
+    # quarter-occupancy active set: the shaped launch skips 3/4 of the tiles
+    live_q = jnp.arange(nt) < max(nt // 4, 1)
+    bench(f"fused_stats_sweep_n{n}_p{p}_live0.25", fsweep, dd, y, xb_p,
+          beta_p, live_q)
+    cand = jnp.asarray(np.logspace(-3, 0, 294), jnp.float32)
+    fls = jax.jit(lambda d, y, xb, db, c: ops.fused_ls(
+        d, y, xb, db, c, "logistic", backend="ref"))
+    bench(f"fused_ls_K294_n{n}_p{p}", fls, dd, y, xb_p, beta_p, cand)
+
+    # launch-count evidence + analytic roofline targets per launch
+    rows.append({
+        "name": f"superstep_launch_targets_n{n}_p{p}",
+        "fused": superstep_launch_targets(n, p, T, fused=True),
+        "unfused": superstep_launch_targets(n, p, T, fused=False),
+    })
     return {"figure": "kernels", "rows": rows}

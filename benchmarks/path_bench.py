@@ -8,29 +8,107 @@ Two cold baselines are timed:
   * ``cold_oneshot``  — K calls of the deprecated ``dglmnet.fit`` driver (the
     historical cost: re-pack + re-place + re-jit every call).
 
-``--smoke`` runs a reduced grid and asserts the session invariants (CI):
-monotone support growth along decreasing λ, one superstep compile, and
-fewer total supersteps than the cold per-λ fits (wall-clock is only
-asserted informally at smoke size — per-λ host overheads rival the ~ms
-superstep there; the committed full-size numbers carry the timing claim).
+Every case is run twice — ``fused: false`` (the pre-fusion superstep:
+stats / sweep / merge / line-search as separate programs) and ``fused: true``
+(the DESIGN.md §8 two-launch pipeline) — so the committed JSON carries its
+own before/after evidence on one machine.  Each row also reports:
+
+  * ``phases_us`` — steady-state per-phase µs at the case's shapes, from
+    separately-jitted ops (repro.timing.timeit).  On the ref backend the
+    fused stats+sweep op is the exact composition of the unfused phases,
+    so the unfused ``sweep_us`` is measured as (stats+sweep) − stats.
+  * ``launches_per_superstep`` — the TPU launch count of the configured
+    pipeline (roofline.superstep_launch_targets): 2 fused vs 5 unfused.
+  * ``launch_stats`` — the solver's host-side sweep-launch bookkeeping for
+    the warm path (tiles actually launched vs skipped by active-set
+    shaping).
+
+``--smoke`` runs a reduced grid fused AND unfused and asserts the session
+invariants (CI): β parity ≤ 1e-5 between the two paths, monotone support
+growth along decreasing λ, one superstep compile, fewer total supersteps
+than the cold per-λ fits, and — against the committed smoke row — that the
+fused warm-path speedup has not regressed below half its baseline
+(wall-clock at smoke size is host-overhead-dominated, so the gate is
+deliberately loose; the committed full-size rows carry the timing claim).
 """
 from __future__ import annotations
 
 import argparse
+import json
+import pathlib
 import time
 import warnings
 
 import numpy as np
 
+_RESULTS = pathlib.Path(__file__).resolve().parents[1] \
+    / "results" / "benchmarks" / "path_bench.json"
+
+
+def _phase_breakdown(X, y, *, tile_size, fused, family="logistic"):
+    """Per-phase steady-state µs at this case's shapes (jitted ops)."""
+    import jax
+    import jax.numpy as jnp
+
+    import repro.core  # noqa: F401  (break the design↔ops import cycle)
+    from repro.core import linesearch
+    from repro.data import design as design_lib
+    from repro.data.sparse import SparseCOO
+    from repro.kernels import ops
+    from repro.timing import timeit
+
+    if isinstance(X, SparseCOO):
+        design, _ = design_lib.build_block_sparse(X, tile_size)
+    else:
+        design, _ = design_lib.dense_design(jnp.asarray(X), tile_size)
+    n_rows, p_pad = design.shape
+    rng = np.random.default_rng(0)
+    beta = jnp.asarray(
+        (rng.normal(size=p_pad) * (rng.random(p_pad) < 0.2)).astype(
+            np.float32))
+    xb = design.matvec(beta)
+    yj = jnp.asarray(np.resize(np.asarray(y, np.float32), n_rows))
+    live = jnp.ones((design.n_tiles,), bool)
+
+    fsweep = jax.jit(lambda d, y, xb, b, tl: ops.fused_stats_sweep(
+        d, y, xb, b, family, mu=1.0, nu=1e-6, lam1=0.1, lam2=0.0,
+        tile_live=tl, backend="ref"))
+    stats = jax.jit(lambda y, xb: ops.glm_stats(y, xb, family, backend="ref"))
+    stats_sweep_us = timeit(fsweep, design, yj, xb, beta, live)
+    if fused:
+        cand = linesearch.full_candidates(1e-3, 13, 0.5, 20)
+        fls = jax.jit(lambda d, y, xb, db, c: ops.fused_ls(
+            d, y, xb, db, c, family, backend="ref"))
+        return {
+            "stats_sweep_us": round(stats_sweep_us, 1),
+            "merge_line_search_us": round(
+                timeit(fls, design, yj, xb, beta, cand), 1),
+        }
+    stats_us = timeit(stats, yj, xb)
+    mv = jax.jit(design.matvec)
+    a_grid = linesearch.candidate_alphas(1e-3, 13)
+    a_bt = linesearch.backtrack_chains(a_grid[:1], 0.5, 20)[0]
+    asearch = jax.jit(lambda y, xb, xdb, a: ops.alpha_search(
+        y, xb, xdb, a, family, backend="ref"))
+    xdb = mv(beta)
+    return {
+        "stats_us": round(stats_us, 1),
+        "sweep_us": round(max(stats_sweep_us - stats_us, 0.0), 1),
+        "merge_us": round(timeit(mv, beta), 1),
+        "line_search_us": round(timeit(asearch, yj, xb, xdb, a_grid)
+                                + timeit(asearch, yj, xb, xdb, a_bt), 1),
+    }
+
 
 def _bench_case(name, X, y, *, n_lambdas, lam_ratio, tile_size, coupling,
-                max_outer, tol):
+                max_outer, tol, fused=True):
     from repro.core import dglmnet
     from repro.core.dglmnet import DGLMNETConfig
     from repro.core.solver import GLMSolver
+    from repro.roofline.hlo import superstep_launch_targets
 
     cfg = DGLMNETConfig(tile_size=tile_size, coupling=coupling,
-                        max_outer=max_outer, tol=tol)
+                        max_outer=max_outer, tol=tol, fuse_superstep=fused)
 
     t0 = time.time()
     solver = GLMSolver(X, y, config=cfg)
@@ -42,9 +120,11 @@ def _bench_case(name, X, y, *, n_lambdas, lam_ratio, tile_size, coupling,
     solver.fit(lam1=solver.lambda_max() * 2.0, max_outer=1)
     compile_s = time.time() - t0
 
+    ls0 = dict(solver.launch_stats)
     t0 = time.time()
     path = solver.fit_path(n_lambdas=n_lambdas, lam_ratio=lam_ratio)
     warm_s = time.time() - t0
+    launch_stats = {k: solver.launch_stats[k] - ls0[k] for k in ls0}
 
     t0 = time.time()
     cold_iters = 0
@@ -58,11 +138,12 @@ def _bench_case(name, X, y, *, n_lambdas, lam_ratio, tile_size, coupling,
         for lam1 in path.lambdas:
             dglmnet.fit(X, y, DGLMNETConfig(
                 lam1=float(lam1), tile_size=tile_size, coupling=coupling,
-                max_outer=max_outer, tol=tol))
+                max_outer=max_outer, tol=tol, fuse_superstep=fused))
     cold_oneshot_s = time.time() - t0
 
+    n, p = X.shape
     return {
-        "case": name, "n_lambdas": n_lambdas,
+        "case": name, "fused": fused, "n_lambdas": n_lambdas,
         "setup_s": round(setup_s, 3),
         "compile_s": round(compile_s, 3),
         "warm_path_s": round(warm_s, 3),
@@ -73,6 +154,10 @@ def _bench_case(name, X, y, *, n_lambdas, lam_ratio, tile_size, coupling,
         "speedup_vs_cold_oneshot": round(cold_oneshot_s / warm_s, 2),
         "warm_iters": int(path.n_iters.sum()), "cold_iters": int(cold_iters),
         "compile_count": solver.compile_count,
+        "launches_per_superstep": superstep_launch_targets(
+            n, p, tile_size, fused=fused)["n_launches"],
+        "launch_stats": launch_stats,
+        "phases_us": _phase_breakdown(X, y, tile_size=tile_size, fused=fused),
         "nnz_path": path.nnz.tolist(),
     }, path
 
@@ -82,15 +167,27 @@ def run():
 
     rows = []
     ds = synthetic.make_dense(n=2000, p=512, k_true=40, seed=31)
-    row, _ = _bench_case("dense_2000x512", ds.train.X, ds.train.y,
-                         n_lambdas=20, lam_ratio=1e-3, tile_size=64,
-                         coupling="jacobi", max_outer=100, tol=1e-9)
-    rows.append(row)
+    for fused in (False, True):
+        row, _ = _bench_case("dense_2000x512", ds.train.X, ds.train.y,
+                             n_lambdas=20, lam_ratio=1e-3, tile_size=64,
+                             coupling="jacobi", max_outer=100, tol=1e-9,
+                             fused=fused)
+        rows.append(row)
 
     ds = synthetic.make_sparse(n=2000, p=2048, avg_nnz=30, k_true=60, seed=32)
-    row, _ = _bench_case("sparse_2000x2048", ds.train.X, ds.train.y,
-                         n_lambdas=20, lam_ratio=1e-3, tile_size=128,
-                         coupling="jacobi", max_outer=100, tol=1e-9)
+    for fused in (False, True):
+        row, _ = _bench_case("sparse_2000x2048", ds.train.X, ds.train.y,
+                             n_lambdas=20, lam_ratio=1e-3, tile_size=128,
+                             coupling="jacobi", max_outer=100, tol=1e-9,
+                             fused=fused)
+        rows.append(row)
+
+    # smoke-size fused row: the CI regression gate's committed baseline
+    ds = synthetic.make_dense(n=500, p=128, k_true=12, seed=33)
+    row, _ = _bench_case("smoke_500x128", ds.train.X, ds.train.y,
+                         n_lambdas=12, lam_ratio=1e-2, tile_size=32,
+                         coupling="jacobi", max_outer=80, tol=1e-9,
+                         fused=True)
     rows.append(row)
     return {"figure": "path_bench", "rows": rows}
 
@@ -99,20 +196,40 @@ def smoke() -> int:
     from repro.data import synthetic
 
     ds = synthetic.make_dense(n=500, p=128, k_true=12, seed=33)
+    row_u, path_u = _bench_case("smoke_500x128", ds.train.X, ds.train.y,
+                                n_lambdas=12, lam_ratio=1e-2, tile_size=32,
+                                coupling="jacobi", max_outer=80, tol=1e-9,
+                                fused=False)
     row, path = _bench_case("smoke_500x128", ds.train.X, ds.train.y,
                             n_lambdas=12, lam_ratio=1e-2, tile_size=32,
-                            coupling="jacobi", max_outer=80, tol=1e-9)
+                            coupling="jacobi", max_outer=80, tol=1e-9,
+                            fused=True)
+    print(row_u)
     print(row)
+    # fused and unfused supersteps must agree on the whole path
+    err = float(np.abs(path.betas - path_u.betas).max())
+    assert err <= 1e-5, f"fused/unfused path beta drift {err:.2e}"
     nnz = np.asarray(path.nnz)
     # support only ever grows (within a slack of 2) along decreasing λ
     assert (np.diff(nnz) >= -2).all(), f"non-monotone nnz path: {nnz}"
     assert nnz[0] == 0 and nnz[-1] > nnz[0], nnz
     assert row["compile_count"] <= 1, row["compile_count"]
+    assert row["launches_per_superstep"] < row_u["launches_per_superstep"], \
+        (row["launches_per_superstep"], row_u["launches_per_superstep"])
     # warm starts must save supersteps (the wall-clock win is asserted on
     # the full-size grid in run(); at smoke size per-λ host overheads rival
     # the ~ms superstep so timing would be flaky in CI)
     assert row["warm_iters"] < row["cold_iters"], \
         (row["warm_iters"], row["cold_iters"])
+    # regression gate vs the committed smoke baseline (loose 0.5× bound:
+    # smoke wall-clock is host-overhead-dominated and CI machines vary)
+    if _RESULTS.exists():
+        committed = [r for r in json.loads(_RESULTS.read_text())["rows"]
+                     if r["case"] == "smoke_500x128" and r.get("fused")]
+        if committed:
+            floor = 0.5 * committed[0]["speedup_vs_cold_session"]
+            assert row["speedup_vs_cold_session"] >= floor, \
+                (row["speedup_vs_cold_session"], floor)
     print("PATH_SMOKE_OK")
     return 0
 

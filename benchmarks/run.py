@@ -57,7 +57,9 @@ def main() -> None:
             wall_us = (time.time() - t0) * 1e6
             if name == "kernels":
                 for r in res["rows"]:
-                    print(f"{r['name']},{r['us_per_call']},{r['derived']}")
+                    # evidence-only rows (launch targets) carry no timing
+                    print(f"{r['name']},{r.get('us_per_call', '')},"
+                          f"{r.get('derived', '')}")
             else:
                 print(f"{name},{wall_us:.0f},rows={len(res.get('rows', []))}")
             (RESULTS / f"{name}.json").write_text(json.dumps(res, indent=2,

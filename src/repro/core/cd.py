@@ -46,6 +46,17 @@ def _psum(x, axis: Optional[str]):
     return jax.lax.psum(x, axis) if axis is not None else x
 
 
+def alb_live_mask(n_tiles: int, start_tile, num_tiles):
+    """(n_tiles,) bool: tiles [start, start+budget) in cyclic order — the
+    ALB budget window of one jacobi sweep (Section 7).  Shared by the
+    unfused sweeps and the fused superstep's tile-occupancy pass."""
+    tids = jnp.arange(n_tiles, dtype=jnp.int32)
+    offset = jax.lax.rem(tids - jnp.asarray(start_tile, jnp.int32),
+                         jnp.asarray(n_tiles, jnp.int32))
+    offset = jnp.where(offset < 0, offset + n_tiles, offset)
+    return offset < jnp.minimum(jnp.asarray(num_tiles, jnp.int32), n_tiles)
+
+
 def sweep_gauss_seidel(design, s, w, beta, dbeta, xdb, *, mu, nu, lam1, lam2,
                        start_tile=0, num_tiles=None,
                        max_num_tiles: Optional[int] = None,
@@ -80,26 +91,44 @@ def sweep_gauss_seidel(design, s, w, beta, dbeta, xdb, *, mu, nu, lam1, lam2,
     num_tiles = jnp.asarray(num_tiles, jnp.int32)
     static_bound = int(max_num_tiles if max_num_tiles is not None else n_tiles_total)
 
+    # Dead-tile skip (active-set-shaped launches, DESIGN.md §8): when rows
+    # are unsharded, a tile whose coordinates are all screened out skips its
+    # Gram/solve/matvec entirely via a real branch.  With ``axis_data`` the
+    # psum inside the body must run in SPMD lockstep, so the branch is
+    # disabled and dead tiles keep doing (masked) work.
+    skip_dead = active is not None and axis_data is None
+
     def tile_body(t, carry):
         dbeta_c, xdb_c = carry
         live = t < num_tiles
         tid = jax.lax.rem(jnp.asarray(start_tile, jnp.int32) + t, n_tiles_total)
         col0 = tid * T
-        r = s - mu * (w * xdb_c)
-        G, g = design.tile_gram(tid, w, r, backend=backend)
-        G, g = _psum((G, g), axis_data)
-        h = jnp.diagonal(G)
-        bt = jax.lax.dynamic_slice(beta, (col0,), (T,))
         dt = jax.lax.dynamic_slice(dbeta_c, (col0,), (T,))
-        pf_t = None if penf is None else \
-            jax.lax.dynamic_slice(penf, (col0,), (T,))
-        dt_new = ops.cd_tile_solve(G, g, h, bt, dt, mu, nu, lam1, lam2,
-                                   penf=pf_t, backend=backend)
-        if active is not None:
+
+        def do_tile():
+            r = s - mu * (w * xdb_c)
+            G, g = design.tile_gram(tid, w, r, backend=backend)
+            G, g = _psum((G, g), axis_data)
+            h = jnp.diagonal(G)
+            bt = jax.lax.dynamic_slice(beta, (col0,), (T,))
+            pf_t = None if penf is None else \
+                jax.lax.dynamic_slice(penf, (col0,), (T,))
+            dt_new = ops.cd_tile_solve(G, g, h, bt, dt, mu, nu, lam1, lam2,
+                                       penf=pf_t, backend=backend)
+            if active is not None:
+                at = jax.lax.dynamic_slice(active, (col0,), (T,))
+                dt_new = jnp.where(at > 0, dt_new, dt)
+            dt_new = jnp.where(live, dt_new, dt)
+            return dt_new, design.tile_matvec(tid, dt_new - dt)
+
+        if skip_dead:
             at = jax.lax.dynamic_slice(active, (col0,), (T,))
-            dt_new = jnp.where(at > 0, dt_new, dt)
-        dt_new = jnp.where(live, dt_new, dt)
-        xdb_c = xdb_c + design.tile_matvec(tid, dt_new - dt)
+            tile_on = live & (jnp.max(at) > 0)
+            dt_new, xdb_add = jax.lax.cond(
+                tile_on, do_tile, lambda: (dt, jnp.zeros_like(xdb_c)))
+        else:
+            dt_new, xdb_add = do_tile()
+        xdb_c = xdb_c + xdb_add
         dbeta_c = jax.lax.dynamic_update_slice(dbeta_c, dt_new, (col0,))
         return dbeta_c, xdb_c
 
@@ -149,11 +178,7 @@ def sweep_jacobi(design, s, w, beta, dbeta, xdb, *, mu, nu, lam1, lam2,
             G_all, g_all, h_all, beta_r, dbeta_r, penf_r)
 
     # ALB mask: tiles [start, start+budget) in cyclic order are active.
-    tids = jnp.arange(n_tiles_total, dtype=jnp.int32)
-    offset = jax.lax.rem(tids - jnp.asarray(start_tile, jnp.int32),
-                         jnp.asarray(n_tiles_total, jnp.int32))
-    offset = jnp.where(offset < 0, offset + n_tiles_total, offset)
-    live = offset < jnp.minimum(num_tiles, n_tiles_total)
+    live = alb_live_mask(n_tiles_total, start_tile, num_tiles)
     d_new = jnp.where(live[:, None], d_new, 0.0)
     if active is not None:
         d_new = jnp.where(active.reshape(n_tiles_total, T) > 0, d_new, 0.0)
@@ -265,10 +290,7 @@ def sweep_jacobi_gram(G_full, g0, beta, *, mu, nu, lam1, lam2, tile_size,
                                                  penf=pt))(
             G_all, g_all, h_all, beta_r, dbeta_r, penf_r)
 
-    offset = jax.lax.rem(tids - jnp.asarray(start_tile, jnp.int32),
-                         jnp.asarray(n_tiles_total, jnp.int32))
-    offset = jnp.where(offset < 0, offset + n_tiles_total, offset)
-    live = offset < jnp.minimum(num_tiles, n_tiles_total)
+    live = alb_live_mask(n_tiles_total, start_tile, num_tiles)
     d_new = jnp.where(live[:, None], d_new, 0.0)
     if active is not None:
         d_new = jnp.where(active.reshape(n_tiles_total, T) > 0, d_new, 0.0)

@@ -60,6 +60,14 @@ class DGLMNETConfig:
     tile_size: int = 256
     coupling: str = "gauss-seidel"          # or "jacobi"
     kernel_backend: Optional[str] = None    # None = auto (ref on CPU)
+    # fused superstep fast path (DESIGN.md §8): collapse the
+    # stats→Gram→solve and margin→line-search chains into two launches.
+    # Applies to single-device jacobi supersteps (collectives pin the
+    # distributed path to the unfused launch structure); elsewhere inert.
+    fuse_superstep: bool = True
+    # "fp32" | "bf16": matmul-input precision of the fused Gram/margin
+    # accumulations (accumulation + masters + Armijo sums stay fp32)
+    precision: str = "fp32"
     # distribution:
     compress_margin: Optional[str] = None   # None | "bf16" | "int8"
     # ALB (Section 7): None = BSP (P^m = S^m every superstep)
@@ -117,6 +125,100 @@ def make_superstep(config: DGLMNETConfig, *, axis_data=None, axis_model=None,
     backend = config.kernel_backend
     fam = config.family
     static_bound = int(max_budget if max_budget is not None else n_tiles_local)
+
+    # Fused fast path (DESIGN.md §8): jacobi coupling, single device only —
+    # the xdb merge and the Armijo sums are collectives when sharded, and a
+    # collective is a launch boundary, so the distributed superstep keeps
+    # the unfused structure.  Backend resolved at build time: "pallas" gets
+    # the one-pass margin+line-search launch (all 294 candidate losses in
+    # one sweep); "ref" keeps the two-phase search (grid then chain), which
+    # is cheaper when XLA is fusing everything into one CPU program anyway.
+    use_fused = (config.fuse_superstep and config.coupling == "jacobi"
+                 and axis_data is None and axis_model is None)
+    resolved_backend = backend or ops.default_backend()
+    one_pass_ls = resolved_backend == "pallas"
+
+    def superstep_fused(X, y, weights, offset, budget, lams, active, penf,
+                        state: FitState):
+        design = design_lib.as_local_design(X, config.tile_size)
+        beta, xb, mu, cursor, step = state
+        lam1, lam2 = lams[0], lams[1]
+        T = config.tile_size
+        nt = n_tiles_local
+
+        # tile occupancy = ALB budget window ∧ any-active-coordinate: dead
+        # tiles cost no Gram/solve work (active-set-shaped launch)
+        alb_live = cd_lib.alb_live_mask(nt, cursor[0], budget[0])
+        tile_act = jnp.any(active.reshape(nt, T) > 0, axis=1)
+        tile_live = alb_live & tile_act
+
+        # (1+2) fused launch: stats + every live tile's Gram/gradient +
+        # the Jacobi tile solves, one pass over the rows
+        loss_i, s, w, dbeta, _, _ = ops.fused_stats_sweep(
+            design, y, xb, beta, fam, mu=mu, nu=config.nu,
+            lam1=lam1, lam2=lam2, weights=weights, offset=offset,
+            penf=penf, tile_live=tile_live,
+            precision=config.precision, backend=backend)
+        dbeta = jnp.where(active > 0, dbeta, 0.0)
+        L = jnp.sum(loss_i)
+        R0 = linesearch.penalty_terms(beta, jnp.zeros_like(beta),
+                                      jnp.zeros((1,)), lam1, lam2, None,
+                                      penf)[0]
+        f_cur = L + R0
+
+        # (3+4) fused launch: margin delta + candidate losses; Algorithm-3
+        # selection happens on the accumulated scalars (same decisions as
+        # linesearch.search — see select_precomputed)
+        if one_pass_ls:
+            cand = linesearch.full_candidates(
+                config.ls_delta, config.ls_grid_size, config.backtrack_b,
+                config.max_backtracks)
+            xdb, losses = ops.fused_ls(
+                design, y, xb, dbeta, cand, fam, weights=weights,
+                offset=offset, precision=config.precision, backend=backend)
+            grad_dot_dir = -jnp.sum(s * xdb)
+            quad_form = (mu * jnp.sum(w * xdb * xdb)
+                         + config.nu * jnp.sum(dbeta * dbeta))
+            ls = linesearch.select_precomputed(
+                losses, cand, beta, dbeta, lam1, lam2, f_current=f_cur,
+                grad_dot_dir=grad_dot_dir, quad_form=quad_form,
+                sigma=config.sigma, gamma=config.gamma,
+                grid_size=config.ls_grid_size,
+                max_backtracks=config.max_backtracks, penf=penf)
+        else:
+            xdb = design.matvec(dbeta)
+            grad_dot_dir = -jnp.sum(s * xdb)
+            quad_form = (mu * jnp.sum(w * xdb * xdb)
+                         + config.nu * jnp.sum(dbeta * dbeta))
+            ls = linesearch.search(
+                y, xb, xdb, beta, dbeta, family=fam,
+                lam1=lam1, lam2=lam2, mu=mu, nu=config.nu,
+                f_current=f_cur, grad_dot_dir=grad_dot_dir,
+                quad_form=quad_form, sigma=config.sigma,
+                b=config.backtrack_b, gamma=config.gamma,
+                delta=config.ls_delta, grid_size=config.ls_grid_size,
+                max_backtracks=config.max_backtracks, weights=weights,
+                offset=offset, penf=penf, backend=backend)
+
+        # (5+6) identical to the unfused superstep
+        beta_new = beta + ls.alpha * dbeta
+        xb_new = xb + ls.alpha * xdb
+        if config.adaptive_mu:
+            mu_new = jnp.where(ls.alpha < 1.0, config.eta1 * mu,
+                               jnp.maximum(1.0, mu / config.eta2))
+        else:
+            mu_new = mu
+        tiles_done = jnp.minimum(budget[0], nt)
+        cursor_new = jnp.remainder(cursor + tiles_done, nt)
+        nnz = jnp.sum((beta_new != 0.0).astype(jnp.int32))
+        metrics = {
+            "f": ls.f_new, "f_before": f_cur, "loss": L,
+            "alpha": ls.alpha, "mu": mu_new, "nnz": nnz,
+            "accepted_unit": ls.accepted_unit.astype(jnp.int32),
+            "D": ls.D,
+        }
+        return FitState(beta_new, xb_new, mu_new, cursor_new, step + 1), \
+            metrics
 
     def superstep(X, y, weights, offset, budget, lams, active, penf,
                   state: FitState):
@@ -183,7 +285,7 @@ def make_superstep(config: DGLMNETConfig, *, axis_data=None, axis_model=None,
         }
         return FitState(beta_new, xb_new, mu_new, cursor_new, step + 1), metrics
 
-    return superstep
+    return superstep_fused if use_fused else superstep
 
 
 # ---------------------------------------------------------------------------
@@ -239,10 +341,9 @@ def make_streaming_superstep(config: DGLMNETConfig,
     B = config.max_backtracks
 
     def _candidates():
-        alphas0 = linesearch.candidate_alphas(config.ls_delta,
-                                              config.ls_grid_size)
-        chains = linesearch.backtrack_chains(alphas0, config.backtrack_b, B)
-        return jnp.concatenate([alphas0, chains.reshape(-1)])
+        return linesearch.full_candidates(config.ls_delta,
+                                          config.ls_grid_size,
+                                          config.backtrack_b, B)
 
     @functools.partial(jax.jit, donate_argnums=(5,))
     def stats_chunk(Xc, yc, wc, oc, beta, acc):
@@ -292,22 +393,17 @@ def make_streaming_superstep(config: DGLMNETConfig,
         lam1, lam2 = lams[0], lams[1]
         dbeta, cand = prep["dbeta"], prep["cand"]
         f_cur = prep["f_cur"]
-        pens = linesearch.penalty_terms(beta, dbeta, cand, lam1, lam2, None,
-                                        penf)
-        f_cand = losses + pens
         # Algorithm 3 through the SAME helpers as linesearch.search —
         # unit step, α_init grid argmin, Armijo backtracking over
         # α_init·b^j — but the candidate losses were all accumulated in
         # ONE chunk pass, so the backtracking chain of the argmin is a
-        # dynamic slice instead of a second data pass.
-        R1 = pens[0]
-        D = prep["grad_dot_dir"] + config.gamma * prep["quad_form"] \
-            + R1 - prep["R0"]
-        i0 = jnp.argmin(f_cand[:K0])
-        bt_alpha = jax.lax.dynamic_slice(cand, (K0 + i0 * B,), (B,))
-        f_bt = jax.lax.dynamic_slice(f_cand, (K0 + i0 * B,), (B,))
-        ls = linesearch.armijo_select(f_cand[0], f_bt, bt_alpha, f_cur,
-                                      config.sigma, D)
+        # dynamic slice instead of a second data pass (the shared
+        # selection with the fused superstep fast path, DESIGN.md §8).
+        ls = linesearch.select_precomputed(
+            losses, cand, beta, dbeta, lam1, lam2, f_current=f_cur,
+            grad_dot_dir=prep["grad_dot_dir"], quad_form=prep["quad_form"],
+            sigma=config.sigma, gamma=config.gamma,
+            grid_size=config.ls_grid_size, max_backtracks=B, penf=penf)
 
         beta_new = beta + ls.alpha * dbeta
         if config.adaptive_mu:

@@ -63,6 +63,42 @@ def armijo_select(f_unit, f_bt, bt, f_current, sigma, D) -> LineSearchResult:
     return LineSearchResult(alpha, f_new, ok_unit, D)
 
 
+def full_candidates(delta, grid_size, b, max_backtracks):
+    """The ONE-PASS candidate set: ``[1, grid]`` followed by every
+    candidate's full Armijo backtracking chain, flattened —
+    ``(1 + grid_size) * (1 + max_backtracks)`` step sizes total.  Paired
+    with ``select_precomputed``, a single loss sweep over this set
+    replicates the two-phase ``search`` exactly; it is the candidate
+    contract of both the streaming superstep (losses accumulated across
+    chunks) and the fused superstep's margin+line-search launch
+    (DESIGN.md §8)."""
+    alphas0 = candidate_alphas(delta, grid_size)
+    chains = backtrack_chains(alphas0, b, max_backtracks)
+    return jnp.concatenate([alphas0, chains.reshape(-1)])
+
+
+def select_precomputed(losses, cand, beta, dbeta, lam1, lam2, *, f_current,
+                       grad_dot_dir, quad_form, sigma, gamma, grid_size,
+                       max_backtracks, axis_model=None,
+                       penf=None) -> LineSearchResult:
+    """Algorithm-3 selection from the precomputed losses of
+    ``full_candidates``: grid argmin, then the argmin's backtracking chain
+    by dynamic slice — bit-identical decisions to ``search`` without any
+    further data passes."""
+    K0 = 1 + grid_size
+    B = max_backtracks
+    pens = penalty_terms(beta, dbeta, cand, lam1, lam2, axis_model, penf)
+    f_cand = losses + pens
+    R1 = pens[0]                              # R(β + Δβ)
+    R0 = penalty_terms(beta, dbeta, jnp.zeros((1,)), lam1, lam2, axis_model,
+                       penf)[0]
+    D = grad_dot_dir + gamma * quad_form + R1 - R0
+    i0 = jnp.argmin(f_cand[:K0])
+    bt = jax.lax.dynamic_slice(cand, (K0 + i0 * B,), (B,))
+    f_bt = jax.lax.dynamic_slice(f_cand, (K0 + i0 * B,), (B,))
+    return armijo_select(f_cand[0], f_bt, bt, f_current, sigma, D)
+
+
 def penalty_terms(beta, dbeta, alphas, lam1, lam2, axis_model, penf=None):
     """R(β + α·Δβ) for every α: (K,). beta/dbeta are the LOCAL shards.
 

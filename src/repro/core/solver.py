@@ -58,6 +58,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import functools
+import os
 from typing import NamedTuple, Optional
 
 import jax
@@ -99,7 +100,7 @@ def _config_key(config: DGLMNETConfig) -> tuple:
             config.nu, config.sigma, config.backtrack_b, config.gamma,
             config.ls_delta, config.ls_grid_size, config.max_backtracks,
             config.tile_size, config.coupling, config.kernel_backend,
-            config.compress_margin)
+            config.compress_margin, config.fuse_superstep, config.precision)
 
 
 def _cached_superstep(key: tuple, build):
@@ -117,6 +118,44 @@ def _cached_superstep(key: tuple, build):
 def clear_superstep_cache():
     """Drop all cached compiled supersteps (tests / memory pressure)."""
     _SUPERSTEP_CACHE.clear()
+
+
+# ---------------------------------------------------------------------------
+# persistent compilation cache (cold-PROCESS startup; SNIPPETS.md Snippet 3)
+# ---------------------------------------------------------------------------
+
+_COMPILATION_CACHE_DIR: Optional[str] = None
+
+
+def _maybe_init_compilation_cache():
+    """Point jax's persistent compilation cache at the directory named by
+    ``REPRO_COMPILATION_CACHE`` (once per process; no-op when unset).
+
+    The in-process ``_SUPERSTEP_CACHE`` above removes re-jit cost across
+    fits of one session; this removes it across PROCESSES — a fresh
+    interpreter deserializes the XLA executable instead of re-compiling
+    (the 0.58–0.69 s ``compile_s`` in path_bench.json).  The min-compile-
+    time/entry-size thresholds are zeroed so every program is cached —
+    this repo's programs are few and heavily reused, the usual
+    small-program cache pollution tradeoff doesn't apply.
+    """
+    global _COMPILATION_CACHE_DIR
+    path = os.environ.get("REPRO_COMPILATION_CACHE")
+    if not path or _COMPILATION_CACHE_DIR == path:
+        return
+    try:
+        from jax.experimental.compilation_cache import (
+            compilation_cache as cc)
+        cc.initialize_cache(path)
+    except Exception:
+        jax.config.update("jax_compilation_cache_dir", path)
+    for flag, val in (("jax_persistent_cache_min_compile_time_secs", 0.0),
+                      ("jax_persistent_cache_min_entry_size_bytes", 0)):
+        try:
+            jax.config.update(flag, val)
+        except Exception:  # flag not present in this jax version
+            pass
+    _COMPILATION_CACHE_DIR = path
 
 
 # ---------------------------------------------------------------------------
@@ -270,6 +309,7 @@ class GLMSolver:
                  sample_weight=None, offset=None,
                  standardize: bool = False, fit_intercept: bool = False,
                  penalty_factor=None):
+        _maybe_init_compilation_cache()
         config = DGLMNETConfig() if config is None else config
         if family is not None:
             fam = glm.resolve_family(family)
@@ -296,6 +336,11 @@ class GLMSolver:
         self._dev_fn = None
         self._streaming = False
         self._serve_cache = None        # (key, ScoringEngine) for predict
+        # host-side sweep launch bookkeeping (active-set-shaped launches,
+        # DESIGN.md §8): tiles the CD sweep actually processed vs skipped
+        # because every coordinate was screened out.  In-memory fits only.
+        self.launch_stats = {"supersteps": 0, "sweep_tile_launches": 0,
+                             "sweep_tiles_skipped": 0}
 
         y = np.asarray(y, np.float32)
         n = y.shape[0]
@@ -770,6 +815,21 @@ class GLMSolver:
         active_dev = self._active_ones if active is None else \
             self._place_feat(np.asarray(active, np.float32))
 
+        # sweep-launch bookkeeping: the active mask is host-known, so the
+        # tiles the shaped sweep will skip are too (the compiled superstep
+        # itself is branch-predicated — it never retraces with the mask)
+        total_tiles = self._p_tot // cfg.tile_size
+        if active is None:
+            live_tiles = total_tiles
+        else:
+            act = np.asarray(active, np.float32).reshape(total_tiles,
+                                                         cfg.tile_size)
+            live_tiles = int((act.max(axis=1) > 0).sum())
+        shaped = active is not None and self.axis_data is None and (
+            cfg.coupling == "gauss-seidel"
+            or (cfg.fuse_superstep and cfg.coupling == "jacobi"
+                and self.axis_model is None))
+
         history = {k: [] for k in _HISTORY_KEYS}
         f_prev, converged, it = np.inf, False, 0
         start_it = 1
@@ -795,6 +855,12 @@ class GLMSolver:
             state, m = self._superstep(self._Xs, self._ys, weights_dev,
                                        self._offsets, self._budgets(), lams,
                                        active_dev, self._penf, state)
+            self.launch_stats["supersteps"] += 1
+            self.launch_stats["sweep_tile_launches"] += \
+                live_tiles if shaped else total_tiles
+            if shaped:
+                self.launch_stats["sweep_tiles_skipped"] += \
+                    total_tiles - live_tiles
             f = float(m["f"])
             for k in history:
                 history[k].append(float(m[k]))

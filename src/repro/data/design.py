@@ -125,17 +125,36 @@ class DesignMatrix:
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
 class DenseDesign(DesignMatrix):
-    """Feature-padded dense design: ``data`` is (n_rows, n_tiles * T)."""
+    """Feature-padded dense design: ``data`` is (n_rows, n_tiles * T).
+
+    ``data_t`` is an OPTIONAL cached tile-major transposed copy
+    ``(n_tiles, n_rows, T)`` built by ``dense_design`` — the layout the fused
+    superstep kernels (DESIGN.md §8) grid over: tile t's rows are one
+    contiguous (n, T) block, so the per-tile Gram is a single batched matmul
+    instead of an einsum re-gather.  It doubles the design's memory; sessions
+    that never take the fused path can pass ``None``.
+    """
 
     data: jnp.ndarray
     tile_size: int
+    data_t: Optional[jnp.ndarray] = None
 
     def tree_flatten(self):
-        return (self.data,), (self.tile_size,)
+        return (self.data, self.data_t), (self.tile_size,)
 
     @classmethod
     def tree_unflatten(cls, aux, leaves):
-        return cls(leaves[0], aux[0])
+        return cls(leaves[0], aux[0], leaves[1])
+
+    def tiles3(self):
+        """(n_tiles, n_rows, T) tile-major view — the cached ``data_t`` when
+        present, else transposed in-trace (correct but re-materialized per
+        call; the session builder caches it once)."""
+        if self.data_t is not None:
+            return self.data_t
+        n = self.data.shape[0]
+        return jnp.swapaxes(
+            self.data.reshape(n, self.n_tiles, self.tile_size), 0, 1)
 
     @property
     def shape(self):
@@ -147,7 +166,9 @@ class DenseDesign(DesignMatrix):
 
     def partition_specs(self, axis_data, axis_model):
         from jax.sharding import PartitionSpec as P
-        return DenseDesign(P(axis_data, axis_model), self.tile_size)
+        return DenseDesign(P(axis_data, axis_model), self.tile_size,
+                           None if self.data_t is None
+                           else P(axis_model, axis_data, None))
 
     def tile_gram(self, tid, w, r, *, backend=None):
         T = self.tile_size
@@ -181,7 +202,13 @@ class DenseDesign(DesignMatrix):
 
     def scale_columns(self, scale, center=None):
         data = self.data if center is None else self.data - center[None, :]
-        return DenseDesign(data * scale[None, :], self.tile_size)
+        data = data * scale[None, :]
+        out = DenseDesign(data, self.tile_size)
+        if self.data_t is not None:     # rebuild the fused-layout cache
+            n = data.shape[0]
+            out.data_t = jnp.swapaxes(
+                data.reshape(n, self.n_tiles, self.tile_size), 0, 1)
+        return out
 
     def to_dense(self):
         return self.data
@@ -222,11 +249,15 @@ class BlockSparseDesign(DesignMatrix):
     _n_tiles: int
     max_bricks_per_tile: int
     leading: int = 0
+    # static (host-checked at build): every tile holds exactly
+    # max_bricks_per_tile bricks, stored tile-major contiguous — the fused
+    # superstep's zero-copy (n_tiles, K·rb, T) reshape applies (DESIGN.md §8)
+    uniform_K: bool = False
 
     def tree_flatten(self):
         leaves = (self.bricks, self.brick_row, self.brick_tile, self.tile_ptr)
         aux = (self.tile_size, self.row_block, self.n_rows, self._n_tiles,
-               self.max_bricks_per_tile, self.leading)
+               self.max_bricks_per_tile, self.leading, self.uniform_K)
         return leaves, aux
 
     @classmethod
@@ -251,7 +282,8 @@ class BlockSparseDesign(DesignMatrix):
         return BlockSparseDesign(
             self.bricks[0, 0], self.brick_row[0, 0], self.brick_tile[0, 0],
             self.tile_ptr[0, 0], self.tile_size, self.row_block, self.n_rows,
-            self._n_tiles, self.max_bricks_per_tile, leading=0)
+            self._n_tiles, self.max_bricks_per_tile, leading=0,
+            uniform_K=self.uniform_K)
 
     def partition_specs(self, axis_data, axis_model):
         from jax.sharding import PartitionSpec as P
@@ -260,7 +292,8 @@ class BlockSparseDesign(DesignMatrix):
         return BlockSparseDesign(
             P(*lead, None, None, None), P(*lead, None), P(*lead, None),
             P(*lead, None), self.tile_size, self.row_block, self.n_rows,
-            self._n_tiles, self.max_bricks_per_tile, leading=2)
+            self._n_tiles, self.max_bricks_per_tile, leading=2,
+            uniform_K=self.uniform_K)
 
     # -- per-tile brick gather ------------------------------------------------
 
@@ -298,6 +331,32 @@ class BlockSparseDesign(DesignMatrix):
             return ops.tile_gram(tb, rows, n_valid, w2, r2, backend=backend)
 
         return jax.lax.map(one, jnp.arange(self._n_tiles, dtype=jnp.int32))
+
+    def gather_all_tiles(self):
+        """Every tile's bricks as one batched layout for the fused superstep
+        (DESIGN.md §8): (bricks3 (nt, K, rb, T), rows (nt, K), valid (nt, K)).
+
+        With ``uniform_K`` (host-verified at build) this is a ZERO-COPY
+        reshape of the tile-major brick array; otherwise a vmapped
+        dynamic-slice gather bounded by K with a validity mask.
+        """
+        nt, K = self._n_tiles, self.max_bricks_per_tile
+        rb, T = self.row_block, self.tile_size
+        if self.uniform_K:
+            b3 = self.bricks[:nt * K].reshape(nt, K, rb, T)
+            rows = self.brick_row[:nt * K].reshape(nt, K)
+            valid = jnp.ones((nt, K), jnp.float32)
+            return b3, rows, valid
+        B = self.bricks.shape[0]
+
+        def one(start, stop):
+            st = jnp.minimum(start, B - K)
+            tb = jax.lax.dynamic_slice(self.bricks, (st, 0, 0), (K, rb, T))
+            rw = jax.lax.dynamic_slice(self.brick_row, (st,), (K,))
+            idx = st + jnp.arange(K, dtype=jnp.int32)
+            return tb, rw, ((idx >= start) & (idx < stop)).astype(jnp.float32)
+
+        return jax.vmap(one)(self.tile_ptr[:-1], self.tile_ptr[1:])
 
     def matvec(self, v):
         vt = v.reshape(self._n_tiles, self.tile_size)
@@ -350,7 +409,8 @@ class BlockSparseDesign(DesignMatrix):
         return BlockSparseDesign(
             bricks, self.brick_row, self.brick_tile, self.tile_ptr,
             self.tile_size, self.row_block, self.n_rows, self._n_tiles,
-            self.max_bricks_per_tile, leading=self.leading)
+            self.max_bricks_per_tile, leading=self.leading,
+            uniform_K=self.uniform_K)
 
     def to_dense(self):
         rb, T = self.row_block, self.tile_size
@@ -739,6 +799,11 @@ def build_block_sparse_sharded(coo: SparseCOO, *, D: int, M: int,
     K = max(int(np.diff(pt[3]).max(initial=0)) for pt in parts)
     K = max(K, 1)
     total_bricks = sum(pt[4] for pt in parts)
+    # uniform occupancy (host-static): every tile of every shard holds
+    # exactly K tile-major-contiguous bricks — the fused superstep's
+    # zero-copy batched layout applies (DESIGN.md §8)
+    uniform = all(pt[4] == n_tiles_local * K
+                  and np.all(np.diff(pt[3]) == K) for pt in parts)
 
     def pad_stack(i, fill=0):
         arrs = []
@@ -759,7 +824,8 @@ def build_block_sparse_sharded(coo: SparseCOO, *, D: int, M: int,
     design = BlockSparseDesign(
         jnp.asarray(bricks), jnp.asarray(brick_row),
         jnp.asarray(brick_tile), jnp.asarray(tile_ptr),
-        tile_size, row_block, n_loc, n_tiles_local, K, leading=2)
+        tile_size, row_block, n_loc, n_tiles_local, K, leading=2,
+        uniform_K=uniform)
     n_rb_total = (n_loc // row_block) * D
     occ = total_bricks / max(n_rb_total * n_tiles_local * M, 1)
     info = DesignInfo(shape=(n, p), col_of_feature=col_of_feature,
@@ -798,7 +864,11 @@ def dense_design(X, tile_size: int):
     pad = (-p) % tile_size
     if pad:
         Xj = jnp.pad(Xj, ((0, 0), (0, pad)))
-    return DenseDesign(Xj, tile_size), DesignInfo(shape=(n, p))
+    nt = Xj.shape[1] // tile_size
+    # tile-major transposed cache for the fused superstep (materialized
+    # eagerly, once per session — DenseDesign.tiles3)
+    data_t = jnp.swapaxes(Xj.reshape(n, nt, tile_size), 0, 1)
+    return DenseDesign(Xj, tile_size, data_t), DesignInfo(shape=(n, p))
 
 
 def as_design(X, tile_size: int, *, row_block: int = 256,

@@ -25,6 +25,8 @@ from repro.kernels.glm_stats import _STATS as _PALLAS_STATS
 from repro.kernels.glm_stats import glm_stats_pallas
 from repro.kernels.predict_tile import _LINKS as _PALLAS_LINKS
 from repro.kernels.predict_tile import predict_tile_pallas
+from repro.kernels.superstep_tile import margin_ls_pallas
+from repro.kernels.superstep_tile import stats_gram_solve_pallas
 from repro.kernels.tile_gram import tile_gram_pallas
 
 _LANES = 128
@@ -166,6 +168,139 @@ def predict_tile(slots, vals, table, b0, family, *, kind="link",
                               kind=kind, block_b=block_b,
                               interpret=_interpret())
     return out[:B, :L]
+
+
+# ---------------------------------------------------------------------------
+# Fused superstep ops (DESIGN.md §8).  ``design`` is duck-typed to avoid a
+# circular import with repro.data.design: DenseDesign exposes ``tiles3()``
+# (tile-major (nt, n, T) operand), BlockSparseDesign exposes
+# ``gather_all_tiles()`` (batched brick layout).
+# ---------------------------------------------------------------------------
+
+
+def fused_stats_sweep(design, y, xb, beta, family, *, mu, nu, lam1, lam2,
+                      weights=None, offset=None, penf=None, tile_live=None,
+                      precision="fp32", backend=None, block_n=512):
+    """Fused launch 1 of the superstep: link stats + every tile's Gram and
+    gradient + the per-tile Jacobi CD solve, in one pass over the rows.
+
+    Returns (loss_i, s, w, dbeta (p,), G_all (nt, T, T), g_all (nt, T)).
+    ``tile_live`` (nt,) bool shapes the launch to the active set: dead tiles
+    cost no Gram/solve work and get dbeta = 0; their G_all/g_all rows are
+    unspecified (zero on shaped paths, possibly populated on the unshaped
+    fallback) — callers must not read them.
+
+    Backend choice: the Pallas two-launch pipeline needs the dense
+    tile-major layout; BlockSparseDesign and non-TPU backends use the jnp
+    oracle composition in ref.py (same batched-matmul shaping, same
+    active-set compaction, XLA-fused on CPU).
+    """
+    backend = backend or default_backend()
+    fname = _family_name(family)
+    if fname not in _PALLAS_STATS and backend != "ref":
+        backend = "ref"
+    n = y.shape[0]
+    T = design.tile_size
+    nt = beta.shape[0] // T
+    if weights is None:
+        weights = jnp.ones((n,), jnp.float32)
+    penf_r = (jnp.ones((nt, T), jnp.float32) if penf is None
+              else penf.reshape(nt, T))
+    beta_r = beta.reshape(nt, T)
+
+    if backend == "ref" or not hasattr(design, "tiles3"):
+        if hasattr(design, "tiles3"):
+            loss_i, s, w, G_all, g_all = ref.fused_stats_gram_dense(
+                design.tiles3(), y, xb, weights, fname, offset=offset,
+                tile_live=tile_live, precision=precision)
+        elif hasattr(design, "gather_all_tiles"):
+            b3, rows, valid = design.gather_all_tiles()
+            loss_i, s, w, G_all, g_all = ref.fused_stats_gram_bricks(
+                b3, rows, valid, y, xb, weights, fname, offset=offset,
+                tile_live=tile_live, precision=precision)
+        else:
+            loss_i, s, w = ref.glm_stats(y, xb, weights, fname,
+                                         offset=offset)
+            G_all, g_all = design.all_tile_grams(w, s, backend="ref")
+        h_all = jnp.diagonal(G_all, axis1=1, axis2=2)
+        solve = jax.vmap(lambda Gt, gt, ht, bt, pt: ref.cd_tile_solve(
+            Gt, gt, ht, bt, jnp.zeros_like(gt), mu, nu, lam1, lam2, penf=pt))
+        dbeta_r = solve(G_all, g_all, h_all, beta_r, penf_r)
+    else:
+        Xt3 = design.tiles3()
+        if offset is not None:
+            xb = xb + offset
+        br = block_n // _LANES
+        packed, pad_mask, total = _pack_2d(y, xb, weights, block_rows=br)
+        y2, xb2, w_user = packed
+        mask2 = w_user * pad_mask
+        if total > Xt3.shape[1]:
+            Xt3 = jnp.pad(Xt3, ((0, 0), (0, total - Xt3.shape[1]), (0, 0)))
+        if tile_live is None:
+            sel = jnp.concatenate([jnp.arange(nt, dtype=jnp.int32),
+                                   jnp.full((1,), nt, jnp.int32)])
+        else:
+            live_i = tile_live.astype(jnp.int32)
+            order = jnp.argsort(1 - live_i, stable=True).astype(jnp.int32)
+            sel = jnp.concatenate([order, jnp.sum(live_i)[None]])
+        params = jnp.stack([jnp.asarray(mu, jnp.float32),
+                            jnp.asarray(nu, jnp.float32),
+                            jnp.asarray(lam1, jnp.float32),
+                            jnp.asarray(lam2, jnp.float32)])
+        loss2, s2, w2, G_all, g_all, dbeta_r = stats_gram_solve_pallas(
+            sel, Xt3, y2, xb2, mask2, beta_r, penf_r, params, family=fname,
+            block_n=block_n, precision=precision, interpret=_interpret())
+        flat = lambda a: a.reshape(-1)[:n]
+        loss_i, s, w = flat(loss2), flat(s2), flat(w2)
+    if tile_live is not None:
+        dbeta_r = jnp.where(tile_live[:, None], dbeta_r, 0.0)
+    return loss_i, s, w, dbeta_r.reshape(-1), G_all, g_all
+
+
+def fused_ls(design, y, xb, dbeta, alphas, family, *, weights=None,
+             offset=None, precision="fp32", backend=None, block_n=512):
+    """Fused launch 2 of the superstep: margin delta xdb = X·Δβ plus every
+    line-search candidate's loss in one pass.  Returns (xdb (n,),
+    losses (K,)).  Non-dense designs and non-TPU backends compose the
+    design's matvec with the alpha_search oracle instead (the margin vector
+    round-trips once, which XLA fusion absorbs on CPU)."""
+    backend = backend or default_backend()
+    fname = _family_name(family)
+    if fname not in _PALLAS_STATS and backend != "ref":
+        backend = "ref"
+    n = y.shape[0]
+    if weights is None:
+        weights = jnp.ones((n,), jnp.float32)
+    if backend == "ref" or not hasattr(design, "tiles3"):
+        if hasattr(design, "tiles3"):
+            xdb, losses = ref.fused_ls_dense(
+                design.tiles3(), y, xb, dbeta, weights, alphas, fname,
+                offset=offset, precision=precision)
+        else:
+            xdb = design.matvec(dbeta)
+            losses = ref.alpha_search(y, xb, xdb, weights, alphas, fname,
+                                      offset=offset)
+        return xdb, losses
+    Xt3 = design.tiles3()
+    T = design.tile_size
+    nt = dbeta.shape[0] // T
+    if offset is not None:
+        xb = xb + offset
+    br = block_n // _LANES
+    packed, pad_mask, total = _pack_2d(y, xb, weights, block_rows=br)
+    y2, xb2, w_user = packed
+    mask2 = w_user * pad_mask
+    if total > Xt3.shape[1]:
+        Xt3 = jnp.pad(Xt3, ((0, 0), (0, total - Xt3.shape[1]), (0, 0)))
+    K = alphas.shape[0]
+    pad_k = (-K) % _LANES
+    if pad_k:   # pad the candidate grid with duplicates of alphas[0]
+        alphas = jnp.concatenate(
+            [alphas, jnp.broadcast_to(alphas[0], (pad_k,))])
+    xdb2, losses = margin_ls_pallas(
+        Xt3, dbeta.reshape(nt, T), y2, xb2, mask2, alphas, family=fname,
+        block_n=block_n, precision=precision, interpret=_interpret())
+    return xdb2.reshape(-1)[:n], losses[:K]
 
 
 def alpha_search(y, xb, xdb, alphas, family, *, weights=None, offset=None,

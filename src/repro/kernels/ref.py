@@ -117,6 +117,130 @@ def alpha_search(y, xb, xdb, weights, alphas, family, offset=None):
 
 
 # ---------------------------------------------------------------------------
+# fused superstep (DESIGN.md §8): stats + all-tile Gram (+ solve upstream in
+# ops) in one pass, and margin-delta + candidate-loss in one pass.  These are
+# the oracles for kernels/superstep_tile.py and the CPU/unknown-family
+# fallback of the fused fast path.
+# ---------------------------------------------------------------------------
+
+def _acc_dtype(precision):
+    """Matmul INPUT dtype of the fused Gram/margin accumulations: bf16 under
+    ``precision="bf16"`` (accumulation itself stays f32 via
+    ``preferred_element_type``), f32 otherwise.  Masters and Armijo loss sums
+    are always f32 (DESIGN.md §8 precision policy)."""
+    return jnp.bfloat16 if precision == "bf16" else jnp.float32
+
+
+def gram_dense_tiles(Xt3, w, r, precision="fp32"):
+    """(G_all (nt, T, T), g_all (nt, T)) from the tile-major transposed dense
+    layout Xt3 (nt, n, T): one batched MXU matmul per quantity instead of an
+    einsum re-gather of the (n, p) array."""
+    dt = _acc_dtype(precision)
+    Xc = Xt3.astype(dt)
+    wX = (Xt3 * w[None, :, None]).astype(dt)
+    G = jnp.matmul(jnp.swapaxes(wX, 1, 2), Xc,
+                   preferred_element_type=jnp.float32)
+    g = jnp.matmul(jnp.swapaxes(Xc, 1, 2), r.astype(dt)[None, :, None],
+                   preferred_element_type=jnp.float32)[..., 0]
+    return G, g
+
+
+def gram_brick_tiles(b3, rows, valid, w, r, precision="fp32"):
+    """(G_all, g_all) from the batched brick layout of
+    ``BlockSparseDesign.gather_all_tiles``: b3 (nt, K, rb, T), rows (nt, K)
+    row-block ids, valid (nt, K) 0/1.  Each tile's K bricks are flattened to
+    one (K·rb, T) operand so the whole sweep is a single batched matmul."""
+    nt, K, rb, T = b3.shape
+    b3f = b3.reshape(nt, K * rb, T)
+    w2 = w.reshape(-1, rb)
+    r2 = r.reshape(-1, rb)
+    wk = (w2[rows] * valid[..., None]).reshape(nt, K * rb, 1)
+    rk = (r2[rows] * valid[..., None]).reshape(nt, K * rb, 1)
+    dt = _acc_dtype(precision)
+    G = jnp.matmul(jnp.swapaxes((b3f * wk).astype(dt), 1, 2), b3f.astype(dt),
+                   preferred_element_type=jnp.float32)
+    g = jnp.matmul(jnp.swapaxes(b3f.astype(dt), 1, 2), rk.astype(dt),
+                   preferred_element_type=jnp.float32)[..., 0]
+    return G, g
+
+
+def shaped_tile_grams(n_tiles, gram_of_ids, gram_full, tile_live):
+    """Active-set-shaped Gram launch: when few enough tiles are live, gather
+    the live tiles into a static-size compact batch (live-first order),
+    compute only those Grams, and scatter back zeros elsewhere.
+
+    ``gram_of_ids(ids (k,)) -> (G (k, T, T), g (k, T))``; ``gram_full()`` the
+    unshaped computation.  Branching is a runtime ``lax.cond`` over two
+    static compaction sizes (nt/2, nt/4), so one compiled superstep serves
+    every active-set size with no retraces; dead tiles get G = g = 0, which
+    the tile solve maps to Δβ = 0 (den ≥ ν > 0), and the caller masks Δβ by
+    tile liveness anyway.  Screening therefore buys wall-clock, not just
+    FLOPs (ISSUE 6 tentpole b).
+    """
+    if tile_live is None or n_tiles < 8:
+        return gram_full()
+    live_i = tile_live.astype(jnp.int32)
+    order = jnp.argsort(1 - live_i, stable=True).astype(jnp.int32)
+    n_live = jnp.sum(live_i)
+
+    def compact(n_sub):
+        def fn():
+            ids = order[:n_sub]
+            G_s, g_s = gram_of_ids(ids)
+            G = jnp.zeros((n_tiles,) + G_s.shape[1:], G_s.dtype)
+            g = jnp.zeros((n_tiles,) + g_s.shape[1:], g_s.dtype)
+            return G.at[ids].set(G_s), g.at[ids].set(g_s)
+        return fn
+
+    return jax.lax.cond(
+        n_live <= n_tiles // 4, compact(max(n_tiles // 4, 1)),
+        lambda: jax.lax.cond(n_live <= n_tiles // 2,
+                             compact(n_tiles // 2), gram_full))
+
+
+def fused_stats_gram_dense(Xt3, y, xb, weights, family, offset=None,
+                           tile_live=None, precision="fp32"):
+    """Oracle for the fused stats→Gram launch on the dense tile-major layout:
+    (loss_i, s, w, G_all, g_all) — the link stats and every tile's
+    Gram/gradient from ONE conceptual pass over the rows."""
+    loss_i, s, w = glm_stats(y, xb, weights, family, offset=offset)
+    nt = Xt3.shape[0]
+    G, g = shaped_tile_grams(
+        nt, lambda ids: gram_dense_tiles(Xt3[ids], w, s, precision),
+        lambda: gram_dense_tiles(Xt3, w, s, precision), tile_live)
+    return loss_i, s, w, G, g
+
+
+def fused_stats_gram_bricks(b3, rows, valid, y, xb, weights, family,
+                            offset=None, tile_live=None, precision="fp32"):
+    """Brick-layout twin of ``fused_stats_gram_dense``."""
+    loss_i, s, w = glm_stats(y, xb, weights, family, offset=offset)
+    nt = b3.shape[0]
+    G, g = shaped_tile_grams(
+        nt,
+        lambda ids: gram_brick_tiles(b3[ids], rows[ids], valid[ids], w, s,
+                                     precision),
+        lambda: gram_brick_tiles(b3, rows, valid, w, s, precision),
+        tile_live)
+    return loss_i, s, w, G, g
+
+
+def fused_ls_dense(Xt3, y, xb, dbeta, weights, alphas, family, offset=None,
+                   precision="fp32"):
+    """Oracle for the fused margin→line-search launch: apply the margin
+    delta (xdb = XΔβ, accumulated over tiles) and evaluate every candidate
+    step's loss in the same pass.  Returns (xdb (n,), losses (K,))."""
+    nt, n, T = Xt3.shape
+    dt = _acc_dtype(precision)
+    dr = dbeta.reshape(nt, T).astype(dt)
+    xdb = jnp.sum(jnp.matmul(Xt3.astype(dt), dr[:, :, None],
+                             preferred_element_type=jnp.float32)[..., 0],
+                  axis=0)
+    losses = alpha_search(y, xb, xdb, weights, alphas, family, offset=offset)
+    return xdb, losses
+
+
+# ---------------------------------------------------------------------------
 # predict_tile: fused sparse scoring (gather + dot + link) for serving.
 # ---------------------------------------------------------------------------
 

@@ -1,0 +1,282 @@
+"""Pallas TPU kernels: the fused d-GLMNET superstep fast path (DESIGN.md §8).
+
+One outer iteration of Algorithm 4 is, unfused, a chain of 4+ launches with
+full (n,)-vector HBM round-trips between them:
+
+    glm_stats -> per-tile Gram/grad -> cd_tile_solve -> matvec -> alpha_search
+
+The two kernels here collapse that chain to TWO launches:
+
+* ``stats_gram_solve_pallas`` — grid ``(nt, nb)`` (tile-major).  For each
+  live tile t it streams the row blocks of the tile-major operand
+  ``Xt3 (nt, n, T)`` once, recomputing the link stats (loss_i, s, w) on the
+  VPU per row block (idempotent (R,128) writes — stats are tile-independent,
+  so every tile writes the same values) and accumulating the T×T Gram block
+  and T-gradient in VMEM; at the tile's last row block it runs the
+  sequential soft-threshold solve (same chain as cd_tile_solve.py) on the
+  VMEM-resident Gram.  ``s`` and ``w`` never round-trip HBM between the
+  stats and the Gram pass.
+
+* ``margin_ls_pallas`` — grid ``(nb, nt)`` (row-major).  For each row block
+  it accumulates the margin delta xdb = X·Δβ over tiles in a VMEM-resident
+  block, and at the last tile evaluates every line-search candidate's loss
+  against that block — xdb never round-trips HBM between the margin apply
+  and the candidate sweep.
+
+Active-set shaping (tentpole b): the first kernel takes a scalar-prefetch
+remap ``sel = [live-first tile order..., n_live]``; grid steps with
+``t >= n_live`` are predicated off entirely, so tiles whose coordinates are
+all screened out cost no Gram/solve work — screening buys wall-clock, not
+just FLOP count.  Dead tiles' G/g/Δβ outputs are written as zeros (the
+caller masks Δβ by tile liveness regardless).
+
+Mixed precision (tentpole c): ``precision="bf16"`` casts the Gram/margin
+matmul INPUTS to bf16 with f32 accumulation (``preferred_element_type``);
+the link stats, the solve chain, and the Armijo loss sums stay f32.
+
+Shapes follow ops._pack_2d: vectors as (R, 128) with a mask folding weights
+and padding; rows are padded to a multiple of ``block_n`` examples.  As with
+the other kernels in this package, CPU/GPU runs use interpret mode.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.glm_stats import _STATS
+
+MU, NU, LAM1, LAM2 = 0, 1, 2, 3  # params (1, 4) layout, as cd_tile_solve
+
+
+def _tile_solve(G, g, h, beta, pf, mu, nu, lam1, lam2):
+    """Sequential soft-threshold chain over the T coordinates of one tile —
+    the cd_tile_solve.py kernel body, reused verbatim on the VMEM-resident
+    Gram accumulated by the enclosing fused kernel (Jacobi: dbeta0 = 0)."""
+    T = g.shape[0]
+    lam1v = lam1 * pf
+    den = mu * h + nu + lam2 * pf
+    den_safe = jnp.maximum(den, 1e-30)
+
+    def body(j, carry):
+        g_c, d = carry
+        g_j = jax.lax.dynamic_index_in_dim(g_c, j, keepdims=False)
+        d_j = jax.lax.dynamic_index_in_dim(d, j, keepdims=False)
+        b_j = jax.lax.dynamic_index_in_dim(beta, j, keepdims=False)
+        h_j = jax.lax.dynamic_index_in_dim(h, j, keepdims=False)
+        l1_j = jax.lax.dynamic_index_in_dim(lam1v, j, keepdims=False)
+        den_j = jax.lax.dynamic_index_in_dim(den, j, keepdims=False)
+        dens_j = jax.lax.dynamic_index_in_dim(den_safe, j, keepdims=False)
+
+        num = g_j + mu * h_j * (b_j + d_j) + nu * b_j
+        u = jnp.sign(num) * jnp.maximum(jnp.abs(num) - l1_j, 0.0) / dens_j
+        u = jnp.where(den_j > 0, u, b_j)
+        d_new = u - b_j
+        delta = d_new - d_j
+        G_col = jax.lax.dynamic_slice(G, (0, j), (T, 1))[:, 0]
+        g_c = g_c - mu * delta * G_col
+        d = jax.lax.dynamic_update_index_in_dim(d, d_new, j, axis=0)
+        return g_c, d
+
+    _, d_final = jax.lax.fori_loop(0, T, body, (g, jnp.zeros_like(g)))
+    return d_final
+
+
+def _stats_gram_solve_kernel(sel_ref, Xt_ref, y_ref, xb_ref, mask_ref,
+                             beta_ref, penf_ref, params_ref,
+                             loss_ref, s_ref, w_ref, G_ref, g_ref, dbeta_ref,
+                             *, family, precision):
+    t = pl.program_id(0)
+    i = pl.program_id(1)
+    nb = pl.num_programs(1)
+    n_live = sel_ref[sel_ref.shape[0] - 1]
+    live = t < n_live
+
+    # link stats for this row block — pure VPU, recomputed per (t, i) step so
+    # s/w stay VMEM-resident for the Gram accumulation below; the (R, 128)
+    # writes are idempotent across tiles (stats don't depend on t)
+    y = y_ref[...]
+    m = xb_ref[...]
+    mask = mask_ref[...]
+    loss, s, w = _STATS[family](y, m)
+    loss = loss * mask
+    s = s * mask
+    w = w * mask
+    loss_ref[...] = loss
+    s_ref[...] = s
+    w_ref[...] = w
+
+    @pl.when(i == 0)
+    def _init():
+        G_ref[...] = jnp.zeros_like(G_ref)
+        g_ref[...] = jnp.zeros_like(g_ref)
+
+    @pl.when(live)
+    def _accumulate():
+        X = Xt_ref[0]                      # (block_n, T)
+        wv = w.reshape(-1)                 # (block_n,)
+        sv = s.reshape(-1)
+        wX = X * wv[:, None]
+        if precision == "bf16":
+            Xc = X.astype(jnp.bfloat16)
+            wXc = wX.astype(jnp.bfloat16)
+            svc = sv.astype(jnp.bfloat16)
+        else:
+            Xc, wXc, svc = X, wX, sv
+        G_ref[0] += jax.lax.dot_general(
+            wXc, Xc, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        g_ref[0] += jnp.matmul(svc[None, :], Xc,
+                               preferred_element_type=jnp.float32)[0]
+
+    @pl.when(i == nb - 1)
+    def _solve():
+        T = g_ref.shape[-1]
+        G = G_ref[0]
+        g = g_ref[0]
+        ii = jax.lax.broadcasted_iota(jnp.int32, (T, T), 0)
+        jj = jax.lax.broadcasted_iota(jnp.int32, (T, T), 1)
+        h = jnp.sum(jnp.where(ii == jj, G, 0.0), axis=1)
+        d_final = _tile_solve(
+            G, g, h, beta_ref[0], penf_ref[0],
+            params_ref[0, MU], params_ref[0, NU],
+            params_ref[0, LAM1], params_ref[0, LAM2])
+        dbeta_ref[0, :] = jnp.where(live, d_final, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("family", "block_n", "precision",
+                                             "interpret"))
+def stats_gram_solve_pallas(sel, Xt3, y2, xb2, mask2, beta_r, penf_r, params,
+                            *, family, block_n=512, precision="fp32",
+                            interpret=True):
+    """Fused launch 1 of the superstep: stats + Gram + tile solve.
+
+    sel: (nt + 1,) i32 — live-first tile order then n_live (active-set remap).
+    Xt3: (nt, n_pad, T) tile-major operand, n_pad % block_n == 0.
+    y2/xb2/mask2: (R, 128) packed vectors, R * 128 == n_pad.
+    beta_r/penf_r: (nt, T); params: (4,) f32 [mu, nu, lam1, lam2].
+    Returns (loss2, s2, w2, G_all (nt,T,T), g_all (nt,T), dbeta_r (nt,T)).
+    """
+    nt, n_pad, T = Xt3.shape
+    nb = n_pad // block_n
+    br = block_n // 128
+    R, C = y2.shape
+    f32 = jnp.float32
+    # index maps receive the grid indices first, then the prefetch ref
+    vspec = pl.BlockSpec((br, C), lambda t, i, s: (i, 0))
+    tspec = pl.BlockSpec((1, T), lambda t, i, s: (s[t], 0))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nt, nb),
+        in_specs=[
+            pl.BlockSpec((1, block_n, T), lambda t, i, s: (s[t], i, 0)),
+            vspec, vspec, vspec,
+            tspec, tspec,
+            pl.BlockSpec((1, 4), lambda t, i, s: (0, 0)),
+        ],
+        out_specs=[
+            vspec, vspec, vspec,
+            pl.BlockSpec((1, T, T), lambda t, i, s: (s[t], 0, 0)),
+            tspec, tspec,
+        ],
+    )
+    out_shape = [
+        jax.ShapeDtypeStruct((R, C), f32),
+        jax.ShapeDtypeStruct((R, C), f32),
+        jax.ShapeDtypeStruct((R, C), f32),
+        jax.ShapeDtypeStruct((nt, T, T), f32),
+        jax.ShapeDtypeStruct((nt, T), f32),
+        jax.ShapeDtypeStruct((nt, T), f32),
+    ]
+    return pl.pallas_call(
+        functools.partial(_stats_gram_solve_kernel, family=family,
+                          precision=precision),
+        grid_spec=grid_spec,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(sel.astype(jnp.int32), Xt3.astype(f32), y2.astype(f32),
+      xb2.astype(f32), mask2.astype(f32), beta_r.astype(f32),
+      penf_r.astype(f32), params.astype(f32)[None, :])
+
+
+def _margin_ls_kernel(Xt_ref, db_ref, y_ref, xb_ref, mask_ref, alphas_ref,
+                      xdb_ref, out_ref, *, family, precision):
+    i = pl.program_id(0)
+    t = pl.program_id(1)
+    nt = pl.num_programs(1)
+
+    @pl.when(t == 0)
+    def _init_xdb():
+        xdb_ref[...] = jnp.zeros_like(xdb_ref)
+
+    X = Xt_ref[0]                           # (block_n, T)
+    d = db_ref[0]                           # (T,)
+    if precision == "bf16":
+        contrib = jnp.matmul(X.astype(jnp.bfloat16),
+                             d.astype(jnp.bfloat16)[:, None],
+                             preferred_element_type=jnp.float32)[:, 0]
+    else:
+        contrib = jnp.matmul(X, d[:, None])[:, 0]
+    xdb_ref[...] += contrib.reshape(xdb_ref.shape)
+
+    @pl.when(t == nt - 1)
+    def _linesearch():
+        @pl.when(i == 0)
+        def _init_out():
+            out_ref[...] = jnp.zeros_like(out_ref)
+
+        y = y_ref[...]
+        xb = xb_ref[...]
+        mask = mask_ref[...]
+        xdb = xdb_ref[...]
+        alphas = alphas_ref[...]            # (1, K)
+        K = alphas.shape[-1]
+
+        def per_alpha(k, acc):
+            a = jax.lax.dynamic_index_in_dim(alphas[0], k, keepdims=False)
+            loss, _, _ = _STATS[family](y, xb + a * xdb)
+            return jax.lax.dynamic_update_index_in_dim(
+                acc, jnp.sum(loss * mask), k, axis=0)
+
+        partial = jax.lax.fori_loop(0, K, per_alpha,
+                                    jnp.zeros((K,), jnp.float32))
+        out_ref[...] += partial[None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("family", "block_n", "precision",
+                                             "interpret"))
+def margin_ls_pallas(Xt3, dbeta_r, y2, xb2, mask2, alphas, *, family,
+                     block_n=512, precision="fp32", interpret=True):
+    """Fused launch 2 of the superstep: margin delta + candidate loss sweep.
+
+    Xt3: (nt, n_pad, T); dbeta_r: (nt, T); y2/xb2/mask2: (R, 128) with
+    R * 128 == n_pad; alphas: (K,) with K % 128 == 0 (pad with duplicates).
+    Returns (xdb2 (R, 128), losses (K,)).
+    """
+    nt, n_pad, T = Xt3.shape
+    nb = n_pad // block_n
+    br = block_n // 128
+    R, C = y2.shape
+    K = alphas.shape[0]
+    f32 = jnp.float32
+    vspec = pl.BlockSpec((br, C), lambda i, t: (i, 0))
+    out = pl.pallas_call(
+        functools.partial(_margin_ls_kernel, family=family,
+                          precision=precision),
+        grid=(nb, nt),
+        in_specs=[
+            pl.BlockSpec((1, block_n, T), lambda i, t: (t, i, 0)),
+            pl.BlockSpec((1, T), lambda i, t: (t, 0)),
+            vspec, vspec, vspec,
+            pl.BlockSpec((1, K), lambda i, t: (0, 0)),
+        ],
+        out_specs=[vspec, pl.BlockSpec((1, K), lambda i, t: (0, 0))],
+        out_shape=[jax.ShapeDtypeStruct((R, C), f32),
+                   jax.ShapeDtypeStruct((1, K), f32)],
+        interpret=interpret,
+    )(Xt3.astype(f32), dbeta_r.astype(f32), y2.astype(f32), xb2.astype(f32),
+      mask2.astype(f32), alphas.astype(f32)[None, :])
+    return out[0], out[1][0]

@@ -1,0 +1,209 @@
+"""Fused superstep fast path (DESIGN.md §8): fused-vs-unfused β parity
+across families/designs/observation features, Pallas-kernel-vs-oracle
+interpret parity, active-set-shaped launch bookkeeping, mixed-precision
+accumulation, and the cross-process compilation cache."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+import repro.core  # noqa: F401  (design↔ops import cycle: core first)
+import jax.numpy as jnp
+
+from repro.core.dglmnet import DGLMNETConfig
+from repro.core.solver import GLMSolver
+from repro.data import synthetic
+from repro.data import design as design_lib
+from repro.kernels import ops
+
+FAMILIES = ["logistic", "squared", "probit", "poisson"]
+
+
+def _cfg(family, fused, tile_size=16, **kw):
+    return DGLMNETConfig(family=family, tile_size=tile_size,
+                         coupling="jacobi", max_outer=60, tol=1e-10,
+                         fuse_superstep=fused, **kw)
+
+
+def _obs_features(n, p, seed):
+    """weights + offset + penalty factors with an unpenalized coordinate."""
+    rng = np.random.default_rng(seed)
+    w = rng.uniform(0.5, 1.5, n).astype(np.float32)
+    off = (0.1 * rng.normal(size=n)).astype(np.float32)
+    pf = rng.uniform(0.5, 2.0, p).astype(np.float32)
+    pf[0] = 0.0
+    return w, off, pf
+
+
+@pytest.mark.parametrize("family", FAMILIES)
+def test_fused_matches_unfused_dense(family):
+    """β parity ≤ 1e-5 on a dense design under sample weights + offset +
+    penalty factors — the fused two-launch superstep must be numerically
+    interchangeable with the historical 5-launch pipeline."""
+    ds = synthetic.make_dense(n=300, p=48, k_true=8, family=family, seed=5)
+    X, y = ds.train.X, ds.train.y
+    w, off, pf = _obs_features(*X.shape, seed=6)
+    betas = {}
+    for fused in (False, True):
+        s = GLMSolver(X, y, config=_cfg(family, fused), sample_weight=w,
+                      offset=off, penalty_factor=pf)
+        betas[fused] = s.fit(lam1=0.1 * s.lambda_max(), lam2=0.05).beta
+    err = float(np.abs(betas[True] - betas[False]).max())
+    assert err <= 1e-5, err
+    assert np.abs(betas[True]).max() > 0  # non-degenerate fit
+
+
+@pytest.mark.parametrize("family", ["logistic", "squared"])
+def test_fused_matches_unfused_block_sparse(family):
+    ds = synthetic.make_sparse(n=400, p=256, avg_nnz=12, k_true=20,
+                               family=family, seed=7)
+    X, y = ds.train.X, ds.train.y
+    betas = {}
+    for fused in (False, True):
+        s = GLMSolver(X, y, config=_cfg(family, fused, tile_size=32))
+        betas[fused] = s.fit(lam1=0.1 * s.lambda_max(), lam2=0.0).beta
+    err = float(np.abs(betas[True] - betas[False]).max())
+    assert err <= 1e-5, err
+
+
+def test_fused_path_parity_with_screening():
+    """fit_path exercises the strong-rule partial active mask: the fused
+    sweep must zero screened coordinates exactly like the unfused one."""
+    ds = synthetic.make_dense(n=400, p=96, k_true=10, seed=8)
+    paths = {}
+    for fused in (False, True):
+        s = GLMSolver(ds.train.X, ds.train.y, config=_cfg("logistic", fused))
+        paths[fused] = s.fit_path(n_lambdas=8, lam_ratio=1e-2)
+    err = float(np.abs(paths[True].betas - paths[False].betas).max())
+    assert err <= 1e-5, err
+    assert (paths[True].nnz == paths[False].nnz).all()
+
+
+@pytest.mark.parametrize("family", ["logistic", "squared"])
+def test_fused_pallas_kernels_match_oracle(family):
+    """Interpret-mode Pallas fused kernels vs the jnp oracle path, moderate
+    margins (the ref/pallas stats formulas only diverge in the |m|≳12
+    tails, which real line-searched iterates never visit)."""
+    rng = np.random.default_rng(9)
+    n, p, T = 256, 256, 128
+    X = (0.2 * rng.normal(size=(n, p))).astype(np.float32)
+    design, _ = design_lib.dense_design(jnp.asarray(X), T)
+    y = jnp.asarray(rng.choice([-1.0, 1.0], n).astype(np.float32)
+                    if family == "logistic"
+                    else rng.normal(size=n).astype(np.float32))
+    beta = jnp.asarray(
+        (0.5 * rng.normal(size=p) * (rng.random(p) < 0.3)).astype(
+            np.float32))
+    xb = design.matvec(beta)
+    live = jnp.asarray(np.array([True, False]))  # tile 1 screened out
+    kw = dict(mu=1.0, nu=1e-6, lam1=0.1, lam2=0.05, tile_live=live)
+    out_r = ops.fused_stats_sweep(design, y, xb, beta, family,
+                                  backend="ref", **kw)
+    out_p = ops.fused_stats_sweep(design, y, xb, beta, family,
+                                  backend="pallas", **kw)
+    for a, b, name in zip(out_r[:4], out_p[:4],
+                          ("loss", "s", "w", "dbeta")):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4,
+                                   err_msg=name)
+    # dead tile contributes exactly nothing in both backends
+    assert not np.asarray(out_p[3][T:]).any()
+    alphas = jnp.asarray(np.logspace(-2, 0, 14), jnp.float32)
+    dbeta = out_r[3]
+    xdb_r, ls_r = ops.fused_ls(design, y, xb, dbeta, alphas, family,
+                               backend="ref")
+    xdb_p, ls_p = ops.fused_ls(design, y, xb, dbeta, alphas, family,
+                               backend="pallas")
+    np.testing.assert_allclose(np.asarray(xdb_r), np.asarray(xdb_p),
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(ls_r), np.asarray(ls_p),
+                               rtol=1e-5, atol=1e-3)
+
+
+def test_screened_tiles_cost_zero_sweep_launches():
+    """Host-side launch bookkeeping: along a screened λ-path, fully
+    screened-out tiles are skipped by the active-set-shaped launch and the
+    counters must balance exactly (live + skipped = supersteps × tiles)."""
+    ds = synthetic.make_dense(n=400, p=128, k_true=6, seed=10)
+    s = GLMSolver(ds.train.X, ds.train.y, config=_cfg("logistic", True,
+                                                      tile_size=16))
+    s.fit_path(n_lambdas=8, lam_ratio=1e-2)
+    st = s.launch_stats
+    n_tiles = 128 // 16
+    assert st["supersteps"] > 0
+    assert st["sweep_tiles_skipped"] > 0, st
+    assert st["sweep_tile_launches"] + st["sweep_tiles_skipped"] \
+        == st["supersteps"] * n_tiles, st
+    # the unfused jacobi superstep has no shaped launch: nothing skipped
+    s2 = GLMSolver(ds.train.X, ds.train.y, config=_cfg("logistic", False,
+                                                       tile_size=16))
+    s2.fit_path(n_lambdas=8, lam_ratio=1e-2)
+    assert s2.launch_stats["sweep_tiles_skipped"] == 0
+
+
+def test_runtime_active_changes_do_not_recompile():
+    """The active mask is a runtime argument of the ONE compiled fused
+    superstep — a whole screened path must stay at ≤1 superstep compile."""
+    ds = synthetic.make_dense(n=300, p=64, k_true=6, seed=11)
+    s = GLMSolver(ds.train.X, ds.train.y, config=_cfg("logistic", True))
+    s.fit_path(n_lambdas=6, lam_ratio=1e-2)
+    first = s.compile_count
+    s.fit(lam1=0.05 * s.lambda_max())
+    assert s.compile_count == first  # warm re-fit: zero new compiles
+
+
+def test_bf16_tracks_fp32_alpha_sequence():
+    """precision='bf16' (bf16 Gram/margin inputs, fp32 accumulation and
+    Armijo sums): the accepted-α sequence must track fp32 — the line
+    search decides from fp32 sums, so discrete α choices only flip on
+    near-ties — and β must land within bf16-resolution of the fp32 fit."""
+    ds = synthetic.make_dense(n=300, p=48, k_true=8, seed=12)
+    fits = {}
+    for prec in ("fp32", "bf16"):
+        s = GLMSolver(ds.train.X, ds.train.y,
+                      config=_cfg("logistic", True, precision=prec))
+        fits[prec] = s.fit(lam1=0.1 * s.lambda_max(), lam2=0.05)
+    a32 = np.asarray(fits["fp32"].history["alpha"])
+    a16 = np.asarray(fits["bf16"].history["alpha"])
+    k = min(len(a32), len(a16))
+    assert k > 5
+    match = float(np.mean(np.isclose(a32[:k], a16[:k], rtol=1e-6)))
+    assert match >= 0.8, (match, a32[:k], a16[:k])
+    err = float(np.abs(fits["bf16"].beta - fits["fp32"].beta).max())
+    scale = float(np.abs(fits["fp32"].beta).max())
+    assert err <= 0.05 * max(scale, 1.0), (err, scale)
+
+
+def test_compilation_cache_populates_and_hits(tmp_path):
+    """REPRO_COMPILATION_CACHE: a child process populates the persistent
+    cache; an identical second child must add no new entries (pure cache
+    hits on the deserialized executables)."""
+    script = textwrap.dedent("""
+        import numpy as np
+        from repro.core.dglmnet import DGLMNETConfig
+        from repro.core.solver import GLMSolver
+        rng = np.random.default_rng(0)
+        X = rng.normal(size=(64, 32)).astype(np.float32)
+        y = rng.choice([-1.0, 1.0], 64).astype(np.float32)
+        s = GLMSolver(X, y, config=DGLMNETConfig(tile_size=16, max_outer=3))
+        s.fit(lam1=0.3 * s.lambda_max())
+        print("FIT_OK")
+    """)
+    env = dict(os.environ, REPRO_COMPILATION_CACHE=str(tmp_path))
+    env["PYTHONPATH"] = os.pathsep.join(
+        [p for p in (env.get("PYTHONPATH"),) if p]
+        + [str(os.path.join(os.path.dirname(__file__), "..", "src"))])
+    r1 = subprocess.run([sys.executable, "-c", script], env=env,
+                        capture_output=True, text=True, timeout=300)
+    assert r1.returncode == 0 and "FIT_OK" in r1.stdout, r1.stderr[-2000:]
+    entries = {p.name for p in tmp_path.rglob("*") if p.is_file()}
+    if not entries:
+        pytest.skip("persistent compilation cache not supported on this "
+                    "jax backend/version")
+    r2 = subprocess.run([sys.executable, "-c", script], env=env,
+                        capture_output=True, text=True, timeout=300)
+    assert r2.returncode == 0 and "FIT_OK" in r2.stdout, r2.stderr[-2000:]
+    entries2 = {p.name for p in tmp_path.rglob("*") if p.is_file()}
+    assert entries2 == entries, entries2 - entries
