@@ -33,6 +33,10 @@ BENCH_COLUMNS = {
                         "transfer_s", "fit_s", "fit_serial_s",
                         "overlap_efficiency", "iters", "nnz",
                         "max_abs_beta_diff_vs_dense"],
+    "straggler_bench": ["arm", "problem", "num_processes", "slow_factor",
+                        "tile_cost_s", "supersteps", "wall_s",
+                        "wall_per_superstep_s", "recovery_vs_alb_off",
+                        "f_final", "nnz", "final_budgets", "node_speeds"],
     "serving_bench": ["case", "mode", "dtype", "n_requests", "rows_per_s",
                       "p50_ms", "p99_ms", "mean_batch",
                       "speedup_vs_batch1", "artifact_bytes",

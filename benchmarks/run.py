@@ -13,6 +13,7 @@ Figures:
   path_bench        — warm-started λ-path vs K cold fits (GLMSolver session)
   cv_bench          — mask-based K-fold fit_cv vs per-fold cold sessions
   streaming_bench   — out-of-core chunked fits (StreamingDesign) + overlap
+  straggler_bench   — 2-process injected-straggler: telemetry-ALB vs BSP
 """
 from __future__ import annotations
 
@@ -33,7 +34,8 @@ def main() -> None:
 
     from benchmarks import (cv_bench, fig1_adaptive_mu, fig2_4_l1,
                             fig5_6_l2, fig7_8_speedup, kernels_bench,
-                            path_bench, streaming_bench, table2_load)
+                            path_bench, straggler_bench, streaming_bench,
+                            table2_load)
     figures = {
         "table2_load": table2_load.run,
         "fig1_adaptive_mu": fig1_adaptive_mu.run,
@@ -44,6 +46,7 @@ def main() -> None:
         "path_bench": path_bench.run,
         "cv_bench": cv_bench.run,
         "streaming_bench": streaming_bench.run,
+        "straggler_bench": straggler_bench.run,
     }
     wanted = (args.only.split(",") if args.only else list(figures))
     RESULTS.mkdir(parents=True, exist_ok=True)

@@ -1,0 +1,181 @@
+"""Straggler-resilience benchmark: telemetry-driven ALB vs BSP on a real
+multi-process mesh with one injected 4× slow shard (paper §7, DESIGN.md §9).
+
+Arms (each a 2-process job spawned through ``repro.dist.launcher``; process
+1 carries a deterministic 4× per-tile slowdown from ``repro.dist.faults``,
+charged as REAL ``time.sleep`` seconds, so the wall-clock gap is physical):
+
+  * ``alb_off``       — BSP budgets: every superstep waits for the slow
+    shard to grind through its FULL tile budget;
+  * ``alb_telemetry`` — ``repro.dist.telemetry`` measures per-node speeds
+    at runtime, and after its 2-superstep warm-up ``alb_budgets``
+    (completion pivot, κ=0.5) parks the straggler at ~¼ budget, so the
+    superstep ends when the FAST node's full cycle does.
+
+Both arms run the same superstep count (tol=0), so ``recovery`` =
+``wall_off / wall_on`` isolates the scheduling win; the per-arm final
+objective is reported alongside (the straggler's parked cursor trades a
+little per-superstep progress for the 4× shorter superstep — the paper's
+ALB bargain).
+
+``--smoke`` runs a reduced problem and asserts recovery ≥ 1.4 (the
+committed full-size row carries the ≥1.5× claim; sleeps dominate compute
+at both sizes, so the ratio is stable across machines).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import pathlib
+import sys
+import tempfile
+import time
+
+_REPO = pathlib.Path(__file__).resolve().parents[1]
+
+SLOW_FACTOR = 4.0
+FAULT_SPEC = f"1:{SLOW_FACTOR}"
+
+
+def _worker(args) -> int:
+    from repro.core.dglmnet import DGLMNETConfig
+    from repro.core.solver import GLMSolver
+    from repro.dist import bootstrap, faults
+    from repro.dist.telemetry import SuperstepTelemetry
+
+    import numpy as np
+
+    ctx = bootstrap.initialize()
+    mesh = bootstrap.make_dist_mesh()
+
+    rng = np.random.default_rng(11)
+    n, p = args.rows, args.cols
+    X = rng.normal(size=(n, p)).astype(np.float32)
+    beta_true = np.zeros((p,), np.float32)
+    beta_true[: p // 8] = rng.normal(size=p // 8)
+    y = (X @ beta_true + 0.1 * rng.normal(size=n)).astype(np.float32)
+
+    plan = faults.FaultPlan.parse(FAULT_SPEC, ctx.num_processes,
+                                  tile_cost_s=args.tile_cost_s)
+    tel = SuperstepTelemetry() if args.arm == "alb_telemetry" else None
+
+    cfg = DGLMNETConfig(tile_size=args.tile, max_outer=args.steps, tol=0.0,
+                        alb_kappa=0.5)
+    solver = GLMSolver(X, y, config=cfg, mesh=mesh,
+                       telemetry=tel, fault_plan=plan)
+    # charge compile outside the timed window (both arms pay it equally)
+    solver.fit(lam1=args.lam1, lam2=1e-4, max_outer=1)
+
+    t0 = time.perf_counter()
+    res = solver.fit(lam1=args.lam1, lam2=1e-4)
+    wall_s = time.perf_counter() - t0
+
+    if ctx.is_coordinator:
+        row = {
+            "arm": args.arm, "num_processes": ctx.num_processes,
+            "slow_factor": SLOW_FACTOR, "tile_cost_s": args.tile_cost_s,
+            "supersteps": res.n_iter, "wall_s": round(wall_s, 3),
+            "wall_per_superstep_s": round(wall_s / max(res.n_iter, 1), 4),
+            "f_final": res.history["f"][-1],
+            "nnz": int((np.abs(res.beta) > 1e-8).sum()),
+            "final_budgets": None if solver._budgets_host is None
+            else solver._budgets_host.tolist(),
+            "node_speeds": None if tel is None or tel.speeds() is None
+            else [round(float(v), 2) for v in tel.speeds()],
+        }
+        pathlib.Path(args.out).write_text(json.dumps(row))
+    faults.guarded_barrier("straggler-bench-exit")
+    return 0
+
+
+def _run_arm(arm: str, *, rows: int, cols: int, tile: int, steps: int,
+             tile_cost_s: float, lam1: float) -> dict:
+    from repro.dist import launcher
+
+    with tempfile.TemporaryDirectory() as td:
+        out = pathlib.Path(td) / f"{arm}.json"
+        res = launcher.run_local(
+            2, pathlib.Path(__file__).resolve(),
+            args=["--arm", arm, "--out", out, "--rows", rows, "--cols", cols,
+                  "--tile", tile, "--steps", steps,
+                  "--tile-cost-s", tile_cost_s, "--lam1", lam1],
+            timeout_s=900)
+        if not res.ok:
+            raise RuntimeError(f"straggler arm {arm} failed:\n"
+                               f"{res.summary()}")
+        return json.loads(out.read_text())
+
+
+def _bench(*, rows, cols, tile, steps, tile_cost_s, lam1=0.05):
+    off = _run_arm("alb_off", rows=rows, cols=cols, tile=tile, steps=steps,
+                   tile_cost_s=tile_cost_s, lam1=lam1)
+    on = _run_arm("alb_telemetry", rows=rows, cols=cols, tile=tile,
+                  steps=steps, tile_cost_s=tile_cost_s, lam1=lam1)
+    recovery = off["wall_s"] / on["wall_s"]
+    for r in (off, on):
+        r["recovery_vs_alb_off"] = round(recovery, 2) if r is on else 1.0
+        r["problem"] = f"dense_{rows}x{cols}"
+    return off, on, recovery
+
+
+def run():
+    """Full-size committed row set (benchmarks/run.py figure entry)."""
+    off, on, recovery = _bench(rows=768, cols=256, tile=32, steps=20,
+                               tile_cost_s=0.05)
+    return {"figure": "straggler_bench",
+            "injected": {"spec": FAULT_SPEC, "tile_cost_s": 0.05},
+            "recovery": round(recovery, 2),
+            "rows": [off, on]}
+
+
+def smoke() -> int:
+    off, on, recovery = _bench(rows=256, cols=256, tile=32, steps=12,
+                               tile_cost_s=0.02)
+    print(off)
+    print(on)
+    # telemetry ALB must claw back most of the straggler's 4× (sleeps
+    # dominate compute at this size, so the bound is machine-stable);
+    # the committed full-size run shows the ≥1.5× recovery claim
+    assert recovery >= 1.4, f"recovery {recovery:.2f} < 1.4"
+    # the straggler (process 1) must end DOWN-budgeted relative to the
+    # fast node once telemetry converges
+    b = on["final_budgets"]
+    assert b is not None and b[1] < b[0], b
+    # both arms ran the identical superstep schedule
+    assert off["supersteps"] == on["supersteps"]
+    print(f"STRAGGLER_SMOKE_OK recovery={recovery:.2f}")
+    return 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--arm", default="",
+                    choices=["", "alb_off", "alb_telemetry"])
+    ap.add_argument("--out", default="")
+    ap.add_argument("--rows", type=int, default=768)
+    ap.add_argument("--cols", type=int, default=256)
+    ap.add_argument("--tile", type=int, default=32)
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--tile-cost-s", type=float, default=0.05,
+                    dest="tile_cost_s")
+    ap.add_argument("--lam1", type=float, default=0.05)
+    args = ap.parse_args()
+
+    if os.environ.get("REPRO_DIST_PROCID") is not None:
+        return _worker(args)
+    if args.smoke:
+        return smoke()
+    res = run()
+    for r in res["rows"]:
+        print(r)
+    out = _REPO / "results" / "benchmarks" / "straggler_bench.json"
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(res, indent=2))
+    print(f"recovery={res['recovery']}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

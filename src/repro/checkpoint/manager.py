@@ -42,6 +42,8 @@ from typing import Any, Optional
 import jax
 import numpy as np
 
+from repro.dist import bootstrap as dist_boot
+
 # Managers with potentially in-flight async writers.  One process-wide
 # atexit hook joins them all: the writer threads are daemonic (a hung
 # filesystem must not wedge interpreter shutdown forever), so without the
@@ -96,17 +98,34 @@ class CheckpointManager:
     # ------------------------------------------------------------- save
 
     def save(self, step: int, tree, *, metadata: Optional[dict] = None):
-        """Serialize ``tree`` (pytree of arrays / scalars) at ``step``."""
+        """Serialize ``tree`` (pytree of arrays / scalars) at ``step``.
+
+        Multi-process jobs (DESIGN.md §9): every process participates —
+        the host materialization is a collective all-gather for arrays
+        that span processes — but only the COORDINATOR touches the
+        filesystem, and a process barrier orders the commit before any
+        peer can race ahead to restore (or exit) against it.
+        """
         self.wait()
         # materialize on host BEFORE handing to the writer thread so the
         # caller may donate/overwrite device buffers immediately
-        flat = {k: np.asarray(v) for k, v in _flatten(tree).items()}
+        # (gather_to_host == np.asarray for anything fully addressable)
+        flat = {k: dist_boot.gather_to_host(v)
+                for k, v in _flatten(tree).items()}
         meta = {
             "step": int(step),
             "time": time.time(),
             "keys": sorted(flat),
             "metadata": metadata or {},
         }
+        ctx = dist_boot.context()
+        if ctx.multiprocess:
+            # coordinator-only write, synchronous: async would move the
+            # barrier onto the writer thread and un-order the commit
+            if ctx.is_coordinator:
+                self._write(self.dir, self.keep_last, step, flat, meta)
+            dist_boot.barrier("ckpt-save")
+            return
         if self.async_save:
             # the writer is a STATIC function over plain values: it holds no
             # reference to the manager, so a manager dropped mid-save is
@@ -197,7 +216,16 @@ class CheckpointManager:
             arr = flat[k]
             if hasattr(ref, "sharding") and ref.sharding is not None \
                     and hasattr(ref.sharding, "mesh"):
-                out[k] = jax.device_put(arr, ref.sharding)
+                sh = ref.sharding
+                if getattr(sh, "mesh", None) is not None and \
+                        dist_boot.is_multiprocess_mesh(sh.mesh):
+                    # device_put cannot target non-addressable devices;
+                    # each process contributes the shards it owns
+                    a = np.asarray(arr)
+                    out[k] = jax.make_array_from_callback(
+                        a.shape, sh, lambda idx, a=a: a[idx])
+                else:
+                    out[k] = jax.device_put(arr, sh)
             else:
                 out[k] = jax.device_put(arr) if hasattr(ref, "shape") else arr
         # reassemble in the same order tree_flatten produced

@@ -59,6 +59,7 @@ import collections
 import dataclasses
 import functools
 import os
+import time
 from typing import NamedTuple, Optional
 
 import jax
@@ -71,6 +72,7 @@ from repro.core.dglmnet import DGLMNETConfig, FitResult, FitState
 from repro.data import design as design_lib
 from repro.data.design import (BlockSparseDesign, DesignMatrix, SparseCOO,
                                StreamingDesign)
+from repro.dist import bootstrap as dist_boot
 from repro.kernels import ops
 from repro.sharding import compat
 
@@ -308,7 +310,8 @@ class GLMSolver:
                  design_info=None,
                  sample_weight=None, offset=None,
                  standardize: bool = False, fit_intercept: bool = False,
-                 penalty_factor=None):
+                 penalty_factor=None,
+                 telemetry=None, fault_plan=None):
         _maybe_init_compilation_cache()
         config = DGLMNETConfig() if config is None else config
         if family is not None:
@@ -325,6 +328,36 @@ class GLMSolver:
         self.axis_data = axis_data if mesh is not None else None
         self.axis_model = axis_model if mesh is not None else None
         self._rng = np.random.default_rng(seed)
+        # multi-host bookkeeping (DESIGN.md §9): which processes own which
+        # model columns, and which columns THIS process holds addressable
+        # shards of.  Single-process meshes get the degenerate map.
+        self._multiproc = mesh is not None and \
+            dist_boot.is_multiprocess_mesh(mesh)
+        if mesh is not None:
+            ctx = dist_boot.context()
+            self.dist_info = {
+                "multiprocess": self._multiproc,
+                "process_id": ctx.process_id,
+                "num_processes": ctx.num_processes,
+                "column_owner": dist_boot.column_process_map(
+                    mesh, axis_model).tolist(),
+                "local_columns": dist_boot.local_columns(mesh, axis_model),
+            }
+        else:
+            self.dist_info = None
+        self._telemetry = telemetry
+        self._faults = fault_plan
+        self._superstep_no = 0
+        self._budgets_host: Optional[np.ndarray] = None
+        if telemetry is not None and mesh is None:
+            raise ValueError(
+                "telemetry-driven ALB needs a mesh: node speeds map onto "
+                "model columns (repro.dist.telemetry)")
+        if fault_plan is not None and self.dist_info is not None and \
+                fault_plan.num_processes != self.dist_info["num_processes"]:
+            raise ValueError(
+                f"fault plan covers {fault_plan.num_processes} processes "
+                f"but the job has {self.dist_info['num_processes']}")
         self.beta_: Optional[np.ndarray] = None
         self.intercept_: float = 0.0
         self.fit_intercept = bool(fit_intercept)
@@ -435,9 +468,8 @@ class GLMSolver:
                 n_tot, p_tot = D * n_loc, M * p_loc
                 self._x_specs = design_g.partition_specs(axis_data,
                                                          axis_model)
-                self._Xs = jax.tree.map(
-                    lambda a, s: jax.device_put(a, NamedSharding(mesh, s)),
-                    design_g, self._x_specs)
+                self._Xs = dist_boot.put_global(design_g, mesh,
+                                                self._x_specs)
                 # brick column packing + row padding are functions of
                 # (D, M, T, rb): checkpoints record this layout so a resume
                 # onto a different mesh fails loudly instead of continuing
@@ -457,8 +489,7 @@ class GLMSolver:
                 n_tot, p_tot = Xp.shape
                 p_loc = p_tot // M
                 self._x_specs = P(axis_data, axis_model)
-                self._Xs = jax.device_put(Xp, NamedSharding(mesh,
-                                                            self._x_specs))
+                self._Xs = dist_boot.put_global(Xp, mesh, self._x_specs)
                 self._design_layout = None  # dense layout is mesh-invariant
                 layout_key = ("dense",)
             self._info = info
@@ -466,11 +497,19 @@ class GLMSolver:
             self._n_tiles_local = p_loc // T
 
             yp = np.pad(y, (0, n_tot - n), constant_values=1.0)
-            self._ys = jax.device_put(yp, NamedSharding(mesh, self._row_spec))
+            self._ys = dist_boot.put_global(yp, mesh, self._row_spec)
 
-            # ALB budgets: fraction-κ completion rule (paper Section 7)
+            # ALB budgets: fraction-κ completion rule (paper Section 7).
+            # Three sources, in precedence order: runtime telemetry
+            # (measured node speeds, DESIGN.md §9), the harness-supplied
+            # speed simulation (config.alb + speeds=), or the constant
+            # full-budget BSP vector.
             from repro.core import alb as alb_lib
-            if config.alb:
+            if telemetry is not None:
+                self._base_speeds = None
+                self._max_budget = int(alb_lib.max_budget(
+                    self._n_tiles_local))
+            elif config.alb:
                 self._base_speeds = (np.asarray(speeds, np.float32)
                                      if speeds is not None
                                      else np.ones((M,), np.float32))
@@ -479,9 +518,9 @@ class GLMSolver:
             else:
                 self._base_speeds = None
                 self._max_budget = self._n_tiles_local
-                self._budget_const = jax.device_put(
+                self._budget_const = dist_boot.put_global(
                     np.full((M,), self._n_tiles_local, np.int32),
-                    NamedSharding(mesh, self._feat_spec))
+                    mesh, self._feat_spec)
 
             self._state_specs = FitState(beta=self._feat_spec,
                                          xb=self._row_spec, mu=P(),
@@ -538,8 +577,8 @@ class GLMSolver:
     def _place_feat(self, arr):
         if self.mesh is None:
             return jnp.asarray(arr)
-        return jax.device_put(np.asarray(arr),
-                              NamedSharding(self.mesh, self._feat_spec))
+        return dist_boot.put_global(np.asarray(arr), self.mesh,
+                                    self._feat_spec)
 
     def _place_row(self, arr):
         if self._streaming:
@@ -548,8 +587,15 @@ class GLMSolver:
             return np.asarray(arr, np.float32)
         if self.mesh is None:
             return jnp.asarray(arr)
-        return jax.device_put(np.asarray(arr),
-                              NamedSharding(self.mesh, self._row_spec))
+        return dist_boot.put_global(np.asarray(arr), self.mesh,
+                                    self._row_spec)
+
+    def _host(self, arr) -> np.ndarray:
+        """Host numpy copy of a device array — the collective all-gather
+        readback when the mesh spans processes (every process calls it)."""
+        if self._multiproc:
+            return dist_boot.gather_to_host(arr)
+        return np.asarray(arr)
 
     def _build_superstep(self):
         key = self._key
@@ -628,7 +674,7 @@ class GLMSolver:
                               self._row_spec, self._row_spec),
                     out_specs=self._feat_spec, check_vma=False))
         weights = self._wobs if weights is None else weights
-        return np.asarray(self._grad_fn(self._Xs, self._ys, weights,
+        return self._host(self._grad_fn(self._Xs, self._ys, weights,
                                         self._offsets, xb_dev))
 
     def _grad_state(self, state: FitState, weights=None):
@@ -674,7 +720,7 @@ class GLMSolver:
             in_specs=(self._x_specs, self._row_spec),
             out_specs=(self._feat_spec, self._feat_spec), check_vma=False))
         s1, s2 = fn(self._Xs, self._wobs)
-        return np.asarray(s1), np.asarray(s2)
+        return self._host(s1), self._host(s2)
 
     def _apply_standardization(self):
         """Rescale (and for dense layouts with an intercept: center) the
@@ -708,17 +754,21 @@ class GLMSolver:
                 jnp.asarray(center) if dense and self.fit_intercept
                 else None)
         elif dense:
-            Xs = (self._Xs - jnp.asarray(center)[None, :]) \
-                * jnp.asarray(scale)[None, :]
-            self._Xs = jax.device_put(Xs, NamedSharding(self.mesh,
-                                                        self._x_specs))
+            # jit with explicit out_shardings so the rescaled design lands
+            # back on its (data, model) placement — works unchanged when
+            # the mesh spans processes (device_put onto a non-addressable
+            # sharding would not)
+            fn = jax.jit(lambda X, c, s: (X - c[None, :]) * s[None, :],
+                         out_shardings=NamedSharding(self.mesh,
+                                                     self._x_specs))
+            self._Xs = fn(self._Xs, center, scale)
         else:
             M = self._M
-            scaled = self._Xs.scale_columns(
-                jnp.asarray(scale.reshape(M, self._p_tot // M)))
-            self._Xs = jax.tree.map(
-                lambda a, s: jax.device_put(a, NamedSharding(self.mesh, s)),
-                scaled, self._x_specs)
+            out_sh = jax.tree.map(
+                lambda s: NamedSharding(self.mesh, s), self._x_specs)
+            fn = jax.jit(lambda X, s: X.scale_columns(s),
+                         out_shardings=out_sh)
+            self._Xs = fn(self._Xs, scale.reshape(M, self._p_tot // M))
         self._scale_packed = scale
         self._center_packed = center
 
@@ -773,22 +823,90 @@ class GLMSolver:
             beta = self._place_feat(np.zeros((self._p_tot,), np.float32))
             xb = self._place_row(np.zeros((self._n_tot,), np.float32))
         cursor = jnp.zeros((1,), jnp.int32) if self.mesh is None else \
-            jax.device_put(np.zeros((self._M,), np.int32),
-                           NamedSharding(self.mesh, self._feat_spec))
+            dist_boot.put_global(np.zeros((self._M,), np.int32),
+                                 self.mesh, self._feat_spec)
         return FitState(beta=beta, xb=xb, mu=jnp.float32(cfg.mu_init),
                         cursor=cursor, step=jnp.int32(0))
 
     def _budgets(self):
-        if self._base_speeds is None:
-            return self._budget_const
         from repro.core import alb as alb_lib
+        if self._telemetry is not None:
+            sp = self._telemetry.column_speeds(self.mesh, self.axis_model)
+            if sp is None:        # warm-up: uniform full budgets (BSP)
+                budgets = np.full((self._M,), self._n_tiles_local, np.int32)
+            else:
+                # measured speeds: sanitize, completion-rule pivot (the
+                # quantile-lower pivot never down-budgets the slow node at
+                # small M — see alb._pivot)
+                budgets = alb_lib.alb_budgets(
+                    sp, self._n_tiles_local, self.config.alb_kappa,
+                    self._max_budget, sanitize=True,
+                    pivot_rule="completion")
+            self._budgets_host = np.asarray(budgets, np.int32)
+            return dist_boot.put_global(self._budgets_host, self.mesh,
+                                        self._feat_spec)
+        if self._base_speeds is None:
+            if self._budgets_host is None:
+                self._budgets_host = np.full(
+                    (self._M if self.mesh is not None else 1,),
+                    self._n_tiles_local, np.int32)
+            return self._budget_const
         budgets = alb_lib.alb_budgets(
             alb_lib.sample_speeds(self._rng, self._base_speeds),
             self._n_tiles_local, self.config.alb_kappa, self._max_budget)
-        return jax.device_put(budgets.astype(np.int32),
-                              NamedSharding(self.mesh, self._feat_spec))
+        self._budgets_host = budgets.astype(np.int32)
+        return dist_boot.put_global(self._budgets_host, self.mesh,
+                                    self._feat_spec)
 
     # ---------------------------------------------------------- outer loop
+
+    def _my_tiles(self) -> int:
+        """Tiles THIS process's columns are budgeted for in the last
+        computed budget vector (the fault/telemetry unit of work)."""
+        if self._budgets_host is None:
+            return self._n_tiles_local
+        if self.dist_info is None or not self.dist_info["local_columns"]:
+            return int(self._budgets_host.max())
+        return int(max(self._budgets_host[m]
+                       for m in self.dist_info["local_columns"]))
+
+    def _dispatch_superstep(self, weights_dev, lams, active_dev, state):
+        """One superstep with the distributed hooks around it (DESIGN.md
+        §9): per-superstep budgets, fault-plan work injection, and
+        telemetry recording.  Without telemetry/faults this is exactly the
+        bare compiled-superstep call."""
+        budgets = self._budgets()
+        if self._telemetry is None and self._faults is None:
+            return self._superstep(self._Xs, self._ys, weights_dev,
+                                   self._offsets, budgets, lams,
+                                   active_dev, self._penf, state)
+        step_no = self._superstep_no
+        self._superstep_no += 1
+        pid = 0 if self.dist_info is None else self.dist_info["process_id"]
+        tiles = self._my_tiles()
+        work = None
+        if self._faults is not None and self._faults.tile_cost_s > 0:
+            # simulated per-tile local-work cost: the sleep is REAL
+            # wall-clock (what straggler_bench measures); the same value is
+            # what telemetry records as this node's local-phase seconds
+            # (see the measurement-source note in repro.dist.telemetry)
+            work = self._faults.work_s(pid, step_no, tiles)
+            if work > 0:
+                time.sleep(work)
+        t0 = time.perf_counter()
+        state, m = self._superstep(self._Xs, self._ys, weights_dev,
+                                   self._offsets, budgets, lams,
+                                   active_dev, self._penf, state)
+        if self._telemetry is not None:
+            jax.block_until_ready(state)
+            measured = time.perf_counter() - t0
+            # under a fault plan the injected work IS the node's local-phase
+            # seconds; raw wall-clock around a globally-synchronized SPMD
+            # program would fold in collective-wait time (every process
+            # waits for the straggler) and erase the very signal ALB needs
+            self._telemetry.record(step_no, tiles,
+                                   measured if work is None else work)
+        return state, m
 
     def _run(self, state: FitState, lam1: float, lam2: float, *,
              weights=None, active=None, max_outer=None, tol=None,
@@ -845,16 +963,17 @@ class GLMSolver:
             saved, _ = ckpt_manager.restore(
                 {"beta": state.beta, "xb": state.xb, "mu": state.mu})
             state = state._replace(
-                beta=self._place_feat(self._adapt_cols(saved["beta"])),
-                xb=self._place_row(self._adapt_rows(saved["xb"])),
+                beta=self._place_feat(self._adapt_cols(
+                    self._host(saved["beta"]))),
+                xb=self._place_row(self._adapt_rows(
+                    self._host(saved["xb"]))),
                 mu=jnp.float32(np.asarray(saved["mu"])),
                 step=jnp.int32(md["next_it"] - 1))
             f_prev = md.get("f_prev", np.inf)
             start_it = int(md["next_it"])
         for it in range(start_it, max_outer + 1):
-            state, m = self._superstep(self._Xs, self._ys, weights_dev,
-                                       self._offsets, self._budgets(), lams,
-                                       active_dev, self._penf, state)
+            state, m = self._dispatch_superstep(weights_dev, lams,
+                                                active_dev, state)
             self.launch_stats["supersteps"] += 1
             self.launch_stats["sweep_tile_launches"] += \
                 live_tiles if shaped else total_tiles
@@ -1073,7 +1192,7 @@ class GLMSolver:
             ckpt_every_chunks=ckpt_every_chunks)
         self._state = state
         self.beta_, self.intercept_ = self._unpack_user(
-            np.asarray(state.beta))
+            self._host(state.beta))
         return FitResult(self.beta_, history, n_iter, converged)
 
     def lambda_max(self) -> float:
@@ -1202,9 +1321,11 @@ class GLMSolver:
                     "path checkpoint was written for a different λ grid; "
                     "pass the same lambdas/lam2 to resume")
             state = state._replace(
-                beta=self._place_feat(self._adapt_cols(saved["beta"])),
+                beta=self._place_feat(self._adapt_cols(
+                    self._host(saved["beta"]))),
                 xb=state.xb if self._streaming
-                else self._place_row(self._adapt_rows(saved["xb"])),
+                else self._place_row(self._adapt_rows(
+                    self._host(saved["xb"]))),
                 mu=jnp.float32(np.asarray(saved["mu"])))
             saved_betas = self._adapt_cols(saved["path_betas"])
             betas_packed[:start_k] = saved_betas[:start_k]
@@ -1230,7 +1351,7 @@ class GLMSolver:
                 thresh = 2.0 * lam1 - (lam_prev if lam_prev is not None
                                        else lam1)
                 active = (np.abs(g) >= pf * thresh - 1e-12) | \
-                    (np.asarray(state.beta) != 0.0) | unpen
+                    (self._host(state.beta) != 0.0) | unpen
                 it_k = 0
                 for _ in range(8):
                     state, hist, it_round, conv_k = self._run(
@@ -1251,7 +1372,7 @@ class GLMSolver:
                 state, hist, it_k, conv_k = self._run(
                     state, lam1, lam2, weights=weights, max_outer=max_outer,
                     tol=tol, verbose=verbose)
-            betas_packed[k] = np.asarray(state.beta)
+            betas_packed[k] = self._host(state.beta)
             if hist["f"]:
                 f[k] = hist["f"][-1]
                 nnz[k] = int(hist["nnz"][-1])

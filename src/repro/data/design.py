@@ -571,6 +571,49 @@ class StreamingDesign(DesignMatrix):
         """Row range of chunk ``i`` in the padded (n_tot,) coordinates."""
         return slice(i * self.chunk_rows, (i + 1) * self.chunk_rows)
 
+    def process_slice(self, process_id: Optional[int] = None,
+                      num_processes: Optional[int] = None):
+        """Per-process chunk sharding (DESIGN.md §9): the contiguous chunk
+        range process ``process_id`` of ``num_processes`` owns, as its own
+        ``StreamingDesign``, plus the matching global row slice for the
+        caller's (y, weights, offset) host vectors.
+
+        This is the beyond-host-memory data model for multi-process runs:
+        rather than every process replicating the full row stream, each
+        walks only its own chunks (``chunk_fn`` is a pure function of the
+        GLOBAL chunk index, so no data moves).  Defaults come from the
+        active ``repro.dist.bootstrap`` context.
+
+        Returns ``(design, rows)`` where ``rows`` is a slice in the
+        UNPADDED global row coordinates.
+        """
+        if process_id is None or num_processes is None:
+            from repro.dist import bootstrap as _boot
+            ctx = _boot.context()
+            process_id = ctx.process_id if process_id is None else process_id
+            num_processes = ctx.num_processes if num_processes is None \
+                else num_processes
+        if not 0 <= process_id < num_processes:
+            raise ValueError(
+                f"process_id {process_id} out of range for "
+                f"{num_processes} processes")
+        if num_processes > self.n_chunks:
+            raise ValueError(
+                f"{num_processes} processes but only {self.n_chunks} "
+                "chunks; lower chunk_rows so every process owns work")
+        base, rem = divmod(self.n_chunks, num_processes)
+        lo = process_id * base + min(process_id, rem)
+        hi = lo + base + (1 if process_id < rem else 0)
+        row_lo = lo * self.chunk_rows
+        row_hi = min(hi * self.chunk_rows, self.n_rows_data)
+        design = StreamingDesign(
+            lambda j, _lo=lo: self._chunk_fn(_lo + j),
+            n_rows=row_hi - row_lo, n_cols=self.n_cols_src,
+            chunk_rows=self.chunk_rows, tile_size=self.tile_size,
+            add_ones=self.add_ones, prefetch=self.prefetch,
+            scale=self._scale, center=self._center)
+        return design, slice(row_lo, row_hi)
+
     # -- operator interface (host-level accumulation loops) ------------------
 
     def _row_chunks(self, *vecs):

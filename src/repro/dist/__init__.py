@@ -1,0 +1,31 @@
+"""``repro.dist`` — multi-process distributed runtime (DESIGN.md §9).
+
+Four layers, each usable alone:
+
+  * ``bootstrap``  — ``jax.distributed`` bring-up (env/CLI driven, with a
+    single-process fallback), process-spanning mesh construction, global
+    placement / host-gather helpers, KV store + barriers;
+  * ``telemetry``  — per-superstep node-speed measurement aggregated into
+    the EMA speed vector that drives ``core/alb.py`` budgets at runtime;
+  * ``faults``     — deterministic fault injection (per-process slowdown,
+    stutter windows, dead-process barrier guard) so straggler resilience
+    is testable on one machine;
+  * ``launcher``   — spawn-N-local-processes runner for tests, CI and
+    ``benchmarks/straggler_bench.py`` (``launch/dist_run.py`` is the CLI).
+"""
+from repro.dist.bootstrap import (DistContext, barrier, column_process_map,
+                                  context, gather_to_host, initialize,
+                                  is_multiprocess_mesh, local_columns,
+                                  make_dist_mesh, put_global)
+from repro.dist.faults import (DeadProcessError, FaultPlan, StutterWindow,
+                               guarded_barrier)
+from repro.dist.launcher import JobResult, run_local
+from repro.dist.telemetry import SuperstepTelemetry
+
+__all__ = [
+    "DistContext", "barrier", "column_process_map", "context",
+    "gather_to_host", "initialize", "is_multiprocess_mesh", "local_columns",
+    "make_dist_mesh", "put_global", "DeadProcessError", "FaultPlan",
+    "StutterWindow", "guarded_barrier", "JobResult", "run_local",
+    "SuperstepTelemetry",
+]

@@ -1,0 +1,125 @@
+"""Deterministic fault injection: slow nodes, stutter windows, dead peers.
+
+Straggler resilience is only trustworthy if it is TESTABLE, and a test
+needs reproducible faults.  This layer makes a node slow on purpose:
+
+  * ``FaultPlan`` — an immutable per-process schedule of slowdown factors:
+    a constant per-process factor (``slowdown``) plus transient
+    ``StutterWindow``s (factor applies only between two supersteps), both
+    composable.  ``factor(pid, step)`` is a pure function, so every
+    process can evaluate the whole plan — the simulation stays
+    deterministic and replayable.
+  * **work model** — the simulated cluster charges ``tile_cost_s`` seconds
+    of local work per tile; a node with factor f charges f× that.
+    ``work_s(pid, step, tiles)`` is the node's local-phase seconds for a
+    superstep that processed ``tiles`` tiles.  The solver's fault hook
+    ``time.sleep``s that long before the superstep (the wall-clock cost is
+    REAL — that is what ``benchmarks/straggler_bench.py`` measures) and
+    feeds the same value to telemetry as the node's local-work
+    measurement (see the measurement-source note in
+    ``repro.dist.telemetry``).
+  * ``guarded_barrier`` — the dropped-process timeout guard: a barrier
+    that raises ``DeadProcessError`` naming the barrier when a peer never
+    arrives, instead of wedging the job forever.  The launcher turns the
+    non-zero exit into a diagnosable failure for the remaining processes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+from repro.dist import bootstrap
+
+
+class DeadProcessError(RuntimeError):
+    """A peer process failed to reach a rendezvous within the timeout."""
+
+
+@dataclasses.dataclass(frozen=True)
+class StutterWindow:
+    """Transient slowdown: ``factor``× between supersteps [start, stop)."""
+    pid: int
+    start: int
+    stop: int
+    factor: float
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """Per-process deterministic slowness schedule.
+
+    ``slowdown[p]`` ≥ 1 multiplies process p's per-tile cost for the whole
+    run; ``stutters`` add transient windows on top (factors compose
+    multiplicatively).  ``tile_cost_s = 0`` disables injection entirely
+    (the plan still answers ``factor`` queries — useful for tests).
+    """
+    num_processes: int
+    tile_cost_s: float = 0.0
+    slowdown: Tuple[float, ...] = ()
+    stutters: Tuple[StutterWindow, ...] = ()
+    barrier_timeout_s: float = 60.0
+
+    def __post_init__(self):
+        if self.slowdown and len(self.slowdown) != self.num_processes:
+            raise ValueError(
+                f"slowdown must have {self.num_processes} entries; got "
+                f"{len(self.slowdown)}")
+        if any(f < 1.0 for f in self.slowdown):
+            raise ValueError("slowdown factors must be >= 1")
+
+    # ------------------------------------------------------------ queries
+
+    def factor(self, pid: int, step: int) -> float:
+        f = self.slowdown[pid] if self.slowdown else 1.0
+        for w in self.stutters:
+            if w.pid == pid and w.start <= step < w.stop:
+                f *= w.factor
+        return f
+
+    def work_s(self, pid: int, step: int, tiles: int) -> float:
+        """Simulated local-work seconds of one superstep on node pid."""
+        return self.factor(pid, step) * self.tile_cost_s * int(tiles)
+
+    def max_factor(self, step: int) -> float:
+        return max(self.factor(p, step) for p in range(self.num_processes))
+
+    # -------------------------------------------------------- construction
+
+    @classmethod
+    def parse(cls, spec: str, num_processes: int, *,
+              tile_cost_s: float = 0.0) -> "FaultPlan":
+        """CLI spec → plan.  ``"1:4.0"`` = process 1 runs 4× slow;
+        ``"0:2.0,1:4.0@10-20"`` = process 0 constantly 2× slow, process 1
+        stutters 4× during supersteps [10, 20)."""
+        slowdown = [1.0] * num_processes
+        stutters = []
+        for part in filter(None, (p.strip() for p in spec.split(","))):
+            pid_s, _, rest = part.partition(":")
+            pid = int(pid_s)
+            if not 0 <= pid < num_processes:
+                raise ValueError(f"fault spec names process {pid} but the "
+                                 f"job has {num_processes}")
+            factor_s, _, window = rest.partition("@")
+            factor = float(factor_s)
+            if window:
+                lo, _, hi = window.partition("-")
+                stutters.append(StutterWindow(pid, int(lo), int(hi), factor))
+            else:
+                slowdown[pid] = factor
+        return cls(num_processes=num_processes, tile_cost_s=tile_cost_s,
+                   slowdown=tuple(slowdown), stutters=tuple(stutters))
+
+
+def guarded_barrier(tag: str, *, timeout_s: float = 60.0):
+    """Barrier that raises ``DeadProcessError`` instead of hanging when a
+    peer never arrives (crashed, OOM-killed, wedged in a syscall).  The
+    distributed runtime's barrier already detects the timeout; this wraps
+    its opaque RuntimeError into something callers can catch and report.
+    """
+    try:
+        bootstrap.barrier(tag, timeout_s=timeout_s)
+    except Exception as e:  # jaxlib surfaces a bare RuntimeError/XlaRuntimeError
+        raise DeadProcessError(
+            f"barrier {tag!r} timed out after {timeout_s:.0f}s — a peer "
+            f"process is unreachable (crashed or wedged). Root error: "
+            f"{e}") from e

@@ -1,0 +1,151 @@
+"""Runtime node-speed telemetry: the measured half of adaptive load
+balancing.
+
+``core/alb.py`` turns a node-speed vector into per-node tile budgets; its
+docstring has always said that on a real cluster the speeds come from
+runtime telemetry.  This module IS that telemetry:
+
+  * every superstep, each process records how long its LOCAL work took
+    (``record``), in tiles-processed + wall-clock seconds — the blocking
+    ``repro.timing`` helpers give honest wall-clock around the jitted
+    superstep;
+  * the (tiles, seconds) samples are exchanged through the distributed
+    runtime's key-value store, so every process sees every node's sample
+    for the superstep (a missing peer surfaces as a KV timeout → the
+    fault layer's dead-process guard);
+  * each process folds the samples into the SAME exponential-moving-
+    average speed vector (speed = tiles/second) — deterministic given the
+    samples, so the resulting ``alb_budgets`` are bit-identical across
+    processes, which SPMD requires;
+  * before ``warmup`` supersteps have been recorded, ``speeds()`` returns
+    None and the caller falls back to uniform speeds (BSP budgets) —
+    sanitization of the measured values themselves happens in
+    ``alb.alb_budgets(..., sanitize=True)``.
+
+Measurement source: in a real deployment the recorded seconds are the
+measured local-phase wall-clock.  On the one-machine simulation harness
+the superstep is a single globally-synchronized SPMD program, so each
+process's raw wall-clock includes time spent waiting for stragglers at
+collectives; there the deterministic ``repro.dist.faults`` plan supplies
+the per-process local-work seconds instead (and injects the matching real
+sleeps), keeping the telemetry → EMA → budgets → rebalance loop fully
+real and the run replayable (see ``benchmarks/straggler_bench.py``).
+"""
+from __future__ import annotations
+
+import json
+from typing import Optional
+
+import numpy as np
+
+from repro.dist import bootstrap
+
+_NS_COUNTER = [0]
+
+
+class SuperstepTelemetry:
+    """Per-superstep node-speed estimator shared by all processes.
+
+    Args:
+      num_nodes: processes in the job (defaults to the bootstrap context).
+      ema: smoothing factor for the speed EMA — speed_new = (1-ema)·old +
+        ema·sample.  High values react to transient stragglers within a
+        few supersteps; low values smooth measurement noise.
+      warmup: supersteps before ``speeds()`` yields a vector (the EMA
+        needs a few samples before budgets should leave uniform).
+      exchange_timeout_s: KV-store wait for peers' samples; a peer that
+        never posts within the window raises (likely dead — the caller's
+        fault guard reports which).
+    """
+
+    def __init__(self, num_nodes: Optional[int] = None, *, ema: float = 0.5,
+                 warmup: int = 2, exchange_timeout_s: float = 60.0):
+        ctx = bootstrap.context()
+        self.num_nodes = ctx.num_processes if num_nodes is None \
+            else int(num_nodes)
+        self.node_id = ctx.process_id
+        self.ema = float(ema)
+        self.warmup = int(warmup)
+        self.exchange_timeout_s = float(exchange_timeout_s)
+        self._speeds: Optional[np.ndarray] = None
+        self._n_samples = 0
+        # KV keys must be unique per (telemetry instance, superstep):
+        # several solver sessions in one process each get their own space
+        self._ns = f"repro/telemetry/{_NS_COUNTER[0]}"
+        _NS_COUNTER[0] += 1
+        self.history: list = []       # (step, speeds) after each update
+
+    # ------------------------------------------------------------ record
+
+    def record(self, step: int, tiles: int, seconds: float):
+        """Record THIS node's local work for superstep ``step`` and fold
+        everyone's samples into the shared EMA.
+
+        Collective: every process must call it once per superstep, in
+        step order.  Single-process jobs skip the exchange.
+        """
+        sample = json.dumps([int(tiles), float(seconds)])
+        if self.num_nodes > 1 and bootstrap.context().multiprocess:
+            bootstrap.kv_set(f"{self._ns}/{step}/{self.node_id}", sample)
+            samples = []
+            for p in range(self.num_nodes):
+                raw = sample if p == self.node_id else bootstrap.kv_get(
+                    f"{self._ns}/{step}/{p}", self.exchange_timeout_s)
+                samples.append(json.loads(raw))
+        else:
+            samples = [json.loads(sample)] * self.num_nodes
+        self.record_all(step,
+                        np.asarray([s[0] for s in samples], np.float64),
+                        np.asarray([s[1] for s in samples], np.float64))
+
+    def record_all(self, step: int, tiles: np.ndarray, seconds: np.ndarray):
+        """Fold a full per-node (tiles, seconds) sample into the EMA —
+        the exchange-free entry point (single-process simulations, unit
+        tests, and the tail of ``record``)."""
+        with np.errstate(divide="ignore", invalid="ignore"):
+            sample = np.asarray(tiles, np.float64) / \
+                np.asarray(seconds, np.float64)
+        # invalid samples (zero-length window, no tiles) don't update that
+        # node's EMA — alb's sanitize catches whatever is left
+        if self._speeds is None:
+            self._speeds = np.where(np.isfinite(sample) & (sample > 0),
+                                    sample, np.nan)
+        else:
+            upd = np.isfinite(sample) & (sample > 0)
+            old = self._speeds
+            blend = np.where(np.isnan(old), sample,
+                             (1.0 - self.ema) * old + self.ema * sample)
+            self._speeds = np.where(upd, blend, old)
+        self._n_samples += 1
+        self.history.append((int(step), None if self._speeds is None
+                             else self._speeds.copy()))
+
+    # ------------------------------------------------------------- query
+
+    @property
+    def ready(self) -> bool:
+        return self._n_samples >= self.warmup and self._speeds is not None
+
+    def speeds(self) -> Optional[np.ndarray]:
+        """EMA node-speed vector (tiles/s), or None during warm-up —
+        callers fall back to uniform speeds (BSP budgets) until then.
+        May still contain NaN for nodes without a valid sample yet; pass
+        through ``alb_budgets(..., sanitize=True)``."""
+        if not self.ready:
+            return None
+        return self._speeds.copy()
+
+    def column_speeds(self, mesh, axis_model: str = "model") \
+            -> Optional[np.ndarray]:
+        """Per-model-column speeds: node speeds mapped through the
+        column → owning-process bookkeeping.  None during warm-up."""
+        sp = self.speeds()
+        if sp is None:
+            return None
+        owners = bootstrap.column_process_map(mesh, axis_model)
+        if owners.max(initial=-1) >= self.num_nodes:
+            raise ValueError(
+                f"mesh columns are owned by process "
+                f"{int(owners.max())} but telemetry tracks only "
+                f"{self.num_nodes} nodes")
+        return sp[owners]

@@ -1,0 +1,106 @@
+"""Distributed GLM launcher: ``python -m repro.launch.dist_run [...]``.
+
+Two modes sharing one entry point (DESIGN.md §9):
+
+  * **parent** (no ``REPRO_DIST_PROCID`` in the environment): spawn
+    ``--nprocs`` coordinated local worker processes through
+    ``repro.dist.launcher`` — the one-machine stand-in for a cluster
+    scheduler — and relay their output;
+  * **worker** (env set, or ``--nprocs 1``): ``bootstrap.initialize()``,
+    build the process-spanning mesh, and run the ``--demo`` lasso fit on a
+    synthetic design, optionally under an injected fault plan
+    (``--faults "1:4.0"``) with telemetry-driven ALB (``--telemetry``).
+
+On a real cluster each node runs the worker directly with
+``REPRO_DIST_COORD/NPROCS/PROCID`` set by the scheduler; the parent mode
+exists so the same command line works on a laptop.
+"""
+import argparse
+import json
+import os
+import sys
+
+
+def _worker(args) -> int:
+    from repro.core.solver import GLMSolver
+    from repro.core.dglmnet import DGLMNETConfig
+    from repro.dist import bootstrap, faults, telemetry
+
+    ctx = bootstrap.initialize()
+    mesh = bootstrap.make_dist_mesh()
+    import numpy as np
+    rng = np.random.default_rng(0)
+    n, p = args.rows, args.cols
+    X = rng.normal(size=(n, p)).astype(np.float32)
+    beta_true = np.zeros((p,), np.float32)
+    beta_true[: p // 8] = rng.normal(size=p // 8)
+    y = (X @ beta_true + 0.1 * rng.normal(size=n)).astype(np.float32)
+
+    plan = None
+    if args.faults:
+        plan = faults.FaultPlan.parse(args.faults, ctx.num_processes,
+                                      tile_cost_s=args.tile_cost_s)
+    tel = telemetry.SuperstepTelemetry() if args.telemetry else None
+
+    solver = GLMSolver(
+        X, y, config=DGLMNETConfig(tile_size=args.tile, max_outer=args.steps),
+        mesh=mesh, telemetry=tel, fault_plan=plan)
+    res = solver.fit(lam1=args.lam1, lam2=1e-4)
+    nnz = int((np.abs(res.beta) > 1e-8).sum())
+    if ctx.is_coordinator:
+        print(json.dumps({
+            "process_id": ctx.process_id,
+            "num_processes": ctx.num_processes,
+            "mesh": [int(s) for s in mesh.devices.shape],
+            "f": res.history["f"][-1], "nnz": nnz,
+            "n_iter": res.n_iter, "converged": bool(res.converged),
+            "budgets": None if solver._budgets_host is None
+            else solver._budgets_host.tolist(),
+        }))
+    faults.guarded_barrier("dist-run-exit")
+    return 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--nprocs", type=int, default=2,
+                    help="local processes to spawn (parent mode)")
+    ap.add_argument("--demo", action="store_true",
+                    help="run the synthetic lasso demo fit (worker mode "
+                    "runs it always; parent mode spawns workers that do)")
+    ap.add_argument("--rows", type=int, default=512)
+    ap.add_argument("--cols", type=int, default=256)
+    ap.add_argument("--tile", type=int, default=64)
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--lam1", type=float, default=0.05)
+    ap.add_argument("--faults", default="",
+                    help='fault spec, e.g. "1:4.0" or "0:2.0,1:4.0@10-20"')
+    ap.add_argument("--tile-cost-s", type=float, default=0.0, dest="tile_cost_s",
+                    help="simulated seconds of local work per tile (>0 "
+                    "activates fault injection sleeps)")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="drive ALB budgets from measured node speeds")
+    ap.add_argument("--timeout", type=float, default=900.0)
+    args = ap.parse_args()
+
+    if os.environ.get("REPRO_DIST_PROCID") is not None or args.nprocs <= 1:
+        return _worker(args)
+
+    from repro.dist import launcher
+    forwarded, skip = [], False
+    for a in sys.argv[1:]:
+        if skip:
+            skip = False
+            continue
+        if a == "--nprocs":
+            skip = True
+        elif not a.startswith("--nprocs="):
+            forwarded.append(a)
+    result = launcher.run_local(args.nprocs, os.path.abspath(__file__),
+                                args=forwarded, timeout_s=args.timeout)
+    print(result.summary())
+    return 0 if result.ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -32,10 +32,26 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_glm_mesh(n_data: int, n_model: int):
     """Mesh for the d-GLMNET workload: rows × feature-blocks.
     (1, M) reproduces the paper's layout exactly."""
+    return mesh_from_devices(jax.devices(), n_data, n_model)
+
+
+def mesh_from_devices(devices, n_data: int, n_model: int):
+    """(data × model) mesh over an explicit device list.
+
+    The single-process callers above pass ``jax.devices()`` of one process;
+    ``repro.dist.bootstrap`` passes the GLOBAL device list of a
+    ``jax.distributed`` bring-up, producing a process-spanning mesh with
+    the same axis names — everything downstream (shard_map supersteps,
+    PartitionSpecs, ALB budgets) is mesh-shape-agnostic and runs unchanged.
+    Devices are laid out row-major, so with the default one-device-per-
+    process bring-up consecutive model columns land on consecutive
+    processes (the feature-shard ↔ process map ``repro.dist.bootstrap.
+    column_process_map`` reads back).
+    """
     n = n_data * n_model
-    devices = jax.devices()[:n]
+    devices = list(devices)[:n]
     if len(devices) < n:
-        raise RuntimeError(f"need {n} devices, have {len(jax.devices())}")
+        raise RuntimeError(f"need {n} devices, have {len(devices)}")
     import numpy as np
     return jax.sharding.Mesh(np.asarray(devices).reshape(n_data, n_model),
                              ("data", "model"))

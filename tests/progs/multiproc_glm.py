@@ -1,0 +1,105 @@
+"""Multi-process GLM parity prog (DESIGN.md §9).
+
+Modes (``--mode``):
+
+  * ``single``  — single-PROCESS reference: the same (1, 2) mesh built from
+    2 fake devices in one process (run directly with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=2``);
+  * ``dist``    — the same fit on a (1, 2) mesh spanning 2 real processes
+    (run under ``repro.dist.launcher``, one device each);
+  * ``ckpt-a``  — distributed fit truncated at 4 supersteps, checkpointing
+    every 2 (the "crashed" first run);
+  * ``ckpt-b``  — fresh processes resume from the checkpoint directory and
+    run to ``--steps`` supersteps (the restart).
+
+Every mode writes the final PACKED beta (and user-space beta) as JSON to
+``--out`` (coordinator only), so the pytest parent can compare runs that
+lived in different process worlds.  ``--design block`` switches the dense
+design for a block-sparse ``SparseCOO`` brick layout.
+"""
+import argparse
+import json
+import os
+import sys
+
+if os.environ.get("REPRO_DIST_PROCID") is None:
+    # single-process reference mode: mesh wants 2 local fake devices
+    os.environ.setdefault(
+        "XLA_FLAGS", "--xla_force_host_platform_device_count=2")
+
+import numpy as np
+
+
+def make_problem(design: str, n=192, p=96, seed=7):
+    rng = np.random.default_rng(seed)
+    if design == "dense":
+        X = rng.normal(size=(n, p)).astype(np.float32)
+    else:
+        mask = rng.random((n, p)) < 0.15
+        X = np.where(mask, rng.normal(size=(n, p)), 0.0).astype(np.float32)
+    beta = np.zeros((p,), np.float32)
+    beta[: p // 6] = rng.normal(size=p // 6).astype(np.float32)
+    y = (X @ beta + 0.05 * rng.normal(size=n)).astype(np.float32)
+    return X, y
+
+
+def build_solver(args, mesh, ckpt_kwargs=None):
+    from repro.core.dglmnet import DGLMNETConfig
+    from repro.core.solver import GLMSolver
+    from repro.data.design import SparseCOO
+
+    X, y = make_problem(args.design)
+    if args.design == "block":
+        r, c = np.nonzero(X)
+        X = SparseCOO(rows=r.astype(np.int32), cols=c.astype(np.int32),
+                      vals=X[r, c].astype(np.float32), shape=X.shape)
+    cfg = DGLMNETConfig(tile_size=16, max_outer=args.steps, tol=0.0)
+    return GLMSolver(X, y, config=cfg, mesh=mesh, row_block=32,
+                     **(ckpt_kwargs or {}))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", required=True,
+                    choices=["single", "dist", "ckpt-a", "ckpt-b"])
+    ap.add_argument("--design", default="dense", choices=["dense", "block"])
+    ap.add_argument("--steps", type=int, default=12)
+    ap.add_argument("--out", required=True)
+    ap.add_argument("--ckpt-dir", default="")
+    args = ap.parse_args()
+
+    from repro.dist import bootstrap, faults
+
+    ctx = bootstrap.initialize()
+    mesh = bootstrap.make_dist_mesh()   # (1, 2) either way
+    assert mesh.devices.size == 2, mesh.devices.shape
+    if args.mode != "single":
+        assert ctx.multiprocess and bootstrap.is_multiprocess_mesh(mesh)
+
+    solver = build_solver(args, mesh)
+
+    ckpt_manager = None
+    if args.mode.startswith("ckpt"):
+        from repro.checkpoint.manager import CheckpointManager
+        ckpt_manager = CheckpointManager(args.ckpt_dir)
+
+    max_outer = 4 if args.mode == "ckpt-a" else args.steps
+    res = solver.fit(lam1=0.02, lam2=1e-3, max_outer=max_outer,
+                     ckpt_manager=ckpt_manager, ckpt_every=2)
+
+    packed = bootstrap.gather_to_host(solver._state.beta)
+    if ctx.is_coordinator:
+        with open(args.out, "w") as f:
+            json.dump({
+                "beta_packed": np.asarray(packed, np.float64).tolist(),
+                "beta_user": np.asarray(res.beta, np.float64).tolist(),
+                "f": res.history["f"][-1],
+                "n_iter": res.n_iter,
+                "num_processes": ctx.num_processes,
+            }, f)
+    faults.guarded_barrier("multiproc-glm-exit")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
