@@ -37,6 +37,12 @@ BENCH_COLUMNS = {
                         "tile_cost_s", "supersteps", "wall_s",
                         "wall_per_superstep_s", "recovery_vs_alb_off",
                         "f_final", "nnz", "final_budgets", "node_speeds"],
+    "ingest_bench": ["case", "format", "rows", "features", "chunks",
+                     "nnz_total", "file_mb", "scan_s", "pass_s",
+                     "rows_per_s", "nnz_per_s", "hash_dim", "supersteps",
+                     "prefetch", "cache_chunks", "wall_s",
+                     "prefetch_speedup", "num_processes", "f_final",
+                     "max_abs_beta_diff_vs_1proc", "parity_ok"],
     "serving_bench": ["case", "mode", "dtype", "n_requests", "rows_per_s",
                       "p50_ms", "p99_ms", "mean_batch",
                       "speedup_vs_batch1", "artifact_bytes",

@@ -14,6 +14,8 @@ Figures:
   cv_bench          — mask-based K-fold fit_cv vs per-fold cold sessions
   streaming_bench   — out-of-core chunked fits (StreamingDesign) + overlap
   straggler_bench   — 2-process injected-straggler: telemetry-ALB vs BSP
+  ingest_bench      — file ingestion: reader/hashing throughput, pipeline
+                      on/off e2e fits, 2-process out-of-core parity
 """
 from __future__ import annotations
 
@@ -33,9 +35,9 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (cv_bench, fig1_adaptive_mu, fig2_4_l1,
-                            fig5_6_l2, fig7_8_speedup, kernels_bench,
-                            path_bench, straggler_bench, streaming_bench,
-                            table2_load)
+                            fig5_6_l2, fig7_8_speedup, ingest_bench,
+                            kernels_bench, path_bench, straggler_bench,
+                            streaming_bench, table2_load)
     figures = {
         "table2_load": table2_load.run,
         "fig1_adaptive_mu": fig1_adaptive_mu.run,
@@ -47,6 +49,7 @@ def main() -> None:
         "cv_bench": cv_bench.run,
         "streaming_bench": streaming_bench.run,
         "straggler_bench": straggler_bench.run,
+        "ingest_bench": ingest_bench.run,
     }
     wanted = (args.only.split(",") if args.only else list(figures))
     RESULTS.mkdir(parents=True, exist_ok=True)

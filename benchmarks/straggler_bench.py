@@ -64,6 +64,18 @@ def _worker(args) -> int:
                         alb_kappa=0.5)
     solver = GLMSolver(X, y, config=cfg, mesh=mesh,
                        telemetry=tel, fault_plan=plan)
+    fractions = None
+    if tel is not None:
+        # attribute each node's local-work seconds to superstep phases:
+        # the fused superstep hides the split at runtime, so probe it with
+        # path_bench's separately-jitted ops at the same shapes and
+        # register the measured fractions (solver.set_phase_fractions)
+        import path_bench
+        us = path_bench._phase_breakdown(X, y, tile_size=args.tile,
+                                         fused=False)
+        tot = sum(us.values()) or 1.0
+        fractions = {k[:-3]: round(v / tot, 4) for k, v in us.items()}
+        solver.set_phase_fractions(fractions)
     # charge compile outside the timed window (both arms pay it equally)
     solver.fit(lam1=args.lam1, lam2=1e-4, max_outer=1)
 
@@ -83,6 +95,11 @@ def _worker(args) -> int:
             else solver._budgets_host.tolist(),
             "node_speeds": None if tel is None or tel.speeds() is None
             else [round(float(v), 2) for v in tel.speeds()],
+            "phase_fractions": fractions,
+            "phase_breakdown": None
+            if tel is None or tel.phase_breakdown() is None
+            else {k: [round(float(x), 4) for x in v]
+                  for k, v in tel.phase_breakdown().items()},
         }
         pathlib.Path(args.out).write_text(json.dumps(row))
     faults.guarded_barrier("straggler-bench-exit")
@@ -144,6 +161,21 @@ def smoke() -> int:
     assert b is not None and b[1] < b[0], b
     # both arms ran the identical superstep schedule
     assert off["supersteps"] == on["supersteps"]
+    # phase attribution (repro.dist.telemetry.phase_breakdown): the
+    # telemetry arm carries probe-derived per-phase seconds for both
+    # nodes, every phase positive, and the straggler's attributed local
+    # work is not BELOW the fast node's (ALB converges them toward equal
+    # — that is the bargain — but the EMA keeps the slow start)
+    pb = on["phase_breakdown"]
+    assert pb is not None and \
+        {"stats", "sweep", "merge", "line_search"} <= set(pb)
+    for name, per_node in pb.items():
+        assert len(per_node) == 2 and all(v > 0 for v in per_node), \
+            (name, per_node)
+    tot0 = sum(v[0] for v in pb.values())
+    tot1 = sum(v[1] for v in pb.values())
+    assert tot1 >= 0.9 * tot0, (tot0, tot1)
+    assert off["phase_breakdown"] is None
     print(f"STRAGGLER_SMOKE_OK recovery={recovery:.2f}")
     return 0
 

@@ -9,6 +9,34 @@ Public API:
   glm.FAMILIES                        — logistic / squared / probit / poisson
   head_probe.fit_probe                — elastic-net GLM head on frozen LM features
 """
-from repro.core.dglmnet import DGLMNETConfig, FitResult, fit, fit_sharded  # noqa: F401
-from repro.core.solver import GLMSolver, PathResult, lambda_max  # noqa: F401
 from repro.core import glm  # noqa: F401
+
+# Solver/driver symbols resolve lazily (PEP 562).  ``glm`` is the only
+# eager import: the kernels layer pulls ``repro.core.glm`` at module
+# level, and an eager solver import here would re-enter
+# ``repro.data.design`` while it is still initializing
+# (design -> kernels.ops -> repro.core -> solver -> design).
+_LAZY = {
+    "DGLMNETConfig": "repro.core.dglmnet",
+    "FitResult": "repro.core.dglmnet",
+    "fit": "repro.core.dglmnet",
+    "fit_sharded": "repro.core.dglmnet",
+    "GLMSolver": "repro.core.solver",
+    "PathResult": "repro.core.solver",
+    "lambda_max": "repro.core.solver",
+}
+
+
+def __getattr__(name):
+    modname = _LAZY.get(name)
+    if modname is None:
+        raise AttributeError(f"module 'repro.core' has no attribute {name!r}")
+    import importlib
+
+    obj = getattr(importlib.import_module(modname), name)
+    globals()[name] = obj
+    return obj
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_LAZY))

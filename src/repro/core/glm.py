@@ -20,6 +20,8 @@ paper: all update rules are written in terms of ``s`` and ``w`` so that
 Conventions:
   * logistic / probit: labels y in {-1, +1}
   * squared:           y real
+  * multinomial:       y integer class ids in [0, K); margins are (n, K),
+    one column per class (softmax link) — see ``MultinomialFamily``
   * poisson:           y >= 0 integer counts, log link.  The poisson
     curvature ``w = exp(m)`` is unbounded, so ``stats`` clips it at
     ``w_clip`` (= POISSON_W_CLIP) — the effective curvature bound the CGD
@@ -160,6 +162,69 @@ def _poisson_saturated(y):
     return jnp.where(y > 0, y - y * jnp.log(jnp.maximum(y, 1e-30)), 0.0)
 
 
+# ---------------------------------------------------------------------------
+# multinomial:  l(y, M) = logsumexp(M_i) - M_i[y_i]
+#
+# The one family with VECTOR margins: M is (n, K) (one column per class),
+# labels y are integer class ids in [0, K).  K is inferred from M's last
+# axis, so the single registered instance serves any class count.
+#
+#   s = onehot(y) - softmax(M)     (n, K)  negative gradient per class
+#   w = p (1 - p)                  (n, K)  DIAGONAL curvature, <= 1/4
+#
+# The diagonal curvature is exactly what the block-separable d-GLMNET
+# machinery needs: the class-cycling solver (glm/estimators.py
+# MultinomialGLM) fits class k as a binary logistic subproblem at offset
+# a_i = log sum_{j != k} exp(M_ij), which has the same s_k / w_k, so the
+# compiled logistic superstep is reused unchanged.  This family is the
+# K-column oracle those subfits (and predict / deviance / gradient
+# checks) are validated against; it runs through ``kernels.ref`` —
+# ``ops.glm_stats`` falls back to the jnp oracle for any family without a
+# Pallas stats body, multinomial included.
+# ---------------------------------------------------------------------------
+
+def _multinomial_stats(y, m):
+    k = m.shape[-1]
+    lse = jax.scipy.special.logsumexp(m, axis=-1)
+    p = jax.nn.softmax(m, axis=-1)
+    onehot = jax.nn.one_hot(y.astype(jnp.int32), k, dtype=m.dtype)
+    loss = lse - jnp.sum(onehot * m, axis=-1)
+    s = onehot - p
+    w = p * (1.0 - p)
+    return loss, s, w
+
+
+@dataclasses.dataclass(frozen=True)
+class MultinomialFamily(GLMFamily):
+    """Softmax family over (n, K) margins.
+
+    Overrides ``stats`` because the observation model broadcasts
+    differently here: per-example weights are (n,) while s and w are
+    (n, K), and offsets may be (n, K) (per-class, the class-cycling
+    representation) or (n,) (shared across classes).
+    """
+
+    def stats(self, y, m, weights=None, offset=None):
+        if offset is not None:
+            off = jnp.asarray(offset)
+            if off.ndim == m.ndim - 1:
+                off = off[..., None]
+            m = m + off
+        loss, s, w = self.raw_stats(y, m)
+        if self.w_clip is not None:
+            w = jnp.minimum(w, self.w_clip)
+        if weights is not None:
+            loss = loss * weights
+            s = s * weights[..., None]
+            w = w * weights[..., None]
+        return loss, s, w
+
+
+MULTINOMIAL = MultinomialFamily(
+    "multinomial", _multinomial_stats,
+    lambda m: jax.nn.softmax(m, axis=-1), 0.25)
+
+
 LOGISTIC = GLMFamily("logistic", _logistic_stats,
                      lambda m: jax.nn.sigmoid(m), 0.25)
 SQUARED = GLMFamily("squared", _squared_stats, lambda m: m, 1.0)
@@ -169,7 +234,8 @@ POISSON = GLMFamily("poisson", _poisson_stats, lambda m: jnp.exp(m), None,
                     w_clip=POISSON_W_CLIP,
                     saturated_loss=_poisson_saturated)
 
-FAMILIES = {f.name: f for f in (LOGISTIC, SQUARED, PROBIT, POISSON)}
+FAMILIES = {f.name: f
+            for f in (LOGISTIC, SQUARED, PROBIT, POISSON, MULTINOMIAL)}
 
 
 def get_family(name: str) -> GLMFamily:
@@ -233,6 +299,8 @@ def margin_score(family, y, margins) -> float:
     fam = resolve_family(family)
     y = np.asarray(y, np.float32)
     m = np.asarray(margins, np.float32)
+    if fam.name == "multinomial":
+        return float((np.argmax(m, axis=-1) == y.astype(np.int64)).mean())
     if fam.name in ("logistic", "probit"):
         return float(((m > 0) == (y > 0)).mean())
     if fam.name == "squared":

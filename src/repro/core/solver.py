@@ -347,6 +347,7 @@ class GLMSolver:
             self.dist_info = None
         self._telemetry = telemetry
         self._faults = fault_plan
+        self._phase_fractions = None   # set_phase_fractions
         self._superstep_no = 0
         self._budgets_host: Optional[np.ndarray] = None
         if telemetry is not None and mesh is None:
@@ -374,6 +375,28 @@ class GLMSolver:
         # because every coordinate was screened out.  In-memory fits only.
         self.launch_stats = {"supersteps": 0, "sweep_tile_launches": 0,
                              "sweep_tiles_skipped": 0}
+
+        # file / reader front door (repro.io): a path or an open reader
+        # coerces to a StreamingDesign, and y=None pulls the labels from
+        # the same source — GLMSolver("train.libsvm.gz", None) trains
+        # out-of-core.  Lazy import: repro.io is optional machinery above
+        # the solver, not a core dependency.
+        self._reader = None
+        if isinstance(X, (str, os.PathLike)) or (
+                not isinstance(X, (np.ndarray, jnp.ndarray))
+                and not hasattr(X, "shape")
+                and hasattr(X, "to_design") and hasattr(X, "labels")):
+            from repro import io as io_lib
+            if mesh is not None:
+                raise ValueError(
+                    "file-backed fits stream through a single-process "
+                    "StreamingDesign (mesh=None); for multi-process "
+                    "out-of-core training use launch/dist_run.py, which "
+                    "gives each process its own chunk range")
+            X, labels, self._reader = io_lib.open_design(
+                X, tile_size=config.tile_size)
+            if y is None:
+                y = labels
 
         y = np.asarray(y, np.float32)
         n = y.shape[0]
@@ -904,9 +927,32 @@ class GLMSolver:
             # seconds; raw wall-clock around a globally-synchronized SPMD
             # program would fold in collective-wait time (every process
             # waits for the straggler) and erase the very signal ALB needs
-            self._telemetry.record(step_no, tiles,
-                                   measured if work is None else work)
+            sec = measured if work is None else work
+            if self._phase_fractions:
+                phases = {k: sec * f
+                          for k, f in self._phase_fractions.items()}
+            elif work is not None:
+                # injected per-tile work models the CD sweep's local half
+                phases = {"sweep": sec}
+            else:
+                phases = None
+            self._telemetry.record(step_no, tiles, sec, phases=phases)
         return state, m
+
+    def set_phase_fractions(self, fractions):
+        """Attribute each superstep's telemetry seconds to named phases.
+
+        The compiled superstep is one fused program, so its internal
+        stats / CD-sweep / line-search split is not directly observable
+        at runtime; callers that probed the split with separately-jitted
+        ops at the same shapes (``benchmarks/path_bench``'s phase
+        breakdown) register the measured fractions here, and every
+        subsequent telemetry record carries ``phases = fraction ×
+        seconds`` (``repro.dist.telemetry.phase_breakdown``).  Pass None
+        to stop attributing."""
+        if fractions is not None:
+            fractions = {str(k): float(v) for k, v in fractions.items()}
+        self._phase_fractions = fractions
 
     def _run(self, state: FitState, lam1: float, lam2: float, *,
              weights=None, active=None, max_outer=None, tol=None,
@@ -1166,6 +1212,64 @@ class GLMSolver:
         return out
 
     # ------------------------------------------------------------- fitting
+
+    def training_margins(self) -> np.ndarray:
+        """Host (n,) margins Xβ̂ over the TRAINING design at the current
+        fitted state — no offset applied; the intercept is included when
+        it was fitted (it is a design column).  In-memory sessions read
+        the maintained margins; streaming sessions re-materialize them in
+        one chunk pass."""
+        if self._state is None:
+            raise ValueError("no fitted state; call fit first")
+        if not self._streaming:
+            return self._host(self._state.xb)[: self._n_user]
+        beta = self._state.beta
+        out = np.empty((self._n_tot,), np.float32)
+        rows = self._Xs.chunk_rows
+        for i, Xc, _, _, _ in self._iter_row_chunks():
+            lo = i * rows
+            out[lo:lo + Xc.shape[0]] = np.asarray(Xc @ beta)
+        return out[: self._n_user]
+
+    def set_observations(self, *, y=None, sample_weight=None, offset=None):
+        """Swap the observation model on the SAME compiled session.
+
+        The compiled superstep is a pure function of the design layout and
+        config — y, weights and offsets are runtime arguments — so
+        replacing them costs zero recompiles.  This is the mechanism the
+        class-cycling multinomial solver leans on: one logistic session
+        per design, K offset swaps per epoch (glm/estimators.py).
+
+        Any provided vector must be length ``n`` (original rows); padding
+        is reapplied with the session's conventions (y → 1, weights → 0,
+        offset → 0).  Warm-start state is cleared, since the objective
+        changed under it.
+        """
+        n = self._n_user
+        pad = self._n_tot - n
+        if y is not None:
+            y = np.asarray(y, np.float32)
+            if y.shape != (n,):
+                raise ValueError(f"y must be ({n},); got {y.shape}")
+            self._ys = self._place_row(
+                np.pad(y, (0, pad), constant_values=1.0))
+        if sample_weight is not None:
+            sw = np.asarray(sample_weight, np.float32)
+            if sw.shape != (n,):
+                raise ValueError(
+                    f"sample_weight must be ({n},); got {sw.shape}")
+            if (sw < 0).any():
+                raise ValueError("sample_weight must be nonnegative")
+            self._wobs_host = np.pad(sw, (0, pad))
+            self._wobs = self._place_row(self._wobs_host)
+        if offset is not None:
+            off = np.asarray(offset, np.float32)
+            if off.shape != (n,):
+                raise ValueError(f"offset must be ({n},); got {off.shape}")
+            self._offsets = self._place_row(np.pad(off, (0, pad)))
+        self._state = None
+        self._lmax = None
+        return self
 
     def fit(self, lam1: Optional[float] = None, lam2: Optional[float] = None,
             *, beta0=None, intercept0: float = 0.0, max_outer=None, tol=None,

@@ -617,9 +617,30 @@ class StreamingDesign(DesignMatrix):
     # -- operator interface (host-level accumulation loops) ------------------
 
     def _row_chunks(self, *vecs):
+        """Zip chunks with the matching slices of caller row vectors.
+
+        Accepts vectors in either the PADDED coordinates
+        (``n_chunks * chunk_rows``) or the true unpadded ``n_rows_data``;
+        unpadded vectors are zero-extended so the final ragged chunk's
+        padding rows carry weight/residual 0 — the ``data/pipeline.py``
+        chunk contract (before this normalization an unpadded vector
+        silently produced a short final slice and a shape error deep in
+        the einsum).
+        """
+        n_pad = self.n_chunks * self.chunk_rows
+        host = []
+        for v in vecs:
+            a = np.asarray(v, np.float32)
+            if a.shape[0] == self.n_rows_data and a.shape[0] != n_pad:
+                a = np.pad(a, (0, n_pad - a.shape[0]))
+            elif a.shape[0] != n_pad:
+                raise ValueError(
+                    f"row vector has length {a.shape[0]}; expected the "
+                    f"unpadded {self.n_rows_data} or padded {n_pad}")
+            host.append(a)
         for i, Xc in self.iter_chunks():
             sl = self.row_slice(i)
-            yield Xc, tuple(jnp.asarray(np.asarray(v)[sl]) for v in vecs)
+            yield Xc, tuple(jnp.asarray(a[sl]) for a in host)
 
     def tile_gram(self, tid, w, r, *, backend=None):
         T = self.tile_size

@@ -1,17 +1,86 @@
-"""Deterministic, resumable token pipeline.
+"""Deterministic, resumable data pipelines: the chunk-callable contract.
 
-Production shape: the loader is a pure function of (seed, step), so a
-restarted job replays the exact batch sequence without data-state
-checkpointing — the simplest correct resume story at any scale (each host
-derives its shard of the global batch from its data-axis coordinate).
+Production shape: every loader is a pure function of its index argument —
+``TokenPipeline.batch_at(step)`` for token batches, ``chunk_fn(i)`` for GLM
+row chunks — so a restarted job replays the exact byte stream without
+data-state checkpointing (the simplest correct resume story at any scale).
 
-Here it synthesizes token streams (zipf-ish unigram mix with a repeated
-motif so a ~100M model visibly learns); swap `_synth_doc` for a real corpus
-reader without touching resume semantics.
+The **chunk-callable contract** (consumed by ``StreamingDesign`` and
+produced by every ``repro.io`` reader):
+
+  * ``chunk_fn(i) -> array (rows_i, n_cols)`` returns chunk ``i``'s RAW
+    rows for ``i in [0, ceil(n_rows / chunk_rows))``;
+  * ``rows_i == chunk_rows`` for every chunk except possibly the LAST,
+    which is ragged: ``rows_last = n_rows - (n_chunks - 1) * chunk_rows``
+    (never zero, never padded by the producer);
+  * ``chunk_fn`` is a pure function of ``i`` — calling it twice, in any
+    order, from any process, yields bit-identical rows (resume replay and
+    ``StreamingDesign.process_slice`` multi-process sharding both depend
+    on this);
+  * zero-padding is the CONSUMER's job: ``StreamingDesign._host_chunk``
+    pads the ragged final chunk (and the tile-alignment columns) with
+    zeros, and every consumer weights rows by the observation-weight
+    vector, which is 0 on padded rows — so padding is inert by
+    construction.  Producers must never emit their own padding: the
+    padded-row weights could not be forced to 0 without knowing the true
+    ``n_rows``.
+
+``validate_chunk_callable`` checks a producer against this contract —
+every ``repro.io`` reader is validated in tests through it.
+
+``TokenPipeline`` below synthesizes token streams (zipf-ish unigram mix
+with a repeated motif so a ~100M model visibly learns); swap `_synth_doc`
+for a real corpus reader without touching resume semantics.
 """
 from __future__ import annotations
 
 import numpy as np
+
+
+def validate_chunk_callable(chunk_fn, *, n_rows: int, n_cols: int,
+                            chunk_rows: int, check_chunks: int = 3,
+                            check_purity: bool = True) -> dict:
+    """Verify a chunk producer against the chunk-callable contract.
+
+    Checks, for the first ``check_chunks`` chunks plus ALWAYS the final
+    (possibly ragged) one: shape ``(rows_i, n_cols)`` with ``rows_i`` the
+    contract row count, float-coercible finite values, and — with
+    ``check_purity`` — that a second call returns bit-identical rows.
+
+    Returns a stats dict (``n_chunks``, ``last_rows``, ``checked``);
+    raises ``ValueError`` on any contract violation.  Cheap enough to run
+    at reader-construction time in tests; production callers validate
+    once per dataset, not per epoch.
+    """
+    if chunk_rows <= 0 or n_rows <= 0 or n_cols <= 0:
+        raise ValueError(
+            f"need positive n_rows/n_cols/chunk_rows; got "
+            f"({n_rows}, {n_cols}, {chunk_rows})")
+    n_chunks = -(-n_rows // chunk_rows)
+    last_rows = n_rows - (n_chunks - 1) * chunk_rows
+    idx = sorted(set(range(min(check_chunks, n_chunks))) | {n_chunks - 1})
+    for i in idx:
+        want_rows = chunk_rows if i < n_chunks - 1 else last_rows
+        raw = np.asarray(chunk_fn(i), np.float32)
+        if raw.shape != (want_rows, n_cols):
+            raise ValueError(
+                f"chunk_fn({i}) returned shape {raw.shape}; the contract "
+                f"says ({want_rows}, {n_cols})"
+                + (" — the final chunk must be RAGGED, not padded "
+                   "(padding is the consumer's job so padded-row weights "
+                   "can be forced to 0)" if i == n_chunks - 1 else ""))
+        if not np.isfinite(raw).all():
+            raise ValueError(f"chunk_fn({i}) contains non-finite values")
+        if check_purity:
+            again = np.asarray(chunk_fn(i), np.float32)
+            if raw.shape != again.shape or not (raw == again).all():
+                raise ValueError(
+                    f"chunk_fn({i}) is not a pure function of i: two "
+                    "calls returned different rows (resume replay and "
+                    "process_slice sharding require bit-identical "
+                    "replays)")
+    return {"n_chunks": n_chunks, "last_rows": int(last_rows),
+            "checked": idx}
 
 
 class TokenPipeline:

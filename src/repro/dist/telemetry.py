@@ -68,6 +68,7 @@ class SuperstepTelemetry:
         self.warmup = int(warmup)
         self.exchange_timeout_s = float(exchange_timeout_s)
         self._speeds: Optional[np.ndarray] = None
+        self._phase_ema: dict = {}     # phase name -> (num_nodes,) seconds
         self._n_samples = 0
         # KV keys must be unique per (telemetry instance, superstep):
         # several solver sessions in one process each get their own space
@@ -77,14 +78,22 @@ class SuperstepTelemetry:
 
     # ------------------------------------------------------------ record
 
-    def record(self, step: int, tiles: int, seconds: float):
+    def record(self, step: int, tiles: int, seconds: float, phases=None):
         """Record THIS node's local work for superstep ``step`` and fold
         everyone's samples into the shared EMA.
+
+        ``phases`` optionally attributes the seconds to named superstep
+        phases (``{"stats": s1, "sweep": s2, "linesearch": s3}``) — the
+        attribution rides the same KV exchange and feeds
+        ``phase_breakdown()``; nodes may omit it (older callers send
+        2-element samples, which still parse).
 
         Collective: every process must call it once per superstep, in
         step order.  Single-process jobs skip the exchange.
         """
-        sample = json.dumps([int(tiles), float(seconds)])
+        if phases is not None:
+            phases = {str(k): float(v) for k, v in phases.items()}
+        sample = json.dumps([int(tiles), float(seconds), phases])
         if self.num_nodes > 1 and bootstrap.context().multiprocess:
             bootstrap.kv_set(f"{self._ns}/{step}/{self.node_id}", sample)
             samples = []
@@ -94,14 +103,20 @@ class SuperstepTelemetry:
                 samples.append(json.loads(raw))
         else:
             samples = [json.loads(sample)] * self.num_nodes
-        self.record_all(step,
-                        np.asarray([s[0] for s in samples], np.float64),
-                        np.asarray([s[1] for s in samples], np.float64))
+        self.record_all(
+            step,
+            np.asarray([s[0] for s in samples], np.float64),
+            np.asarray([s[1] for s in samples], np.float64),
+            phases=[s[2] if len(s) > 2 else None for s in samples])
 
-    def record_all(self, step: int, tiles: np.ndarray, seconds: np.ndarray):
+    def record_all(self, step: int, tiles: np.ndarray, seconds: np.ndarray,
+                   phases=None):
         """Fold a full per-node (tiles, seconds) sample into the EMA —
         the exchange-free entry point (single-process simulations, unit
-        tests, and the tail of ``record``)."""
+        tests, and the tail of ``record``).  ``phases`` is an optional
+        per-node list of phase→seconds dicts (None entries allowed)."""
+        if phases is not None:
+            self._fold_phases(phases)
         with np.errstate(divide="ignore", invalid="ignore"):
             sample = np.asarray(tiles, np.float64) / \
                 np.asarray(seconds, np.float64)
@@ -119,6 +134,31 @@ class SuperstepTelemetry:
         self._n_samples += 1
         self.history.append((int(step), None if self._speeds is None
                              else self._speeds.copy()))
+
+    def _fold_phases(self, phases):
+        """Blend per-node phase attributions into per-phase EMA seconds.
+
+        Same EMA constant and NaN-until-seen semantics as the speed
+        vector; a node that omits a phase (or the whole dict) leaves its
+        slot untouched."""
+        for node, attrib in enumerate(phases):
+            if not attrib or node >= self.num_nodes:
+                continue
+            for name, sec in attrib.items():
+                arr = self._phase_ema.setdefault(
+                    name, np.full((self.num_nodes,), np.nan))
+                old = arr[node]
+                arr[node] = sec if np.isnan(old) else \
+                    (1.0 - self.ema) * old + self.ema * float(sec)
+
+    def phase_breakdown(self) -> Optional[dict]:
+        """Per-phase EMA local-work seconds, keyed by phase name, one
+        entry per node (NaN = that node never attributed that phase).
+        None before any phase attribution arrived — phases are optional
+        on top of the speed telemetry, never required by it."""
+        if not self._phase_ema:
+            return None
+        return {k: v.copy() for k, v in self._phase_ema.items()}
 
     # ------------------------------------------------------------- query
 

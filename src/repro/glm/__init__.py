@@ -5,6 +5,7 @@
 session layer underneath.
 """
 from repro.glm.estimators import (ElasticNetGLM, LogisticRegressionCD,
-                                  PoissonRegressorCD)
+                                  MultinomialGLM, PoissonRegressorCD)
 
-__all__ = ["ElasticNetGLM", "LogisticRegressionCD", "PoissonRegressorCD"]
+__all__ = ["ElasticNetGLM", "LogisticRegressionCD", "MultinomialGLM",
+           "PoissonRegressorCD"]

@@ -28,6 +28,7 @@ fitted estimators predict identically (tests/test_serve.py).
 """
 from __future__ import annotations
 
+import os
 from typing import Optional
 
 import jax.numpy as jnp
@@ -36,6 +37,22 @@ import numpy as np
 from repro.core import glm
 from repro.core.dglmnet import DGLMNETConfig
 from repro.core.solver import GLMSolver
+
+
+def _resolve_source(X, y):
+    """``fit(path_or_reader, y=None)`` support: pull labels from the data
+    source itself (repro.io), returning the opened reader so the solver
+    streams from the same object instead of re-scanning the file."""
+    if y is not None:
+        return X, y
+    from repro import io as io_lib
+    if isinstance(X, (str, os.PathLike)):
+        X = io_lib.open_reader(X)
+    if not io_lib.is_reader(X):
+        raise ValueError(
+            "y=None is only valid when X is a path or a repro.io reader "
+            "that can supply its own labels")
+    return X, X.labels()
 
 
 class ElasticNetGLM:
@@ -103,7 +120,8 @@ class ElasticNetGLM:
             return y
         return np.asarray(y, np.float32)
 
-    def fit(self, X, y, *, sample_weight=None, offset=None):
+    def fit(self, X, y=None, *, sample_weight=None, offset=None):
+        X, y = _resolve_source(X, y)
         y_enc = self._encode_y(y)
         self.solver_ = GLMSolver(
             X, y_enc, family=self.family, config=self.config, mesh=self.mesh,
@@ -247,6 +265,138 @@ class LogisticRegressionCD(ElasticNetGLM):
         self._check_fitted()
         return float((self.predict(X, offset=offset)
                       == np.asarray(y)).mean())
+
+
+class MultinomialGLM:
+    """Elastic-net multinomial (softmax) classifier by exact class cycling.
+
+    The symmetric multinomial objective over K margin columns M = XB is
+    block-separable in the class columns: holding the others fixed, the
+    class-k subproblem is EXACTLY a binary logistic fit with labels
+    ỹ_i = ±1 (+1 iff y_i = k) and a fixed per-example margin offset
+    −a_ik, where a_ik = log Σ_{j≠k} exp(M_ij)  (so the subproblem margin
+    t = Xβ_k − a_ik reproduces the softmax loss term by term:
+    l_i = const + log(1 + exp(−ỹ_i t_i))).
+
+    That reduction means NO new compiled machinery: one logistic
+    ``GLMSolver`` session is built over the design, and each class visit
+    is a runtime (y, offset) swap (``set_observations``) plus a
+    warm-started ``fit`` — K classes share a single compile, and the
+    design (in-memory, block-sparse or file-backed streaming) is packed
+    once.  Outer cycles repeat until the multinomial objective stops
+    moving; each block minimization is exact, so the objective decreases
+    monotonically.
+
+    ``coef_`` is (p, K), ``intercept_`` (K,); ``predict`` returns labels
+    from ``classes_``, ``predict_proba`` the softmax matrix.  Accepts a
+    path / repro.io reader for X (``y=None`` pulls labels from the file).
+    """
+
+    def __init__(self, *, lam1: float = 1e-3, lam2: float = 0.0,
+                 fit_intercept: bool = True, standardize: bool = True,
+                 penalty_factor=None,
+                 config: Optional[DGLMNETConfig] = None,
+                 tile_size: int = 64, max_outer: int = 200,
+                 tol: float = 1e-10, max_cycles: int = 20,
+                 cycle_tol: float = 1e-6, **solver_kwargs):
+        self.lam1 = float(lam1)
+        self.lam2 = float(lam2)
+        self.fit_intercept = fit_intercept
+        self.standardize = standardize
+        self.penalty_factor = penalty_factor
+        self.config = config if config is not None else DGLMNETConfig(
+            tile_size=tile_size, max_outer=max_outer, tol=tol)
+        self.max_cycles = int(max_cycles)
+        self.cycle_tol = float(cycle_tol)
+        self.solver_kwargs = solver_kwargs
+
+    def _objective(self, yk, M, sw):
+        fam = glm.get_family("multinomial")
+        w = None if sw is None else jnp.asarray(sw)
+        loss = float(jnp.sum(fam.stats(
+            jnp.asarray(yk, jnp.float32), jnp.asarray(M), weights=w)[0]))
+        pen = sum(float(glm.penalty(jnp.asarray(self.coef_[:, k]),
+                                    self.lam1, self.lam2,
+                                    self.penalty_factor))
+                  for k in range(M.shape[1]))
+        return loss + pen
+
+    def fit(self, X, y=None, *, sample_weight=None):
+        X, y = _resolve_source(X, y)
+        y = np.asarray(y)
+        self.classes_ = np.unique(y)
+        K = len(self.classes_)
+        if K < 2:
+            raise ValueError(f"need >= 2 classes; got {self.classes_!r}")
+        yk = np.searchsorted(self.classes_, y).astype(np.int64)
+        n = yk.shape[0]
+
+        # one logistic session; y/offset are runtime arguments thereafter
+        self.solver_ = GLMSolver(
+            X, np.ones((n,), np.float32), family="logistic",
+            config=self.config, sample_weight=sample_weight,
+            standardize=self.standardize, fit_intercept=self.fit_intercept,
+            penalty_factor=self.penalty_factor, **self.solver_kwargs)
+        p = self.solver_._p_user
+
+        self.coef_ = np.zeros((p, K), np.float32)
+        self.intercept_ = np.zeros((K,), np.float32)
+        M = np.zeros((n, K), np.float32)
+        prev_obj = self._objective(yk, M, sample_weight)
+        self.n_cycles_ = 0
+        for cycle in range(self.max_cycles):
+            for k in range(K):
+                others = np.delete(M, k, axis=1)
+                a_k = np.logaddexp.reduce(others, axis=1).astype(np.float32)
+                y_pm = np.where(yk == k, 1.0, -1.0).astype(np.float32)
+                self.solver_.set_observations(y=y_pm, offset=-a_k)
+                self.solver_.fit(lam1=self.lam1, lam2=self.lam2,
+                                 beta0=self.coef_[:, k],
+                                 intercept0=float(self.intercept_[k]))
+                self.coef_[:, k] = self.solver_.beta_
+                self.intercept_[k] = self.solver_.intercept_
+                M[:, k] = self.solver_.training_margins()
+            self.n_cycles_ = cycle + 1
+            obj = self._objective(yk, M, sample_weight)
+            done = abs(prev_obj - obj) <= self.cycle_tol * max(
+                abs(prev_obj), 1.0)
+            prev_obj = obj
+            if done:
+                break
+        self.objective_ = prev_obj
+        return self
+
+    # ---------------------------------------------------------- prediction
+
+    def _check_fitted(self):
+        if getattr(self, "solver_", None) is None:
+            raise ValueError(f"{type(self).__name__} is not fitted yet; "
+                             "call fit(X, y) first")
+
+    def decision_function(self, X):
+        """(n, K) class margins XB + b0."""
+        self._check_fitted()
+        cols = [self.solver_.predict(X, beta=self.coef_[:, k],
+                                     intercept=float(self.intercept_[k]),
+                                     kind="link")
+                for k in range(self.coef_.shape[1])]
+        return np.stack(cols, axis=1)
+
+    def predict_proba(self, X):
+        """(n, K) softmax probabilities, columns ordered like
+        ``classes_``."""
+        m = self.decision_function(X)
+        fam = glm.get_family("multinomial")
+        return np.asarray(fam.predict(jnp.asarray(m)))
+
+    def predict(self, X):
+        m = self.decision_function(X)
+        return self.classes_[np.argmax(m, axis=1)]
+
+    def score(self, X, y):
+        """Accuracy on the original label encoding."""
+        self._check_fitted()
+        return float((self.predict(X) == np.asarray(y)).mean())
 
 
 class PoissonRegressorCD(ElasticNetGLM):

@@ -99,6 +99,19 @@ def glm_stats(y, xb, weights, family, offset=None):
     return fam.stats(y, xb, weights=weights, offset=offset)
 
 
+def multinomial_stats(y, margins, weights=None, offset=None):
+    """K-column oracle for the softmax family: margins are (n, K), labels
+    integer class ids, s and w come back (n, K) (loss stays (n,)).
+
+    There is no Pallas stats body for multinomial — ``ops.glm_stats``
+    falls back to this jnp path automatically, and the class-cycling
+    solver only ever needs the scalar logistic kernel anyway
+    (``glm/estimators.py`` MultinomialGLM).
+    """
+    fam = glm_lib.resolve_family("multinomial")
+    return fam.stats(y, margins, weights=weights, offset=offset)
+
+
 # ---------------------------------------------------------------------------
 # alpha_search: K-candidate line-search objective sweep in one data pass.
 # ---------------------------------------------------------------------------

@@ -11,6 +11,16 @@ Two modes sharing one entry point (DESIGN.md §9):
     synthetic design, optionally under an injected fault plan
     (``--faults "1:4.0"``) with telemetry-driven ALB (``--telemetry``).
 
+``--data FILE`` switches the worker to MULTI-PROCESS OUT-OF-CORE
+training (DESIGN.md §10): every process opens the same on-disk libsvm /
+Parquet source through ``repro.io``, claims its contiguous chunk range
+(``StreamingDesign.process_slice``), and drives the streaming superstep
+with its local chunks only — per-superstep (Gram, gradient, loss)
+partials are all-reduced across the process-spanning mesh, so no process
+ever materializes more than ``chunk_rows`` rows while the fit is exactly
+the single-host fit (``--nprocs 1`` on the same file is the parity
+baseline; ``benchmarks/ingest_bench.py`` asserts it).
+
 On a real cluster each node runs the worker directly with
 ``REPRO_DIST_COORD/NPROCS/PROCID`` set by the scheduler; the parent mode
 exists so the same command line works on a laptop.
@@ -19,6 +29,147 @@ import argparse
 import json
 import os
 import sys
+import time
+
+
+def _allreduce_sum(mesh, axis: str, flat_local):
+    """Sum one host (m,) float32 partial across every process of the
+    job, returning the replicated host result on each.
+
+    ``bootstrap.put_global`` cannot carry process-LOCAL values (its model
+    is every process presenting the same full array), so this builds the
+    global array the other way around — ``make_array_from_single_device_
+    arrays`` with each process contributing its own shard of a stacked
+    (nprocs, m) axis — and reduces it with a jitted sum whose output
+    sharding is fully replicated (the same collective pattern as
+    ``bootstrap.gather_to_host``).  Deterministic: XLA's all-reduce gives
+    every process bit-identical sums, which the SPMD driver relies on.
+    """
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    nshard = mesh.shape[axis]
+    if nshard == 1:
+        return np.asarray(flat_local, np.float32)
+    flat_local = np.asarray(flat_local, np.float32)
+    m = flat_local.shape[0]
+    sharding = NamedSharding(mesh, P(axis))
+    locals_ = [jax.device_put(flat_local, d)
+               for d in sharding.addressable_devices]
+    garr = jax.make_array_from_single_device_arrays(
+        (nshard * m,), sharding, locals_)
+    summed = jax.jit(
+        lambda a: jnp.sum(a.reshape(nshard, m), axis=0),
+        out_shardings=NamedSharding(mesh, P()))(garr)
+    return np.asarray(summed.addressable_data(0))
+
+
+def _worker_stream(args) -> int:
+    """Out-of-core multi-process worker: local chunk range + allreduce."""
+    import numpy as np
+    import jax.numpy as jnp
+    from repro.core.dglmnet import (DGLMNETConfig, FitState,
+                                    make_streaming_superstep)
+    from repro.dist import bootstrap, faults
+    from repro import io as io_lib
+
+    ctx = bootstrap.initialize()
+    mesh = bootstrap.make_dist_mesh()
+    axis = "model"
+
+    reader = io_lib.open_reader(args.data, chunk_rows=args.chunk_rows)
+    hasher = None
+    if args.hash_dim:
+        hasher = io_lib.FeatureHasher(args.hash_dim, tile_size=args.tile)
+    design, labels, reader = io_lib.open_design(
+        reader, tile_size=args.tile, hasher=hasher,
+        prefetch_chunks=2 if args.prefetch else 0)
+    local, rows = design.process_slice(ctx.process_id, ctx.num_processes)
+    n_loc = rows.stop - rows.start
+    n_pad = local.n_chunks * local.chunk_rows
+    y = np.pad(np.asarray(labels[rows], np.float32),
+               (0, n_pad - n_loc), constant_values=1.0)
+    w = np.pad(np.ones((n_loc,), np.float32), (0, n_pad - n_loc))
+    o = np.zeros((n_pad,), np.float32)
+
+    p_pad = local.shape[1]
+    cfg = DGLMNETConfig(tile_size=args.tile, max_outer=args.steps)
+    fns = make_streaming_superstep(cfg)
+    lams = jnp.asarray([args.lam1, args.lam2], jnp.float32)
+    active = jnp.ones((p_pad,), jnp.float32)
+    penf = jnp.ones((p_pad,), jnp.float32)
+    budget = jnp.full((1,), p_pad // args.tile, jnp.int32)
+    state = FitState(beta=jnp.zeros((p_pad,), jnp.float32),
+                     xb=jnp.zeros((0,), jnp.float32),
+                     mu=jnp.float32(cfg.mu_init),
+                     cursor=jnp.zeros((1,), jnp.int32),
+                     step=jnp.int32(0))
+
+    def row_slices(i):
+        sl = slice(i * local.chunk_rows, (i + 1) * local.chunk_rows)
+        return jnp.asarray(y[sl]), jnp.asarray(w[sl]), jnp.asarray(o[sl])
+
+    t0 = time.perf_counter()
+    f_prev, n_iter = None, 0
+    for it in range(args.steps):
+        acc = (jnp.zeros((p_pad, p_pad), jnp.float32),
+               jnp.zeros((p_pad,), jnp.float32), jnp.float32(0.0))
+        for i, Xc in local.iter_chunks():
+            yc, wc, oc = row_slices(i)
+            acc = fns.stats_chunk(Xc, yc, wc, oc, state.beta, acc)
+        # per-process partials -> global (Gram, gradient, loss): ONE
+        # flattened allreduce per superstep phase
+        flat = np.concatenate([np.asarray(acc[0]).ravel(),
+                               np.asarray(acc[1]),
+                               np.float32(acc[2]).reshape(1)])
+        red = _allreduce_sum(mesh, axis, flat)
+        acc = (jnp.asarray(red[:p_pad * p_pad].reshape(p_pad, p_pad)),
+               jnp.asarray(red[p_pad * p_pad:-1]),
+               jnp.float32(red[-1]))
+        prep = fns.prepare(acc, state.beta, state.mu, lams, active, penf,
+                           state.cursor, budget)
+        losses = jnp.zeros((fns.n_candidates,), jnp.float32)
+        for i, Xc in local.iter_chunks():
+            yc, wc, oc = row_slices(i)
+            losses = fns.ls_chunk(Xc, yc, wc, oc, state.beta,
+                                  prep["dbeta"], prep["cand"], losses)
+        losses = jnp.asarray(_allreduce_sum(mesh, axis,
+                                            np.asarray(losses)))
+        state, metrics = fns.finish(losses, prep, state, lams, penf)
+        n_iter = it + 1
+        f = float(metrics["f"])
+        if f_prev is not None and abs(f_prev - f) <= args.tol * max(
+                abs(f_prev), 1.0):
+            break
+        f_prev = f
+    wall = time.perf_counter() - t0
+
+    beta = np.asarray(state.beta)
+    if ctx.is_coordinator:
+        row = {
+            "mode": "stream", "data": str(args.data),
+            "num_processes": ctx.num_processes,
+            "rows": reader.n_rows, "features": reader.n_features,
+            "design_cols": p_pad, "chunks_local": local.n_chunks,
+            "chunk_rows": args.chunk_rows,
+            "hash_dim": args.hash_dim or None,
+            "prefetch": bool(args.prefetch),
+            "supersteps": n_iter, "f_final": f,
+            "nnz": int((np.abs(beta) > 1e-8).sum()),
+            "wall_s": round(wall, 3),
+            "rows_per_s": round(reader.n_rows * n_iter * 2 / max(
+                wall, 1e-9), 1),
+            "beta_head": [float(v) for v in beta[:8]],
+        }
+        blob = json.dumps(row)
+        print(blob)
+        if args.out:
+            with open(args.out, "w") as fh:
+                fh.write(blob)
+    faults.guarded_barrier("dist-run-stream-exit")
+    return 0
 
 
 def _worker(args) -> int:
@@ -81,10 +232,22 @@ def main() -> int:
     ap.add_argument("--telemetry", action="store_true",
                     help="drive ALB budgets from measured node speeds")
     ap.add_argument("--timeout", type=float, default=900.0)
+    ap.add_argument("--data", default="",
+                    help="libsvm(.gz)/Parquet file: multi-process "
+                    "out-of-core training over per-process chunk ranges")
+    ap.add_argument("--chunk-rows", type=int, default=4096,
+                    dest="chunk_rows")
+    ap.add_argument("--hash-dim", type=int, default=0, dest="hash_dim")
+    ap.add_argument("--lam2", type=float, default=0.0)
+    ap.add_argument("--tol", type=float, default=1e-8)
+    ap.add_argument("--prefetch", action=argparse.BooleanOptionalAction,
+                    default=True)
+    ap.add_argument("--out", default="",
+                    help="coordinator writes the result row here (JSON)")
     args = ap.parse_args()
 
     if os.environ.get("REPRO_DIST_PROCID") is not None or args.nprocs <= 1:
-        return _worker(args)
+        return _worker_stream(args) if args.data else _worker(args)
 
     from repro.dist import launcher
     forwarded, skip = [], False

@@ -227,3 +227,123 @@ def test_probit_tail_stability():
     assert np.isfinite(np.asarray(loss)).all()
     assert np.isfinite(np.asarray(s)).all()
     assert np.isfinite(np.asarray(w)).all()
+
+
+# ---------------------------------------------------------------------------
+# multinomial (softmax) family
+# ---------------------------------------------------------------------------
+
+
+def _mn_data(seed=0, n=48, k=4):
+    rng = np.random.default_rng(seed)
+    m = rng.normal(size=(n, k)).astype(np.float32)
+    y = rng.integers(0, k, n).astype(np.float32)
+    return y, m
+
+
+def test_multinomial_gradient_matches_autodiff():
+    """s = -dl/dM elementwise (softmax residual), via jax.grad on the
+    summed loss — the exact gradient the class-cycling solver consumes."""
+    y, m = _mn_data()
+    fam = glm.get_family("multinomial")
+    loss, s, w = fam.stats(jnp.asarray(y), jnp.asarray(m))
+
+    def total(mm):
+        return jnp.sum(fam.raw_stats(jnp.asarray(y), mm)[0])
+    g = jax.grad(total)(jnp.asarray(m))
+    np.testing.assert_allclose(np.asarray(s), -np.asarray(g),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_multinomial_gradient_matches_finite_differences():
+    """Same gradient against central finite differences in float64."""
+    y, m = _mn_data(seed=1, n=6, k=3)
+    fam = glm.get_family("multinomial")
+    _, s, _ = fam.stats(jnp.asarray(y), jnp.asarray(m))
+    s = np.asarray(s, np.float64)
+    m64 = m.astype(np.float64)
+
+    def total(mm):
+        lse = np.log(np.exp(mm).sum(axis=1))
+        pick = mm[np.arange(len(y)), y.astype(int)]
+        return float((lse - pick).sum())
+
+    eps = 1e-5
+    for i in range(m.shape[0]):
+        for j in range(m.shape[1]):
+            mp = m64.copy(); mp[i, j] += eps
+            mn = m64.copy(); mn[i, j] -= eps
+            fd = (total(mp) - total(mn)) / (2 * eps)
+            np.testing.assert_allclose(-s[i, j], fd, rtol=1e-3, atol=1e-6)
+
+
+def test_multinomial_curvature_bound_and_probs():
+    """w = p(1-p) ∈ (0, 1/4] matches softmax probabilities; the 1/4 bound
+    is the class-cycling subproblem's logistic curvature majorizer."""
+    y, m = _mn_data(seed=2)
+    fam = glm.get_family("multinomial")
+    _, s, w = fam.stats(jnp.asarray(y), jnp.asarray(m))
+    p = np.asarray(jax.nn.softmax(jnp.asarray(m), axis=-1))
+    np.testing.assert_allclose(np.asarray(w), p * (1 - p), rtol=1e-5,
+                               atol=1e-6)
+    assert float(np.max(np.asarray(w))) <= 0.25 + 1e-6
+    assert fam.curvature_bound == 0.25
+    # rows of s sum to zero: onehot - softmax
+    np.testing.assert_allclose(np.asarray(s).sum(axis=1), 0.0, atol=1e-5)
+
+
+def test_multinomial_weights_and_offset_semantics(rng):
+    """(n,) weights scale loss/s/w per EXAMPLE (broadcast over classes);
+    (n,) offsets shift every class margin, (n,K) offsets shift per class
+    — the class-cycling representation trains at per-class offsets."""
+    y, m = _mn_data(seed=3, n=16)
+    fam = glm.get_family("multinomial")
+    wobs = rng.uniform(0.5, 2.0, 16).astype(np.float32)
+    l0, s0, w0 = fam.stats(jnp.asarray(y), jnp.asarray(m))
+    l1, s1, w1 = fam.stats(jnp.asarray(y), jnp.asarray(m),
+                           weights=jnp.asarray(wobs))
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l0) * wobs,
+                               rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(s1),
+                               np.asarray(s0) * wobs[:, None], rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(w1),
+                               np.asarray(w0) * wobs[:, None], rtol=1e-5)
+    off_row = rng.normal(size=16).astype(np.float32)
+    la, _, _ = fam.stats(jnp.asarray(y), jnp.asarray(m),
+                         offset=jnp.asarray(off_row))
+    lb, _, _ = fam.stats(jnp.asarray(y),
+                         jnp.asarray(m + off_row[:, None]))
+    np.testing.assert_allclose(np.asarray(la), np.asarray(lb), rtol=1e-5)
+    off_full = rng.normal(size=m.shape).astype(np.float32)
+    lc, _, _ = fam.stats(jnp.asarray(y), jnp.asarray(m),
+                         offset=jnp.asarray(off_full))
+    ld, _, _ = fam.stats(jnp.asarray(y), jnp.asarray(m + off_full))
+    np.testing.assert_allclose(np.asarray(lc), np.asarray(ld), rtol=1e-5)
+
+
+def test_multinomial_deviance_and_margin_score():
+    """Deviance → 0 as the correct-class margin saturates; margin_score
+    is top-1 accuracy on (n, K) margins."""
+    y = jnp.asarray([0.0, 1.0, 2.0])
+    m_sat = 40.0 * jax.nn.one_hot(y.astype(jnp.int32), 3)
+    fam = glm.get_family("multinomial")
+    assert float(fam.deviance(y, m_sat)) < 1e-4
+    assert float(fam.deviance(y, jnp.zeros((3, 3)))) > 0.0
+    m = np.zeros((4, 3), np.float32)
+    m[0, 0] = m[1, 1] = m[2, 2] = 5.0   # 3 right
+    m[3, 0] = 5.0                       # 1 wrong (true class 1)
+    acc = glm.margin_score("multinomial", np.asarray([0, 1, 2, 1], np.float32), m)
+    assert abs(acc - 0.75) < 1e-9
+
+
+def test_multinomial_ops_ref_fallback():
+    """ops.glm_stats auto-falls back to the ref backend for multinomial
+    (no Pallas stats body) and matches fam.stats exactly."""
+    from repro.kernels import ops, ref
+
+    y, m = _mn_data(seed=4, n=32, k=3)
+    fam = glm.get_family("multinomial")
+    want = fam.stats(jnp.asarray(y), jnp.asarray(m))
+    got = ref.multinomial_stats(jnp.asarray(y), jnp.asarray(m))
+    for a, b in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
