@@ -35,16 +35,16 @@ def _bench_case(name, X, y, *, n_folds, n_lambdas, lam_ratio, tile_size,
     cfg = DGLMNETConfig(tile_size=tile_size, coupling=coupling,
                         max_outer=max_outer, tol=tol)
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     solver = GLMSolver(X, y, config=cfg, fit_intercept=True,
                        standardize=True)
-    setup_s = time.time() - t0
+    setup_s = time.perf_counter() - t0
 
     c0 = solver.compile_count
-    t0 = time.time()
+    t0 = time.perf_counter()
     cv = solver.fit_cv(n_folds=n_folds, n_lambdas=n_lambdas,
                        lam_ratio=lam_ratio)
-    cv_s = time.time() - t0
+    cv_s = time.perf_counter() - t0
     compiles = solver.compile_count - c0
 
     # naive baseline: a fresh session per fold (the historical cost of CV
@@ -58,18 +58,18 @@ def _bench_case(name, X, y, *, n_folds, n_lambdas, lam_ratio, tile_size,
     rng = np.random.default_rng(0)
     fold_of = rng.permuted(np.arange(n) % n_folds)
     traces0 = sum(solver_mod._TRACE_COUNTS.values())
-    t0 = time.time()
+    t0 = time.perf_counter()
     naive_setup_s = 0.0
     for fold in range(-1, n_folds):          # -1 = the full-data path
         tr = np.ones((n,), bool) if fold < 0 else fold_of != fold
-        ts = time.time()
+        ts = time.perf_counter()
         Xf = X[tr] if isinstance(X, np.ndarray) else X.take_rows(
             np.flatnonzero(tr))
         sf = GLMSolver(Xf, y[tr], config=cfg, fit_intercept=True,
                        standardize=True)
-        naive_setup_s += time.time() - ts
+        naive_setup_s += time.perf_counter() - ts
         sf.fit_path(lambdas=cv.lambdas)
-    naive_s = time.time() - t0
+    naive_s = time.perf_counter() - t0
     naive_compiles = sum(solver_mod._TRACE_COUNTS.values()) - traces0
 
     return {

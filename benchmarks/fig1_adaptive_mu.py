@@ -5,13 +5,12 @@ dramatically improves sparsity.  We reproduce on the clickstream-like
 dataset (the paper used yandex_ad)."""
 from __future__ import annotations
 
-import time
-
 import numpy as np
 
 from repro.core import dglmnet
 from repro.core.dglmnet import DGLMNETConfig
 from repro.data import synthetic
+from repro.timing import timed
 
 
 def run():
@@ -26,9 +25,7 @@ def run():
         cfg = DGLMNETConfig(lam1=lam1, lam2=0.0, tile_size=16,
                             coupling="jacobi", adaptive_mu=adaptive,
                             max_outer=40, tol=0.0)
-        t0 = time.time()
-        res = dglmnet.fit(X, y, cfg)
-        dt = time.time() - t0
+        res, dt = timed(dglmnet.fit, X, y, cfg)
         rows.append({
             "variant": "adaptive_mu" if adaptive else "constant_mu",
             "f_final": res.history["f"][-1],

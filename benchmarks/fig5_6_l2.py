@@ -2,14 +2,13 @@
 (Agarwal et al. Algorithm 2 — the paper's L2 competitor)."""
 from __future__ import annotations
 
-import time
-
 from benchmarks import datasets
 from repro.baselines.lbfgs import LBFGSConfig, fit_online_warmstart_lbfgs
 from repro.baselines.online_tg import OnlineTGConfig
 from repro.core import dglmnet, prox_ref
 from repro.core.dglmnet import DGLMNETConfig
 from repro.data.sparse import to_dense_blocks
+from repro.timing import timed
 
 LAM2 = 1.0
 
@@ -25,20 +24,19 @@ def run():
                                      max_iter=3000)
         f_star = hist[-1]
 
-        t0 = time.time()
-        res = dglmnet.fit(X, y, DGLMNETConfig(
+        res, dglm_s = timed(dglmnet.fit, X, y, DGLMNETConfig(
             lam1=0.0, lam2=LAM2, tile_size=256, coupling="jacobi",
             adaptive_mu=False, max_outer=25, tol=0.0))
         rows.append({"dataset": ds_name, "algo": "d-GLMNET",
                      "subopt": (res.history["f"][-1] - f_star) / abs(f_star),
                      "iters": len(res.history["f"]),
-                     "wall_s": time.time() - t0})
+                     "wall_s": dglm_s})
 
-        t0 = time.time()
-        _, h = fit_online_warmstart_lbfgs(
+        (_, h), lbfgs_s = timed(
+            fit_online_warmstart_lbfgs,
             X, y, LBFGSConfig(lam2=LAM2, max_iter=25),
             OnlineTGConfig(lam1=0.0, lam2=LAM2, epochs=2, lr=0.3))
         rows.append({"dataset": ds_name, "algo": "online+L-BFGS",
                      "subopt": (h["f"][-1] - f_star) / abs(f_star),
-                     "iters": len(h["f"]), "wall_s": time.time() - t0})
+                     "iters": len(h["f"]), "wall_s": lbfgs_s})
     return {"figure": "fig5_6_l2", "rows": rows}

@@ -57,6 +57,7 @@ def run():
     y = jnp.asarray(rng.choice([-1.0, 1.0], n).astype(np.float32))
     xb = jnp.asarray(rng.normal(size=n).astype(np.float32))
     for fam in ("logistic", "probit"):
+        # lint: allow JIT001 — one jit per benched config; timeit warms it
         stats = jax.jit(lambda y, xb, f=fam: ops.glm_stats(
             y, xb, f, backend="ref"))
         bench(f"glm_stats_{fam}_n{n}", stats, y, xb)
@@ -84,6 +85,7 @@ def run():
         bricks = jnp.asarray(
             rng.normal(size=(nb, rb, T)).astype(np.float32))
         brick_rows = jnp.asarray(np.arange(nb, dtype=np.int32) % n_rb)
+        # lint: allow JIT001 — one jit per benched occupancy; timeit warms it
         tg = jax.jit(lambda b, r, nv, w2, r2: ops.tile_gram(
             b, r, nv, w2, r2, backend="ref"))
         bench(f"tile_gram_bricks_T{T}_occ{occ:g}", tg,

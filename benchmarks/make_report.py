@@ -146,6 +146,8 @@ def benchmarks_section() -> str:
         return ""
     out = ["## Benchmarks", ""]
     for f in sorted(BENCH_RESULTS.glob("*.json")):
+        if f.name == "analysis.json":      # rendered by analysis_section
+            continue
         rec = json.loads(f.read_text())
         rows = rec.get("rows", [])
         if not rows:
@@ -153,6 +155,37 @@ def benchmarks_section() -> str:
         out.append(bench_table(rec.get("figure", f.stem), rows))
         out.append("")
     return "\n".join(out) if len(out) > 2 else ""
+
+
+def analysis_section() -> str:
+    """§Static analysis: the lint/audit gate state, from the summary that
+    ``python -m repro.analysis --check --audit --json …`` writes."""
+    f = BENCH_RESULTS / "analysis.json"
+    if not f.exists():
+        return ""
+    rec = json.loads(f.read_text())
+    audit = rec.get("audit", {})
+    n_ok = sum(1 for r in audit.values() if r.get("status") == "ok")
+    n_fail = len(audit) - n_ok
+    lines = [
+        "## Static analysis (lint & audit gate)",
+        "",
+        "| files scanned | rules | findings | new | baselined | "
+        "audits ok | audits failed |",
+        "|---|---|---|---|---|---|---|",
+        f"| {rec.get('files_scanned', '—')} | {len(rec.get('rules', []))} "
+        f"| {rec.get('violations_total', '—')} "
+        f"| {rec.get('violations_new', '—')} "
+        f"| {rec.get('violations_baselined', '—')} "
+        f"| {n_ok if audit else '—'} | {n_fail if audit else '—'} |",
+    ]
+    by_code = rec.get("by_code", {})
+    if by_code:
+        lines += ["", "Baselined/waived findings by rule: "
+                  + ", ".join(f"{c}={n}" for c, n in sorted(by_code.items()))
+                  + "  (every entry carries a reason in "
+                  "`src/repro/analysis/baseline.json`; see DESIGN.md §11)"]
+    return "\n".join(lines)
 
 
 def main():
@@ -165,6 +198,9 @@ def main():
         print(roofline_table(recs, mesh_tag))
         print()
     section = benchmarks_section()
+    if section:
+        print(section)
+    section = analysis_section()
     if section:
         print(section)
 

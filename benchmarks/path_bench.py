@@ -110,36 +110,36 @@ def _bench_case(name, X, y, *, n_lambdas, lam_ratio, tile_size, coupling,
     cfg = DGLMNETConfig(tile_size=tile_size, coupling=coupling,
                         max_outer=max_outer, tol=tol, fuse_superstep=fused)
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     solver = GLMSolver(X, y, config=cfg)
-    setup_s = time.time() - t0
+    setup_s = time.perf_counter() - t0
 
     # one-time compiles (superstep + gradient/screening kernels) — charged
     # to neither loop so the warm/cold comparison is steady-state amortized
-    t0 = time.time()
+    t0 = time.perf_counter()
     solver.fit(lam1=solver.lambda_max() * 2.0, max_outer=1)
-    compile_s = time.time() - t0
+    compile_s = time.perf_counter() - t0
 
     ls0 = dict(solver.launch_stats)
-    t0 = time.time()
+    t0 = time.perf_counter()
     path = solver.fit_path(n_lambdas=n_lambdas, lam_ratio=lam_ratio)
-    warm_s = time.time() - t0
+    warm_s = time.perf_counter() - t0
     launch_stats = {k: solver.launch_stats[k] - ls0[k] for k in ls0}
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     cold_iters = 0
     for lam1 in path.lambdas:
         cold_iters += solver.fit(lam1=float(lam1), lam2=0.0).n_iter
-    cold_session_s = time.time() - t0
+    cold_session_s = time.perf_counter() - t0
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     with warnings.catch_warnings():
         warnings.simplefilter("ignore", DeprecationWarning)
         for lam1 in path.lambdas:
             dglmnet.fit(X, y, DGLMNETConfig(
                 lam1=float(lam1), tile_size=tile_size, coupling=coupling,
                 max_outer=max_outer, tol=tol, fuse_superstep=fused))
-    cold_oneshot_s = time.time() - t0
+    cold_oneshot_s = time.perf_counter() - t0
 
     n, p = X.shape
     return {

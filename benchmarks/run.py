@@ -57,10 +57,10 @@ def main() -> None:
     print("name,us_per_call,derived")
     ok = True
     for name in wanted:
-        t0 = time.time()
+        t0 = time.perf_counter()
         try:
             res = figures[name]()
-            wall_us = (time.time() - t0) * 1e6
+            wall_us = (time.perf_counter() - t0) * 1e6
             if name == "kernels":
                 for r in res["rows"]:
                     # evidence-only rows (launch targets) carry no timing

@@ -1,0 +1,19 @@
+"""repro.analysis — SPMD-safety linter + compiled-artifact auditor.
+
+The stack's correctness rests on invariants no unit test pins directly:
+collectives outside process-local control flow (DIST002), placement via
+``put_global`` on spanning meshes (DIST001), λ as a runtime argument so one
+compile serves a whole path (JIT001), durations via ``repro.timing``
+(SYNC001), process-stable hashing in io/ (HASH001), fp32 accumulators
+under bf16 matmuls (PREC001).  This package turns them into a CI gate:
+
+* ``python -m repro.analysis --check``  — AST lint over src/repro +
+  benchmarks, baseline-ratcheted (see lint.py);
+* ``python -m repro.analysis --audit``  — trace-level audit: launch counts
+  (fused superstep = 2), collective-sequence consistency, BlockSpec VMEM
+  budgets, zero steady-state recompiles (see audit.py).
+
+Rule docs: ``repro-lint --explain DIST002`` or DESIGN.md §11.
+"""
+from repro.analysis.astutil import Violation  # noqa: F401
+from repro.analysis.lint import lint_paths, lint_text, main  # noqa: F401

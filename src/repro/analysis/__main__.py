@@ -1,0 +1,5 @@
+"""``python -m repro.analysis`` — see lint.py for flags."""
+from repro.analysis.lint import main
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,18 @@
+"""Rule registry for the repro linter.
+
+Each rule is a class with ``CODE`` / ``TITLE`` / ``DOC`` and a
+``check(ctx: FileContext) -> Iterator[Violation]`` method.  Rules are pure
+stdlib-``ast`` visitors — no jax imports — so the linter runs anywhere.
+Add new rules here and document them in DESIGN.md §11.
+"""
+from __future__ import annotations
+
+from repro.analysis.rules.dist_rules import Dist001, Dist002
+from repro.analysis.rules.hash_rules import Hash001
+from repro.analysis.rules.jit_rules import Jit001
+from repro.analysis.rules.prec_rules import Prec001
+from repro.analysis.rules.sync_rules import Sync001
+
+ALL_RULES = (Dist001(), Dist002(), Sync001(), Jit001(), Hash001(), Prec001())
+
+RULES_BY_CODE = {r.CODE: r for r in ALL_RULES}

@@ -1,0 +1,150 @@
+"""DIST001 / DIST002 — SPMD placement and deadlock rules.
+
+These encode the two invariants multi-process training (repro.dist, PR 7)
+actually died on during bring-up: device placement that silently works on
+one process but wedges on a process-spanning mesh, and collectives gated
+on process-local state so the per-process programs diverge and every peer
+hangs in ``guarded_barrier`` until timeout.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.astutil import FileContext, dotted_name
+
+# Collective / rendezvous entry points: every process in the job must
+# execute these the same number of times in the same order.
+COLLECTIVE_CALLS = {
+    "barrier", "guarded_barrier", "wait_at_barrier",
+    "kv_set", "kv_get", "gather_to_host",
+    "psum", "psum_compressed", "pmean", "pmax", "pmin",
+    "all_gather", "all_to_all", "ppermute",
+}
+
+# Names whose value differs per process.  Deliberately NOT included:
+# ``multiprocess`` / ``num_processes`` (uniform across the job — gating on
+# them is the sanctioned pattern) and plain ``rank``-free config reads.
+PROCESS_LOCAL_MARKERS = {
+    "process_index", "process_id", "is_coordinator", "node_id",
+    "getpid", "process_count_is_me",  # defensive: any future helper
+}
+
+
+class Dist001:
+    CODE = "DIST001"
+    TITLE = "bare device placement in dist-capable module"
+    DOC = (
+        "Modules that can run under a process-spanning mesh must place "
+        "arrays with dist.bootstrap.put_global, not jax.device_put / "
+        "jnp.asarray(device=...).  A bare device_put of a host array onto "
+        "a sharding whose devices span processes hangs: each process only "
+        "holds its addressable shard, and the runtime waits for the rest.  "
+        "put_global builds the array from per-process local shards "
+        "(make_array_from_callback) and degrades to device_put only on "
+        "single-process meshes.  Waive sanctioned sites (the put_global "
+        "implementation itself, restores onto explicitly local devices) "
+        "with `# lint: allow DIST001 — reason`."
+    )
+
+    @staticmethod
+    def _dist_capable(ctx: FileContext) -> bool:
+        p = ctx.relpath.replace("\\", "/")
+        if "/dist/" in p or "/checkpoint/" in p:
+            return True
+        return ctx.imports("repro.dist") or ctx.imports("repro.dist.bootstrap")
+
+    def check(self, ctx: FileContext):
+        if not self._dist_capable(ctx):
+            return
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = dotted_name(node.func)
+            if name == "jax.device_put" or name.endswith(".device_put") \
+                    or name == "device_put":
+                yield ctx.violation(
+                    self.CODE, node,
+                    "bare jax.device_put in a dist-capable module — use "
+                    "dist.bootstrap.put_global (hangs on process-spanning "
+                    "meshes) or waive with a comment if the target devices "
+                    "are provably process-local")
+            elif name.endswith("asarray") or name.endswith(".array"):
+                kw = {k.arg for k in node.keywords}
+                if "device" in kw or "sharding" in kw:
+                    yield ctx.violation(
+                        self.CODE, node,
+                        f"{name}(device=...) places on a device directly — "
+                        "use dist.bootstrap.put_global for mesh placement")
+
+
+class Dist002:
+    CODE = "DIST002"
+    TITLE = "collective reachable under process-local control flow"
+    DOC = (
+        "barrier/kv_set/kv_get/psum/gather_to_host must execute on every "
+        "process, in the same order.  An `if ctx.is_coordinator:` (or any "
+        "test derived from process_index()/host-local state) around a "
+        "collective means peers wait forever — the paper's synchronous "
+        "merge step deadlocks.  The sanctioned pattern: branch on "
+        "process-local state for the *side effect* (write the file, print "
+        "the line) and keep the collective OUTSIDE the branch, as "
+        "checkpoint/manager.py does.  Early returns under process-local "
+        "tests are equally fatal when a collective follows later in the "
+        "same function."
+    )
+
+    @staticmethod
+    def _process_local(test: ast.expr) -> bool:
+        for sub in ast.walk(test):
+            if isinstance(sub, (ast.Name, ast.Attribute)):
+                tail = dotted_name(sub).rsplit(".", 1)[-1]
+                if tail in PROCESS_LOCAL_MARKERS:
+                    return True
+        return False
+
+    @staticmethod
+    def _collectives_in(nodes) -> list:
+        out = []
+        for stmt in nodes:
+            for sub in ast.walk(stmt):
+                if isinstance(sub, ast.Call):
+                    tail = dotted_name(sub.func).rsplit(".", 1)[-1]
+                    if tail in COLLECTIVE_CALLS:
+                        out.append((sub, tail))
+        return out
+
+    def check(self, ctx: FileContext):
+        ifs = [n for n in ast.walk(ctx.tree) if isinstance(n, ast.If)
+               and self._process_local(n.test)]
+        for if_node in ifs:
+            # (a) a collective inside either branch of the conditional
+            for call, tail in self._collectives_in(if_node.body
+                                                   + if_node.orelse):
+                yield ctx.violation(
+                    self.CODE, call,
+                    f"collective `{tail}` under a process-local "
+                    "conditional — peers that don't take this branch "
+                    "will hang; hoist the collective out of the branch")
+            # (b) divergent early exit: the branch returns/raises, and a
+            # collective appears later in the innermost enclosing function
+            exits = [s for s in if_node.body
+                     if isinstance(s, (ast.Return, ast.Raise,
+                                       ast.Continue, ast.Break))]
+            enclosing = ctx.enclosing_functions(if_node)
+            if not exits or not enclosing:
+                continue
+            fn = enclosing[0]
+            later = [s for s in ast.walk(fn)
+                     if isinstance(s, ast.Call)
+                     and getattr(s, "lineno", 0) > if_node.body[-1].lineno
+                     and dotted_name(s.func).rsplit(".", 1)[-1]
+                     in COLLECTIVE_CALLS]
+            if later:
+                tails = {dotted_name(s.func).rsplit(".", 1)[-1]
+                         for s in later}
+                yield ctx.violation(
+                    self.CODE, exits[0],
+                    "early exit under a process-local conditional while "
+                    f"collectives ({', '.join(sorted(tails))}) follow in "
+                    "the same function — exiting processes skip the "
+                    "rendezvous and peers hang")

@@ -1,0 +1,91 @@
+"""JIT001 — recompile hazards against the one-compile session contract.
+
+PR 2's contract: ONE compiled superstep serves a whole λ-path — λ, fold
+masks, weights, offsets and penalty factors are RUNTIME arguments.  Two
+ways code re-breaks that:
+
+* reading ``config.lam1`` / ``config.lam2`` inside a jit-traced closure
+  (superstep builders, jitted functions) bakes λ into the trace, so every
+  λ-grid point recompiles;
+* constructing ``jax.jit(...)`` inside a loop builds a fresh closure per
+  iteration, which never hits the trace cache.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.astutil import FileContext, dotted_name
+
+# Config fields that the PR 2 contract moved to runtime arguments.
+RUNTIME_ONLY_FIELDS = {"lam1", "lam2"}
+
+_BUILDER_MARKER = "superstep"
+
+
+class Jit001:
+    CODE = "JIT001"
+    TITLE = "trace-baked runtime arg / jit constructed per iteration"
+    DOC = (
+        "Inside jit-traced code (functions decorated/wrapped with jax.jit, "
+        "or closures defined inside make_*superstep builders), reading "
+        "config.lam1/config.lam2 bakes λ into the compiled artifact and "
+        "every path point pays a re-trace — pass λ through the `lams` "
+        "runtime array instead.  jax.jit(...) called inside a loop creates "
+        "a fresh uncached closure per iteration."
+    )
+
+    @staticmethod
+    def _is_jit_decorated(fn: ast.AST) -> bool:
+        for dec in getattr(fn, "decorator_list", []):
+            target = dec.func if isinstance(dec, ast.Call) else dec
+            name = dotted_name(target)
+            if name.endswith("jit"):
+                return True
+            # functools.partial(jax.jit, ...) style
+            if isinstance(dec, ast.Call) and name.endswith("partial") \
+                    and dec.args and dotted_name(dec.args[0]).endswith("jit"):
+                return True
+        return False
+
+    def _jit_contexts(self, ctx: FileContext):
+        """FunctionDefs whose body is traced: jit-decorated, or defined
+        inside a superstep builder (make_superstep/make_streaming_superstep
+        return closures the solver jits)."""
+        for fn in ast.walk(ctx.tree):
+            if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            if self._is_jit_decorated(fn):
+                yield fn
+                continue
+            enclosing = ctx.enclosing_functions(fn)
+            if any(_BUILDER_MARKER in e.name and e.name.startswith("make_")
+                   for e in enclosing):
+                yield fn
+
+    def check(self, ctx: FileContext):
+        seen: set = set()
+        for fn in self._jit_contexts(ctx):
+            for node in ast.walk(fn):
+                if isinstance(node, ast.Attribute) \
+                        and node.attr in RUNTIME_ONLY_FIELDS \
+                        and id(node) not in seen:
+                    seen.add(id(node))
+                    yield ctx.violation(
+                        self.CODE, node,
+                        f"`.{node.attr}` read inside a jit-traced closure "
+                        "bakes λ into the compile — the one-compile session "
+                        "contract (PR 2) passes λ via the `lams` runtime "
+                        "array")
+        for loop in ast.walk(ctx.tree):
+            if not isinstance(loop, (ast.For, ast.While)):
+                continue
+            for node in ast.walk(loop):
+                if isinstance(node, ast.Call) \
+                        and dotted_name(node.func).endswith("jax.jit") \
+                        and id(node) not in seen:
+                    seen.add(id(node))
+                    yield ctx.violation(
+                        self.CODE, node,
+                        "jax.jit(...) constructed inside a loop — each "
+                        "iteration builds a fresh closure that misses the "
+                        "trace cache; hoist the jit out of the loop")

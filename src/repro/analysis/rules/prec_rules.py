@@ -1,0 +1,98 @@
+"""PREC001 — bf16 matmul without an fp32 accumulator.
+
+The mixed-precision superstep (PR 6) keeps fp32 masters and casts matmul
+*inputs* to bf16; correctness rests on every such matmul pinning
+``preferred_element_type=jnp.float32`` so the MXU accumulates in fp32.  A
+bf16 matmul without it accumulates in bf16 (8-bit mantissa): Gram matrices
+lose positive-definiteness and Armijo sums drift.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.astutil import FileContext, dotted_name
+
+MATMUL_CALLS = {"dot", "matmul", "einsum", "tensordot", "dot_general"}
+
+
+def _is_bf16_cast(node: ast.AST) -> bool:
+    """x.astype(jnp.bfloat16) / x.astype('bfloat16') / asarray(..., bf16)."""
+    if not isinstance(node, ast.Call):
+        return False
+    if isinstance(node.func, ast.Attribute) and node.func.attr == "astype":
+        args = list(node.args) + [k.value for k in node.keywords]
+        return any(_names_bf16(a) for a in args)
+    name = dotted_name(node.func)
+    if name.endswith("asarray") or name.endswith(".array"):
+        args = list(node.args[1:]) + [k.value for k in node.keywords
+                                      if k.arg in (None, "dtype")]
+        return any(_names_bf16(a) for a in args)
+    return False
+
+
+def _names_bf16(node: ast.AST) -> bool:
+    if isinstance(node, ast.Constant) and node.value == "bfloat16":
+        return True
+    return dotted_name(node).endswith("bfloat16")
+
+
+class Prec001:
+    CODE = "PREC001"
+    TITLE = "bf16 matmul operand without preferred_element_type=fp32"
+    DOC = (
+        "bf16 matmul inputs need preferred_element_type=jnp.float32 to "
+        "keep MXU accumulation in fp32 — without it the product "
+        "accumulates in bf16 and the Gram/margin sums the line search "
+        "trusts are wrong at tile sizes the tests never reach.  Applies "
+        "to jnp.dot/matmul/einsum/tensordot, lax.dot_general, and the "
+        "`@` operator (which cannot express an accumulator type: use "
+        "jnp.matmul instead when an operand is bf16)."
+    )
+
+    def check(self, ctx: FileContext):
+        seen = set()   # scopes nest (module ⊃ def ⊃ def): report each once
+        for fn in ast.walk(ctx.tree):
+            if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                   ast.Module)):
+                continue
+            # first pass: names bound to bf16 casts in this scope
+            bf16_names = set()
+            for node in ast.iter_child_nodes(fn):
+                for stmt in ast.walk(node):
+                    if isinstance(stmt, ast.Assign) \
+                            and _is_bf16_cast(stmt.value):
+                        for tgt in stmt.targets:
+                            if isinstance(tgt, ast.Name):
+                                bf16_names.add(tgt.id)
+
+            def is_bf16(expr):
+                return _is_bf16_cast(expr) or (
+                    isinstance(expr, ast.Name) and expr.id in bf16_names)
+
+            for node in ast.walk(fn):
+                if isinstance(node, ast.Call):
+                    name = dotted_name(node.func)
+                    if name.rsplit(".", 1)[-1] not in MATMUL_CALLS:
+                        continue
+                    if not any(is_bf16(a) for a in node.args):
+                        continue
+                    kwargs = {k.arg for k in node.keywords}
+                    if "preferred_element_type" not in kwargs \
+                            and id(node) not in seen:
+                        seen.add(id(node))
+                        yield ctx.violation(
+                            self.CODE, node,
+                            f"{name}() with a bf16 operand but no "
+                            "preferred_element_type — accumulation drops "
+                            "to bf16; pin preferred_element_type="
+                            "jnp.float32")
+                elif isinstance(node, ast.BinOp) \
+                        and isinstance(node.op, ast.MatMult):
+                    if (is_bf16(node.left) or is_bf16(node.right)) \
+                            and id(node) not in seen:
+                        seen.add(id(node))
+                        yield ctx.violation(
+                            self.CODE, node,
+                            "`@` with a bf16 operand cannot pin an fp32 "
+                            "accumulator — use jnp.matmul(..., "
+                            "preferred_element_type=jnp.float32)")

@@ -1,0 +1,124 @@
+"""SYNC001 — hidden host synchronization in hot paths.
+
+jax dispatch is asynchronous: a superstep call returns device futures, and
+the computation overlaps with Python.  Two ways code silently throws that
+overlap away:
+
+* ``time.time()`` spans around dispatch measure *enqueue* latency, not
+  compute — repro.timing (``timed``/``timeit``) blocks on the result and
+  uses ``perf_counter``.  A bare ``time.time()`` is only legitimate as a
+  wall-clock *timestamp* (checkpoint metadata), never as a duration.
+* per-iteration ``float(x)`` / ``np.asarray(x)`` / ``x.item()`` readbacks
+  of device values inside a dispatch loop each force a blocking
+  device→host sync.  One ``jax.device_get(metrics)`` per iteration batches
+  every scalar into a single transfer (and values read from that host copy
+  are free).
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.astutil import (FileContext, assigned_names, base_name,
+                                    dotted_name)
+
+SYNC_READERS = {"float", "int", "bool"}
+SYNC_READER_DOTTED = {"np.asarray", "np.array", "numpy.asarray",
+                      "numpy.array", "onp.asarray"}
+
+# Callees whose results live on the host — assignments from these never
+# taint their targets as device values.
+HOST_PRODUCERS = {
+    "jax.device_get", "device_get", "float", "int", "bool", "str", "len",
+    "range", "enumerate", "zip", "list", "dict", "tuple", "set", "sorted",
+    "min", "max", "sum", "abs", "round", "repr", "format", "open",
+    "time.time", "time.perf_counter", "time.monotonic",
+    "np.asarray", "np.array", "numpy.asarray", "numpy.array",
+    "json.dumps", "json.loads", "copy.deepcopy",
+}
+
+# Method names whose call results are host values regardless of receiver
+# (string/dict/file plumbing) — assignments from these don't taint.
+HOST_METHOD_TAILS = {
+    "partition", "rpartition", "split", "rsplit", "strip", "lstrip",
+    "rstrip", "splitlines", "join", "format", "decode", "encode", "lower",
+    "upper", "replace", "read", "readline", "readlines", "group", "groups",
+    "items", "keys", "values", "tolist", "copy",
+}
+
+
+class Sync001:
+    CODE = "SYNC001"
+    TITLE = "hidden host sync (time.time span or per-iteration readback)"
+    DOC = (
+        "Durations must come from repro.timing (block_until_ready + "
+        "perf_counter); time.time() around async dispatch measures enqueue "
+        "latency.  Inside a loop that dispatches device work, multiple "
+        "float()/np.asarray()/.item() reads of the dispatched result each "
+        "block the pipe — batch them through one jax.device_get per "
+        "iteration.  Waive true wall-clock timestamps with "
+        "`# lint: allow SYNC001 — timestamp`."
+    )
+
+    def check(self, ctx: FileContext):
+        yield from self._check_time_time(ctx)
+        yield from self._check_loop_readbacks(ctx)
+
+    def _check_time_time(self, ctx: FileContext):
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.Call) \
+                    and dotted_name(node.func) == "time.time":
+                yield ctx.violation(
+                    self.CODE, node,
+                    "time.time() span — use time.perf_counter() or "
+                    "repro.timing.timed/timeit (async dispatch makes "
+                    "time.time() spans measure enqueue, not compute); "
+                    "wall-clock timestamps get an inline waiver")
+
+    def _check_loop_readbacks(self, ctx: FileContext):
+        seen = set()   # loops nest; report each site cluster once
+        for loop in ast.walk(ctx.tree):
+            if not isinstance(loop, (ast.For, ast.While)):
+                continue
+            # names assigned inside the loop from non-host calls: these are
+            # (potentially) device values whose readback blocks
+            device_names: set = set()
+            for stmt in ast.walk(loop):
+                if isinstance(stmt, ast.Assign) \
+                        and isinstance(stmt.value, ast.Call):
+                    callee = dotted_name(stmt.value.func)
+                    tail = callee.rsplit(".", 1)[-1]
+                    if callee in HOST_PRODUCERS or tail in HOST_PRODUCERS \
+                            or (isinstance(stmt.value.func, ast.Attribute)
+                                and tail in HOST_METHOD_TAILS):
+                        continue
+                    for tgt in stmt.targets:
+                        device_names.update(assigned_names(tgt))
+            if not device_names:
+                continue
+            sites = []
+            for node in ast.walk(loop):
+                if not isinstance(node, ast.Call):
+                    continue
+                callee = dotted_name(node.func)
+                if callee in SYNC_READERS or callee in SYNC_READER_DOTTED:
+                    if node.args and base_name(node.args[0]) in device_names:
+                        sites.append((node, callee))
+                elif isinstance(node.func, ast.Attribute) \
+                        and node.func.attr == "item" and not node.args:
+                    if base_name(node.func.value) in device_names:
+                        sites.append((node, ".item()"))
+            # One sync per iteration (a convergence check) is the sanctioned
+            # pattern; two or more means scalars should batch through a
+            # single device_get.
+            if len(sites) >= 2 and id(sites[0][0]) not in seen:
+                seen.add(id(sites[0][0]))
+                names = sorted({base_name(s.args[0]) if s.args
+                                else base_name(s.func.value)
+                                for s, _ in sites if True})
+                node = sites[0][0]
+                yield ctx.violation(
+                    self.CODE, node,
+                    f"{len(sites)} blocking host readbacks of dispatched "
+                    f"values ({', '.join(n for n in names if n)}) per loop "
+                    "iteration — fetch once with jax.device_get(...) and "
+                    "read the host copy")

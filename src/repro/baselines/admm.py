@@ -117,7 +117,9 @@ def fit_admm(X, y, cfg: ADMMConfig):
     for _ in range(cfg.max_outer):
         x_blocks, zbar, u, f, nnz = _admm_step(A_blocks, y, x_blocks, zbar,
                                                u, cfg)
-        hist["f"].append(float(f))
-        hist["nnz"].append(int(nnz))
+        # one batched device→host sync per outer iteration (SYNC001)
+        fh, nnzh = jax.device_get((f, nnz))
+        hist["f"].append(float(fh))
+        hist["nnz"].append(int(nnzh))
     beta = np.concatenate([np.asarray(b) for b in x_blocks])[:p]
     return beta, hist

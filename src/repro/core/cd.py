@@ -184,6 +184,7 @@ def sweep_jacobi(design, s, w, beta, dbeta, xdb, *, mu, nu, lam1, lam2,
         d_new = jnp.where(active.reshape(n_tiles_total, T) > 0, d_new, 0.0)
 
     dbeta_out = d_new.reshape(p_loc)
+    ops.record_launch("matvec")  # the xdb merge pass is its own HBM sweep
     xdb_out = design.matvec(dbeta_out)
     return dbeta_out, xdb_out, jnp.minimum(num_tiles, n_tiles_total)
 

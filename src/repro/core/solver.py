@@ -1026,15 +1026,19 @@ class GLMSolver:
             if shaped:
                 self.launch_stats["sweep_tiles_skipped"] += \
                     total_tiles - live_tiles
-            f = float(m["f"])
+            # ONE device→host sync per superstep: fetching the metrics dict
+            # whole lets every scalar ride a single transfer instead of
+            # blocking the dispatch pipe per key (lint rule SYNC001).
+            mh = jax.device_get(m)
+            f = float(mh["f"])
             for k in history:
-                history[k].append(float(m[k]))
+                history[k].append(float(mh[k]))
             if verbose:
                 tag = "dglmnet" if self.mesh is None else \
                     f"dglmnet/{self._D}x{self._M}"
                 print(f"[{tag}] it={it} f={f:.8f} "
-                      f"alpha={float(m['alpha']):.4f} "
-                      f"mu={float(m['mu']):.3f} nnz={int(m['nnz'])}")
+                      f"alpha={float(mh['alpha']):.4f} "
+                      f"mu={float(mh['mu']):.3f} nnz={int(mh['nnz'])}")
             if ckpt_manager is not None and it % ckpt_every == 0:
                 ckpt_manager.save(it, {"beta": state.beta, "xb": state.xb,
                                        "mu": state.mu},
@@ -1155,13 +1159,15 @@ class GLMSolver:
                 losses = fns.ls_chunk(Xc, yc, wc, oc, state.beta,
                                       prep["dbeta"], prep["cand"], losses)
             state, m = fns.finish(losses, prep, state, lams, self._penf)
-            f = float(m["f"])
+            # one batched device→host sync per outer iteration (SYNC001)
+            mh = jax.device_get(m)
+            f = float(mh["f"])
             for k in history:
-                history[k].append(float(m[k]))
+                history[k].append(float(mh[k]))
             if verbose:
                 print(f"[dglmnet/stream x{sd.n_chunks}] it={it} "
-                      f"f={f:.8f} alpha={float(m['alpha']):.4f} "
-                      f"mu={float(m['mu']):.3f} nnz={int(m['nnz'])}")
+                      f"f={f:.8f} alpha={float(mh['alpha']):.4f} "
+                      f"mu={float(mh['mu']):.3f} nnz={int(mh['nnz'])}")
             if ckpt_manager is not None and it % ckpt_every == 0:
                 ckpt_manager.save(it, {"beta": state.beta, "mu": state.mu},
                                   metadata={"next_it": it + 1, "f_prev": f,

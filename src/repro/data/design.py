@@ -558,12 +558,16 @@ class StreamingDesign(DesignMatrix):
             return
         if not prefetch:
             for i in range(start, self.n_chunks):
+                # StreamingDesign is process-local by contract (mesh=None)
+                # lint: allow DIST001 — chunks go to the default local device
                 yield i, jax.device_put(self._host_chunk(i))
             return
+        # lint: allow DIST001 — process-local prefetch, same contract
         nxt = jax.device_put(self._host_chunk(start))
         for i in range(start, self.n_chunks):
             cur = nxt
             if i + 1 < self.n_chunks:
+                # lint: allow DIST001 — process-local prefetch
                 nxt = jax.device_put(self._host_chunk(i + 1))
             yield i, cur
 

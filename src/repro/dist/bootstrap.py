@@ -192,6 +192,7 @@ def put_global(arr, mesh, spec):
     def _put_one(a, s):
         sharding = NamedSharding(mesh, s)
         if not is_multiprocess_mesh(mesh):
+            # lint: allow DIST001 — this IS put_global's single-process path
             return jax.device_put(a, sharding)
         a = np.asarray(a)
         return jax.make_array_from_callback(a.shape, sharding,
@@ -253,19 +254,49 @@ def kv_get(key: str, timeout_s: float = 30.0) -> str:
     return out.decode() if isinstance(out, bytes) else out
 
 
-_BARRIER_COUNTS: dict = {}
+_BARRIER_SEQ: int = 0
+
+
+class BarrierTagMismatch(RuntimeError):
+    """Processes reached the same barrier slot with DIFFERENT tags.
+
+    This is the fail-fast form of the classic SPMD deadlock: a control-flow
+    divergence (one process took an early return, skipped a checkpoint, or
+    ran an extra rebalance round) sends the processes to different barriers,
+    and without the tag exchange each side hangs until the barrier timeout
+    with no hint of why.  The tag exchange names both tags instead.
+    """
 
 
 def barrier(tag: str = "repro", timeout_s: float = 60.0):
     """Process barrier through the distributed runtime's KV service.
 
-    No-op in single-process runs.  Barrier ids are counter-suffixed per
-    tag so repeated barriers never collide.  Raises on timeout (a peer
-    died or wedged — ``repro.dist.faults.guarded_barrier`` turns this
-    into a diagnosable ``DeadProcessError``).
+    No-op in single-process runs.  Barrier ids are suffixed with a global
+    sequence number so repeated barriers never collide — and, unlike a
+    per-tag counter, processes whose control flow diverged meet at the
+    SAME slot with different tags instead of different slots with the
+    same tag.  Before waiting, every process publishes its tag for the
+    slot and checks it against process 0's; a divergence raises
+    :class:`BarrierTagMismatch` naming both tags immediately rather than
+    hanging to the barrier timeout.  Plain timeouts (a peer died or
+    wedged) still raise the runtime's error —
+    ``repro.dist.faults.guarded_barrier`` turns those into a diagnosable
+    ``DeadProcessError`` while letting ``BarrierTagMismatch`` through
+    untouched.
     """
+    global _BARRIER_SEQ
     if not context().multiprocess:
         return
-    n = _BARRIER_COUNTS.get(tag, 0)
-    _BARRIER_COUNTS[tag] = n + 1
-    _client().wait_at_barrier(f"{tag}/{n}", int(timeout_s * 1000))
+    seq = _BARRIER_SEQ
+    _BARRIER_SEQ += 1
+    pid = context().process_id
+    kv_set(f"repro/barrier_tag/{seq}/{pid}", tag)
+    ref = (tag if pid == 0 else
+           kv_get(f"repro/barrier_tag/{seq}/0", timeout_s=timeout_s))
+    if ref != tag:
+        raise BarrierTagMismatch(
+            f"barrier slot {seq}: process {pid} arrived with tag {tag!r} "
+            f"but process 0 arrived with {ref!r} — SPMD control flow has "
+            "diverged (every process must execute the same barrier "
+            "sequence; see lint rule DIST002)")
+    _client().wait_at_barrier(f"{tag}/{seq}", int(timeout_s * 1000))

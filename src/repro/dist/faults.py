@@ -118,6 +118,11 @@ def guarded_barrier(tag: str, *, timeout_s: float = 60.0):
     """
     try:
         bootstrap.barrier(tag, timeout_s=timeout_s)
+    except bootstrap.BarrierTagMismatch:
+        # not a dead peer: SPMD control flow diverged.  The mismatch error
+        # already names both tags — masking it as a timeout would send the
+        # operator debugging liveness instead of control flow.
+        raise
     except Exception as e:  # jaxlib surfaces a bare RuntimeError/XlaRuntimeError
         raise DeadProcessError(
             f"barrier {tag!r} timed out after {timeout_s:.0f}s — a peer "

@@ -11,6 +11,7 @@ agree.
 """
 from __future__ import annotations
 
+import contextlib
 import functools
 import os
 
@@ -30,6 +31,32 @@ from repro.kernels.superstep_tile import stats_gram_solve_pallas
 from repro.kernels.tile_gram import tile_gram_pallas
 
 _LANES = 128
+
+# --- trace-time launch accounting (repro.analysis.audit) -------------------
+# Every public dispatch entry below records a logical launch event while a
+# ``launch_trace()`` is active.  Events fire at trace time — under jit that
+# is once per compile, not once per step — so the auditor can pin the
+# per-superstep launch structure (fused = 2, unfused = 5) without running
+# the kernels or needing a TPU.
+_LAUNCH_EVENTS = None
+
+
+@contextlib.contextmanager
+def launch_trace():
+    """Collect ops-level launch events during a trace; yields the live list."""
+    global _LAUNCH_EVENTS
+    prev = _LAUNCH_EVENTS
+    _LAUNCH_EVENTS = events = []
+    try:
+        yield events
+    finally:
+        _LAUNCH_EVENTS = prev
+
+
+def record_launch(name):
+    """Record one logical device launch (no-op outside ``launch_trace()``)."""
+    if _LAUNCH_EVENTS is not None:
+        _LAUNCH_EVENTS.append(name)
 
 
 def default_backend() -> str:
@@ -67,6 +94,7 @@ def cd_tile_solve(G, g, h, beta_t, dbeta_t, mu, nu, lam1, lam2, *,
     ``penf``: optional (T,) per-coordinate penalty factors — coordinate j is
     solved under (lam1·penf_j, lam2·penf_j); 0 = unpenalized (intercept).
     """
+    record_launch("cd_tile_solve")
     backend = backend or default_backend()
     if backend == "ref":
         return ref.cd_tile_solve(G, g, h, beta_t, dbeta_t, mu, nu, lam1,
@@ -88,6 +116,7 @@ def tile_gram(bricks, rows, n_valid, w2, r2, *, backend=None):
     (n_row_blocks, rb).  Returns (G (T, T), g (T,)); empty-brick slots are
     skipped (predicated off in the Pallas kernel).
     """
+    record_launch("tile_gram")
     backend = backend or default_backend()
     if backend == "ref":
         return ref.tile_gram(bricks, rows, n_valid, w2, r2)
@@ -107,6 +136,7 @@ def glm_stats(y, xb, family, *, weights=None, offset=None, backend=None,
     weight × CV fold mask × row-padding mask — all the same multiply);
     ``offset`` shifts the margins (stats evaluated at ``xb + offset``).
     """
+    record_launch("glm_stats")
     backend = backend or default_backend()
     fname = _family_name(family)
     if fname not in _PALLAS_STATS and backend != "ref":
@@ -139,6 +169,7 @@ def predict_tile(slots, vals, table, b0, family, *, kind="link",
     Families without a Pallas link body fall back to the jnp oracle, as
     does any non-TPU backend by default (kernels/predict_tile.py).
     """
+    record_launch("predict_tile")
     backend = backend or default_backend()
     fname = _family_name(family)
     if fname not in _PALLAS_LINKS and backend != "ref":
@@ -195,6 +226,7 @@ def fused_stats_sweep(design, y, xb, beta, family, *, mu, nu, lam1, lam2,
     oracle composition in ref.py (same batched-matmul shaping, same
     active-set compaction, XLA-fused on CPU).
     """
+    record_launch("fused_stats_sweep")
     backend = backend or default_backend()
     fname = _family_name(family)
     if fname not in _PALLAS_STATS and backend != "ref":
@@ -264,6 +296,7 @@ def fused_ls(design, y, xb, dbeta, alphas, family, *, weights=None,
     losses (K,)).  Non-dense designs and non-TPU backends compose the
     design's matvec with the alpha_search oracle instead (the margin vector
     round-trips once, which XLA fusion absorbs on CPU)."""
+    record_launch("fused_ls")
     backend = backend or default_backend()
     fname = _family_name(family)
     if fname not in _PALLAS_STATS and backend != "ref":
@@ -306,6 +339,7 @@ def fused_ls(design, y, xb, dbeta, alphas, family, *, weights=None,
 def alpha_search(y, xb, xdb, alphas, family, *, weights=None, offset=None,
                  backend=None, block_rows=256):
     """losses[k] = sum_i weights_i * l(y_i, xb_i + o_i + alphas[k]*xdb_i)."""
+    record_launch("alpha_search")
     backend = backend or default_backend()
     fname = _family_name(family)
     if fname not in _PALLAS_STATS and backend != "ref":

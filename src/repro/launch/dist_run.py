@@ -56,6 +56,9 @@ def _allreduce_sum(mesh, axis: str, flat_local):
     flat_local = np.asarray(flat_local, np.float32)
     m = flat_local.shape[0]
     sharding = NamedSharding(mesh, P(axis))
+    # per-device puts of process-local values feed
+    # make_array_from_single_device_arrays; put_global would gather instead
+    # lint: allow DIST001 — targets are this process's own devices
     locals_ = [jax.device_put(flat_local, d)
                for d in sharding.addressable_devices]
     garr = jax.make_array_from_single_device_arrays(
@@ -139,6 +142,9 @@ def _worker_stream(args) -> int:
                                             np.asarray(losses)))
         state, metrics = fns.finish(losses, prep, state, lams, penf)
         n_iter = it + 1
+        # the KV-based host allreduce already forces host round-trips each
+        # superstep; these readbacks ride syncs the protocol requires anyway
+        # lint: allow SYNC001 — host-mediated allreduce is the design here
         f = float(metrics["f"])
         if f_prev is not None and abs(f_prev - f) <= args.tol * max(
                 abs(f_prev), 1.0):

@@ -78,7 +78,7 @@ def lower_cell(arch_name: str, shape_name: str, mesh, *, do_compile=True,
         if pads:
             rec["tp_padding"] = {k: list(v) for k, v in pads.items()}
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     with mesh:
         batch, caches, cache_len, token = lm.input_specs(cfg, shape, mesh)
         if shape.kind == "train":
@@ -97,15 +97,15 @@ def lower_cell(arch_name: str, shape_name: str, mesh, *, do_compile=True,
             step, _ = lm.make_decode_step(cfg)
             lowered = jax.jit(step, donate_argnums=(1,)).lower(
                 params, caches, token, cache_len, batch)
-    rec["lower_s"] = round(time.time() - t0, 2)
+    rec["lower_s"] = round(time.perf_counter() - t0, 2)
 
     if not do_compile:
         rec["status"] = "lowered"
         return rec
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     compiled = lowered.compile()
-    rec["compile_s"] = round(time.time() - t0, 2)
+    rec["compile_s"] = round(time.perf_counter() - t0, 2)
     rec["status"] = "ok"
     rec["memory"] = _mem_dict(compiled)
     try:
@@ -220,7 +220,7 @@ def lower_glm_cell(shape_name: str, mesh, *, do_compile=True,
     else:
         fn = superstep
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     with mesh:
         mapped = jax.jit(compat.shard_map(
             fn, mesh=mesh,
@@ -229,13 +229,13 @@ def lower_glm_cell(shape_name: str, mesh, *, do_compile=True,
             out_specs=(state_specs, metric_spec), check_vma=False))
         lowered = mapped.lower(X, y, weights, offset, budget, lams, active,
                                penf, state)
-    rec["lower_s"] = round(time.time() - t0, 2)
+    rec["lower_s"] = round(time.perf_counter() - t0, 2)
     if not do_compile:
         rec["status"] = "lowered"
         return rec
-    t0 = time.time()
+    t0 = time.perf_counter()
     compiled = lowered.compile()
-    rec["compile_s"] = round(time.time() - t0, 2)
+    rec["compile_s"] = round(time.perf_counter() - t0, 2)
     rec["status"] = "ok"
     rec["memory"] = _mem_dict(compiled)
     n_chips = int(np.prod(mesh.devices.shape))

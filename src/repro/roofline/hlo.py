@@ -422,3 +422,38 @@ def superstep_launch_targets(n: int, p: int, tile_size: int, *,
             "launches": launches, "total_flops": total_f,
             "total_bytes": total_b,
             "vector_roundtrip_bytes_saved": 0.0 if not fused else 5.0 * vec}
+
+
+# ---------------------------------------------------------------------------
+# Pallas VMEM budgeting (repro.analysis.audit)
+
+# Per-core VMEM on the TPU generations we target (v4/v5: 16 MiB).  The
+# pipelined pallas_call keeps PIPELINE_BUFFERS copies of every block
+# resident (double buffering: compute on one while DMA fills the next), so
+# the budget check is  sum(block bytes) * PIPELINE_BUFFERS <= budget.
+VMEM_BUDGET_BYTES = 16 * 2 ** 20
+PIPELINE_BUFFERS = 2
+
+
+def pallas_block_bytes(block_mappings) -> int:
+    """Sum of one buffer-set's block bytes from a traced ``pallas_call``'s
+    ``grid_mapping.block_mappings`` (covers inputs and outputs; index/
+    scalar-prefetch operands are SMEM-resident and excluded upstream).
+    ``None`` entries in a block shape are vmapped/squeezed dims of extent 1.
+    """
+    total = 0
+    for bm in block_mappings:
+        elems = 1
+        for d in bm.block_shape:
+            # non-int entries (None / mapped-dim sentinels) have extent 1
+            elems *= d if isinstance(d, int) else 1
+        sds = getattr(bm, "array_shape_dtype", None)
+        itemsize = getattr(getattr(sds, "dtype", None), "itemsize", 4)
+        total += elems * itemsize
+    return total
+
+
+def pallas_vmem_footprint(block_mappings, *, buffers: int = PIPELINE_BUFFERS
+                          ) -> int:
+    """Steady-state VMEM bytes of a pipelined kernel launch."""
+    return pallas_block_bytes(block_mappings) * buffers

@@ -98,16 +98,20 @@ class Trainer:
         log_f = open(self.tcfg.log_path, "a") if self.tcfg.log_path else None
         losses = []
         for step in range(start, self.tcfg.steps):
-            t0 = time.time()
+            t0 = time.perf_counter()
             batch = self._put_batch(self.pipeline.batch_at(step))
             params, opt_state, metrics = self.train_step(params, opt_state,
                                                          batch)
-            loss = float(metrics["loss"])
+            # one batched device→host sync per step (lint rule SYNC001);
+            # it also bounds the timing span below at real compute, not
+            # async dispatch
+            mh = jax.device_get(metrics)
+            loss = float(mh["loss"])
             losses.append(loss)
             rec = {"step": step, "loss": loss,
-                   "grad_norm": float(metrics["grad_norm"]),
-                   "lr": float(metrics["lr"]),
-                   "step_s": round(time.time() - t0, 4)}
+                   "grad_norm": float(mh["grad_norm"]),
+                   "lr": float(mh["lr"]),
+                   "step_s": round(time.perf_counter() - t0, 4)}
             if log_f:
                 log_f.write(json.dumps(rec) + "\n")
                 log_f.flush()

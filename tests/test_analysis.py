@@ -1,0 +1,567 @@
+"""repro.analysis: SPMD-safety lint rules + compiled-artifact auditor.
+
+Each lint rule gets (at least) one TRUE-POSITIVE fixture — code that must
+be flagged — and one FALSE-POSITIVE GUARD — the closest sanctioned idiom,
+which must stay clean.  The audit tests pin the compiled-artifact
+invariants CI gates on: fused superstep = 2 launches, unfused = 5 logical
+launch units, and zero steady-state recompiles across a λ-path.
+"""
+import json
+import textwrap
+
+import pytest
+
+from repro.analysis import lint_text
+from repro.analysis.lint import load_baseline, reconcile
+from repro.analysis.rules import RULES_BY_CODE
+from repro.analysis.astutil import Violation
+
+
+def run_rule(code, src, relpath="src/repro/core/example.py"):
+    return lint_text(textwrap.dedent(src), relpath,
+                     rules=[RULES_BY_CODE[code]])
+
+
+def codes(violations):
+    return [v.code for v in violations]
+
+
+# ---------------------------------------------------------------- DIST001
+
+DIST001_TP = """
+    import jax
+    import numpy as np
+    from repro.dist import bootstrap
+
+    def place(mesh, x):
+        return jax.device_put(x, mesh)
+"""
+
+DIST001_FP = """
+    import jax
+    import numpy as np
+
+    def place(x):
+        # no repro.dist import, not under src/repro/dist/: local module
+        return jax.device_put(x)
+"""
+
+
+def test_dist001_flags_bare_device_put_in_dist_module():
+    got = run_rule("DIST001", DIST001_TP)
+    assert codes(got) == ["DIST001"]
+    assert "put_global" in got[0].message
+
+
+def test_dist001_flags_asarray_with_device_kwarg():
+    src = """
+        import jax.numpy as jnp
+
+        def place(x, dev):
+            return jnp.asarray(x, device=dev)
+    """
+    got = run_rule("DIST001", src, relpath="src/repro/dist/example.py")
+    assert codes(got) == ["DIST001"]
+
+
+def test_dist001_ignores_non_dist_modules():
+    assert run_rule("DIST001", DIST001_FP) == []
+
+
+def test_dist001_ignores_plain_asarray():
+    src = """
+        import jax.numpy as jnp
+        from repro.dist import bootstrap
+
+        def convert(x):
+            return jnp.asarray(x)          # no device= : just a cast
+    """
+    assert run_rule("DIST001", src) == []
+
+
+# ---------------------------------------------------------------- DIST002
+
+DIST002_TP_BRANCH = """
+    import jax
+    from repro.dist.bootstrap import barrier
+
+    def save(ctx, path):
+        if ctx.is_coordinator:
+            barrier("save")           # peers never reach this barrier
+"""
+
+DIST002_TP_EARLY_EXIT = """
+    import jax
+    from repro.dist.bootstrap import barrier
+
+    def save(path):
+        if jax.process_index() != 0:
+            return                    # non-coordinators leave early...
+        write_manifest(path)
+        barrier("save-done")          # ...and skip this rendezvous
+"""
+
+DIST002_FP = """
+    import jax
+    from repro.dist.bootstrap import barrier
+
+    def save(ctx, path):
+        if ctx.is_coordinator:
+            write_manifest(path)      # process-local side effect only
+        barrier("save-done")          # collective OUTSIDE the branch
+"""
+
+
+def test_dist002_flags_collective_under_process_local_branch():
+    got = run_rule("DIST002", DIST002_TP_BRANCH)
+    assert codes(got) == ["DIST002"]
+    assert "barrier" in got[0].message
+
+
+def test_dist002_flags_early_exit_before_collective():
+    got = run_rule("DIST002", DIST002_TP_EARLY_EXIT)
+    assert codes(got) == ["DIST002"]
+    assert "early exit" in got[0].message
+
+
+def test_dist002_allows_sanctioned_side_effect_pattern():
+    assert run_rule("DIST002", DIST002_FP) == []
+
+
+def test_dist002_allows_uniform_multiprocess_gate():
+    src = """
+        from repro.dist.bootstrap import barrier
+
+        def sync(ctx):
+            if ctx.multiprocess:      # uniform across the job: sanctioned
+                barrier("sync")
+    """
+    assert run_rule("DIST002", src) == []
+
+
+# ---------------------------------------------------------------- SYNC001
+
+SYNC001_TP_TIME = """
+    import time
+
+    def bench(step, state):
+        t0 = time.time()
+        state = step(state)
+        return time.time() - t0
+"""
+
+SYNC001_TP_READBACKS = """
+    def run(step, state, history):
+        for it in range(100):
+            state, metrics = step(state)
+            history["f"].append(float(metrics["f"]))
+            history["nnz"].append(float(metrics["nnz"]))
+"""
+
+SYNC001_FP_SINGLE = """
+    def run(step, state):
+        for it in range(100):
+            state, metrics = step(state)
+            f = float(metrics["f"])   # ONE convergence check: sanctioned
+            if f < 1e-8:
+                break
+"""
+
+SYNC001_FP_BATCHED = """
+    import jax
+
+    def run(step, state, history):
+        for it in range(100):
+            state, metrics = step(state)
+            mh = jax.device_get(metrics)
+            history["f"].append(float(mh["f"]))
+            history["nnz"].append(float(mh["nnz"]))
+"""
+
+SYNC001_FP_STRINGS = """
+    def parse(lines):
+        out = []
+        for line in lines:
+            tok, _, rest = line.partition(":")
+            out.append((int(tok), float(rest)))
+        return out
+"""
+
+
+def test_sync001_flags_time_time_span():
+    got = run_rule("SYNC001", SYNC001_TP_TIME)
+    assert codes(got) == ["SYNC001", "SYNC001"]
+    assert "perf_counter" in got[0].message
+
+
+def test_sync001_flags_per_iteration_readbacks():
+    got = run_rule("SYNC001", SYNC001_TP_READBACKS)
+    assert codes(got) == ["SYNC001"]
+    assert "device_get" in got[0].message
+
+
+def test_sync001_allows_single_convergence_check():
+    assert run_rule("SYNC001", SYNC001_FP_SINGLE) == []
+
+
+def test_sync001_allows_batched_device_get():
+    assert run_rule("SYNC001", SYNC001_FP_BATCHED) == []
+
+
+def test_sync001_ignores_string_parsing_loops():
+    assert run_rule("SYNC001", SYNC001_FP_STRINGS) == []
+
+
+# ----------------------------------------------------------------- JIT001
+
+JIT001_TP_LAMBDA_BAKE = """
+    import jax
+
+    @jax.jit
+    def step(beta, g, config):
+        return beta - config.lam1 * g
+"""
+
+JIT001_TP_BUILDER = """
+    def make_streaming_superstep(config):
+        def finish(losses, state):
+            return losses + config.lam2
+        return finish
+"""
+
+JIT001_TP_JIT_IN_LOOP = """
+    import jax
+
+    def sweep(fns, xs):
+        out = []
+        for f in fns:
+            out.append(jax.jit(f)(xs))
+        return out
+"""
+
+JIT001_FP = """
+    import jax
+
+    def make_superstep(config):
+        mu = config.mu_init              # not a runtime-only field
+
+        def superstep(X, y, lams):
+            lam1, lam2 = lams[0], lams[1]   # λ from the runtime array
+            return lam1 + lam2 + mu
+        return superstep
+"""
+
+
+def test_jit001_flags_lam_read_in_jitted_fn():
+    got = run_rule("JIT001", JIT001_TP_LAMBDA_BAKE)
+    assert codes(got) == ["JIT001"]
+    assert "lam1" in got[0].message
+
+
+def test_jit001_flags_lam_read_in_superstep_builder():
+    got = run_rule("JIT001", JIT001_TP_BUILDER)
+    assert codes(got) == ["JIT001"]
+
+
+def test_jit001_flags_jit_in_loop():
+    got = run_rule("JIT001", JIT001_TP_JIT_IN_LOOP)
+    assert codes(got) == ["JIT001"]
+    assert "loop" in got[0].message
+
+
+def test_jit001_allows_runtime_lams_array():
+    assert run_rule("JIT001", JIT001_FP) == []
+
+
+# ---------------------------------------------------------------- HASH001
+
+HASH001_TP = """
+    def slot(token, n_bins):
+        return hash(token) % n_bins
+"""
+
+HASH001_FP = """
+    from repro.io.hashing import splitmix64
+
+    def slot(token, n_bins):
+        return splitmix64(token.encode()) % n_bins
+"""
+
+
+def test_hash001_flags_builtin_hash_in_io():
+    got = run_rule("HASH001", HASH001_TP,
+                   relpath="src/repro/io/example.py")
+    assert codes(got) == ["HASH001"]
+    assert "splitmix64" in got[0].message
+
+
+def test_hash001_allows_stable_hashing_in_io():
+    assert run_rule("HASH001", HASH001_FP,
+                    relpath="src/repro/io/example.py") == []
+
+
+def test_hash001_scoped_to_io_only():
+    # builtin hash() outside io/ (dict keys, caching) is fine
+    assert run_rule("HASH001", HASH001_TP,
+                    relpath="src/repro/core/example.py") == []
+
+
+# ---------------------------------------------------------------- PREC001
+
+PREC001_TP = """
+    import jax.numpy as jnp
+
+    def gram(X, w):
+        Xb = X.astype(jnp.bfloat16)
+        return jnp.dot(Xb.T, Xb)
+"""
+
+PREC001_TP_MATMUL_OP = """
+    import jax.numpy as jnp
+
+    def gram(X):
+        Xb = X.astype(jnp.bfloat16)
+        return Xb.T @ Xb
+"""
+
+PREC001_FP = """
+    import jax.numpy as jnp
+
+    def gram(X, w):
+        Xb = X.astype(jnp.bfloat16)
+        return jnp.dot(Xb.T, Xb, preferred_element_type=jnp.float32)
+"""
+
+
+def test_prec001_flags_bf16_dot_without_accumulator():
+    got = run_rule("PREC001", PREC001_TP)
+    assert codes(got) == ["PREC001"]
+    assert "preferred_element_type" in got[0].message
+
+
+def test_prec001_flags_matmul_operator():
+    got = run_rule("PREC001", PREC001_TP_MATMUL_OP)
+    assert codes(got) == ["PREC001"]
+
+
+def test_prec001_allows_pinned_fp32_accumulator():
+    assert run_rule("PREC001", PREC001_FP) == []
+
+
+def test_prec001_ignores_fp32_matmuls():
+    src = """
+        import jax.numpy as jnp
+
+        def gram(X):
+            return jnp.dot(X.T, X)
+    """
+    assert run_rule("PREC001", src) == []
+
+
+# --------------------------------------------------- waivers & baseline
+
+def test_inline_waiver_suppresses_finding():
+    src = """
+        import time
+
+        def manifest():
+            # lint: allow SYNC001 — wall-clock timestamp, not a span
+            return {"time": time.time()}
+    """
+    assert run_rule("SYNC001", src) == []
+
+
+def test_waiver_is_code_specific():
+    src = """
+        import time
+
+        def manifest():
+            # lint: allow DIST001 — wrong code: must not suppress SYNC001
+            return {"time": time.time()}
+    """
+    assert codes(run_rule("SYNC001", src)) == ["SYNC001"]
+
+
+def _vio(code="SYNC001", path="src/repro/x.py", scope="f"):
+    return Violation(code=code, path=path, line=1, col=0, scope=scope,
+                     message="m")
+
+
+def test_baseline_reconcile_budget_and_ratchet():
+    baseline = {"version": 1, "entries": [
+        {"code": "SYNC001", "path": "src/repro/x.py", "scope": "f",
+         "count": 1, "reason": "legacy"}]}
+    new, old, stale = reconcile([_vio(), _vio()], baseline)
+    # budget of 1 covers one finding; the second is NEW (ratchet holds)
+    assert len(old) == 1 and len(new) == 1 and stale == []
+    # fixing the debt leaves the entry STALE — it must leave the ledger
+    new, old, stale = reconcile([], baseline)
+    assert new == [] and old == [] and len(stale) == 1
+
+
+def test_baseline_entries_require_reason(tmp_path):
+    p = tmp_path / "baseline.json"
+    p.write_text(json.dumps({"version": 1, "entries": [
+        {"code": "SYNC001", "path": "x.py", "scope": "f", "count": 1}]}))
+    with pytest.raises(SystemExit):
+        load_baseline(p)
+
+
+def test_repo_baseline_is_justified():
+    from repro.analysis.lint import DEFAULT_BASELINE
+    data = load_baseline(DEFAULT_BASELINE)
+    for entry in data["entries"]:
+        assert entry["reason"].strip()
+        assert entry["code"] in RULES_BY_CODE
+
+
+def test_repo_lint_is_clean():
+    """The committed tree has 0 new findings — the CI gate's exact check."""
+    from repro.analysis.lint import (DEFAULT_BASELINE, DEFAULT_TARGETS,
+                                     REPO_ROOT, lint_paths)
+    violations, n_files = lint_paths(
+        [REPO_ROOT / t for t in DEFAULT_TARGETS])
+    new, _, stale = reconcile(violations, load_baseline(DEFAULT_BASELINE))
+    assert n_files > 50
+    assert [v.render() for v in new] == []
+    assert stale == []
+
+
+# ------------------------------------------------------- artifact audits
+
+@pytest.mark.slow
+def test_audit_fused_superstep_is_two_launches():
+    from repro.analysis import audit
+    units, jaxpr = audit.trace_superstep(fused=True)
+    assert units == ["fused_stats_sweep", "fused_ls"]
+    assert audit.count_primitive(jaxpr.jaxpr, "pallas_call") == 2
+
+
+@pytest.mark.slow
+def test_audit_unfused_superstep_is_five_launch_units():
+    from repro.analysis import audit
+    units, jaxpr = audit.trace_superstep(fused=False)
+    assert units == ["glm_stats", "gram_solve", "matvec",
+                     "alpha_search", "alpha_search"]
+    # 4 pallas kernels; the xdb merge matvec is a plain dot_general sweep
+    assert audit.count_primitive(jaxpr.jaxpr, "pallas_call") == 4
+
+
+@pytest.mark.slow
+def test_audit_kernel_vmem_within_budget():
+    from repro.analysis import audit
+    res = audit.audit_kernel_vmem()
+    assert res.status == "ok", res.details
+    assert res.details["kernels"]          # footprints actually derived
+
+
+@pytest.mark.slow
+def test_audit_zero_steady_state_recompiles():
+    from repro.analysis import audit
+    res = audit.audit_steady_state_recompiles()
+    assert res.status == "ok", res.details
+    assert res.details["steady_state_recompiles"] == 0
+    assert res.details["lambdas"] == 3
+
+
+@pytest.mark.slow
+def test_audit_collective_sequence_deterministic():
+    from repro.analysis import audit
+    res = audit.audit_collective_sequence()
+    assert res.status == "ok", res.details
+    assert res.details["under_cond"] == []
+
+
+# -------------------------------------------- barrier tag fail-fast (b)
+
+class _FakeClient:
+    """In-memory stand-in for jax's distributed runtime client."""
+
+    def __init__(self, kv=None):
+        self.kv = dict(kv or {})
+        self.barriers = []
+
+    def key_value_set(self, key, value):
+        self.kv[key] = value
+
+    def blocking_key_value_get(self, key, timeout_ms):
+        if key not in self.kv:
+            raise RuntimeError(f"kv timeout waiting for {key}")
+        return self.kv[key]
+
+    def wait_at_barrier(self, bid, timeout_ms):
+        self.barriers.append(bid)
+
+
+@pytest.fixture
+def fake_dist(monkeypatch):
+    from repro.dist import bootstrap
+
+    def install(process_id, num_processes=2, kv=None):
+        client = _FakeClient(kv)
+        monkeypatch.setattr(bootstrap, "_CONTEXT",
+                            bootstrap.DistContext(process_id, num_processes,
+                                                  "fake:0"))
+        monkeypatch.setattr(bootstrap, "_client", lambda: client)
+        monkeypatch.setattr(bootstrap, "_BARRIER_SEQ", 0)
+        return client
+
+    return install
+
+
+def test_barrier_matching_tags_rendezvous(fake_dist):
+    from repro.dist import bootstrap
+    client = fake_dist(process_id=1,
+                       kv={"repro/barrier_tag/0/0": "ckpt"})
+    bootstrap.barrier("ckpt")
+    assert client.barriers == ["ckpt/0"]
+    assert client.kv["repro/barrier_tag/0/1"] == "ckpt"
+
+
+def test_barrier_tag_mismatch_fails_fast(fake_dist):
+    from repro.dist import bootstrap
+    client = fake_dist(process_id=1,
+                       kv={"repro/barrier_tag/0/0": "save"})
+    with pytest.raises(bootstrap.BarrierTagMismatch) as ei:
+        bootstrap.barrier("rebalance")
+    # names BOTH tags and never reaches the barrier itself
+    assert "rebalance" in str(ei.value) and "save" in str(ei.value)
+    assert client.barriers == []
+
+
+def test_barrier_sequence_advances_per_call(fake_dist):
+    from repro.dist import bootstrap
+    client = fake_dist(process_id=0)
+    bootstrap.barrier("a")
+    bootstrap.barrier("a")
+    bootstrap.barrier("b")
+    assert client.barriers == ["a/0", "a/1", "b/2"]
+
+
+def test_barrier_noop_single_process(fake_dist):
+    from repro.dist import bootstrap
+    client = fake_dist(process_id=0, num_processes=1)
+    bootstrap.barrier("anything")
+    assert client.barriers == [] and client.kv == {}
+
+
+def test_guarded_barrier_passes_mismatch_through(monkeypatch):
+    from repro.dist import bootstrap, faults
+
+    def diverge(tag, timeout_s=60.0):
+        raise bootstrap.BarrierTagMismatch("tags diverged")
+
+    monkeypatch.setattr(bootstrap, "barrier", diverge)
+    with pytest.raises(bootstrap.BarrierTagMismatch):
+        faults.guarded_barrier("x")
+
+
+def test_guarded_barrier_wraps_timeouts(monkeypatch):
+    from repro.dist import bootstrap, faults
+
+    def wedge(tag, timeout_s=60.0):
+        raise RuntimeError("deadline exceeded")
+
+    monkeypatch.setattr(bootstrap, "barrier", wedge)
+    with pytest.raises(faults.DeadProcessError):
+        faults.guarded_barrier("x")
