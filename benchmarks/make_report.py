@@ -34,9 +34,13 @@ BENCH_COLUMNS = {
                         "overlap_efficiency", "iters", "nnz",
                         "max_abs_beta_diff_vs_dense"],
     "straggler_bench": ["arm", "problem", "num_processes", "slow_factor",
-                        "tile_cost_s", "supersteps", "wall_s",
-                        "wall_per_superstep_s", "recovery_vs_alb_off",
-                        "f_final", "nnz", "final_budgets", "node_speeds"],
+                        "fault_spec", "phase_aware", "tile_cost_s",
+                        "supersteps", "wall_s", "wall_per_superstep_s",
+                        "recovery_vs_alb_off", "f_final", "nnz",
+                        "final_budgets", "node_speeds", "compute_speeds"],
+    "obs": ["case", "n_spans", "span_names", "top_span",
+            "top_span_total_ms", "conv_events", "supersteps",
+            "mean_step_us", "final_f", "disabled_span_overhead_us"],
     "ingest_bench": ["case", "format", "rows", "features", "chunks",
                      "nnz_total", "file_mb", "scan_s", "pass_s",
                      "rows_per_s", "nnz_per_s", "hash_dim", "supersteps",

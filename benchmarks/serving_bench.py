@@ -37,6 +37,8 @@ import numpy as np
 
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
 
+from repro.timing import percentiles  # noqa: E402
+
 OUT = pathlib.Path(__file__).resolve().parents[1] / "results" / "benchmarks" \
     / "serving_bench.json"
 
@@ -116,10 +118,9 @@ def measure_batch1(engine, reqs, kind="response"):
         lat.append(time.perf_counter() - t1)
     wall = time.perf_counter() - t0
     b.close()
-    lat = np.asarray(lat)
+    pct = percentiles([v * 1e3 for v in lat])
     return {"rows_per_s": len(reqs) / wall,
-            "p50_ms": float(np.percentile(lat, 50) * 1e3),
-            "p99_ms": float(np.percentile(lat, 99) * 1e3),
+            "p50_ms": pct["p50"], "p99_ms": pct["p99"],
             "mean_batch": 1.0, "n_requests": len(reqs)}
 
 

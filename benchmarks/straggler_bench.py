@@ -10,17 +10,28 @@ charged as REAL ``time.sleep`` seconds, so the wall-clock gap is physical):
   * ``alb_telemetry`` — ``repro.dist.telemetry`` measures per-node speeds
     at runtime, and after its 2-superstep warm-up ``alb_budgets``
     (completion pivot, κ=0.5) parks the straggler at ~¼ budget, so the
-    superstep ends when the FAST node's full cycle does.
+    superstep ends when the FAST node's full cycle does;
+  * ``alb_phase``     — same compute fault, but telemetry runs PHASE-AWARE
+    (``SuperstepTelemetry(phase_aware=True)``): budgets come from
+    compute-phase speeds only.  A compute-slow shard is parked exactly
+    like the aggregate arm — phase awareness must not cost the win;
+  * ``alb_phase_net`` — the fault moves to the NETWORK phase
+    (``"1:4.0/network"``): the node is just as slow on the wall-clock,
+    but its compute-phase speed is normal.  Phase-aware ALB must NOT
+    down-budget it (equal final budgets) — shrinking a network-slow
+    node's tile budget would shed work a budget cannot fix (the ROADMAP
+    compute-vs-network straggler item).
 
-Both arms run the same superstep count (tol=0), so ``recovery`` =
+All arms run the same superstep count (tol=0), so ``recovery`` =
 ``wall_off / wall_on`` isolates the scheduling win; the per-arm final
 objective is reported alongside (the straggler's parked cursor trades a
 little per-superstep progress for the 4× shorter superstep — the paper's
 ALB bargain).
 
-``--smoke`` runs a reduced problem and asserts recovery ≥ 1.4 (the
-committed full-size row carries the ≥1.5× claim; sleeps dominate compute
-at both sizes, so the ratio is stable across machines).
+``--smoke`` runs a reduced problem and asserts recovery ≥ 1.4 for both
+compute-fault ALB arms, straggler parked there, and NO down-budgeting in
+the network arm (the committed full-size row carries the ≥1.5× claim;
+sleeps dominate compute at both sizes, so the ratios are machine-stable).
 """
 from __future__ import annotations
 
@@ -36,6 +47,8 @@ _REPO = pathlib.Path(__file__).resolve().parents[1]
 
 SLOW_FACTOR = 4.0
 FAULT_SPEC = f"1:{SLOW_FACTOR}"
+NET_FAULT_SPEC = f"1:{SLOW_FACTOR}/network"
+TELEMETRY_ARMS = ("alb_telemetry", "alb_phase", "alb_phase_net")
 
 
 def _worker(args) -> int:
@@ -56,9 +69,13 @@ def _worker(args) -> int:
     beta_true[: p // 8] = rng.normal(size=p // 8)
     y = (X @ beta_true + 0.1 * rng.normal(size=n)).astype(np.float32)
 
-    plan = faults.FaultPlan.parse(FAULT_SPEC, ctx.num_processes,
+    spec = NET_FAULT_SPEC if args.arm == "alb_phase_net" else FAULT_SPEC
+    plan = faults.FaultPlan.parse(spec, ctx.num_processes,
                                   tile_cost_s=args.tile_cost_s)
-    tel = SuperstepTelemetry() if args.arm == "alb_telemetry" else None
+    tel = None
+    if args.arm in TELEMETRY_ARMS:
+        tel = SuperstepTelemetry(
+            phase_aware=args.arm in ("alb_phase", "alb_phase_net"))
 
     cfg = DGLMNETConfig(tile_size=args.tile, max_outer=args.steps, tol=0.0,
                         alb_kappa=0.5)
@@ -86,7 +103,9 @@ def _worker(args) -> int:
     if ctx.is_coordinator:
         row = {
             "arm": args.arm, "num_processes": ctx.num_processes,
-            "slow_factor": SLOW_FACTOR, "tile_cost_s": args.tile_cost_s,
+            "slow_factor": SLOW_FACTOR, "fault_spec": spec,
+            "tile_cost_s": args.tile_cost_s,
+            "phase_aware": bool(tel is not None and tel.phase_aware),
             "supersteps": res.n_iter, "wall_s": round(wall_s, 3),
             "wall_per_superstep_s": round(wall_s / max(res.n_iter, 1), 4),
             "f_final": res.history["f"][-1],
@@ -95,10 +114,15 @@ def _worker(args) -> int:
             else solver._budgets_host.tolist(),
             "node_speeds": None if tel is None or tel.speeds() is None
             else [round(float(v), 2) for v in tel.speeds()],
+            "compute_speeds": None
+            if tel is None or tel.compute_speeds() is None
+            else [round(float(v), 2) if np.isfinite(v) else None
+                  for v in tel.compute_speeds()],
             "phase_fractions": fractions,
             "phase_breakdown": None
             if tel is None or tel.phase_breakdown() is None
-            else {k: [round(float(x), 4) for x in v]
+            else {k: [round(float(x), 4) if np.isfinite(x) else None
+                      for x in v]
                   for k, v in tel.phase_breakdown().items()},
         }
         pathlib.Path(args.out).write_text(json.dumps(row))
@@ -125,42 +149,61 @@ def _run_arm(arm: str, *, rows: int, cols: int, tile: int, steps: int,
 
 
 def _bench(*, rows, cols, tile, steps, tile_cost_s, lam1=0.05):
-    off = _run_arm("alb_off", rows=rows, cols=cols, tile=tile, steps=steps,
-                   tile_cost_s=tile_cost_s, lam1=lam1)
-    on = _run_arm("alb_telemetry", rows=rows, cols=cols, tile=tile,
-                  steps=steps, tile_cost_s=tile_cost_s, lam1=lam1)
-    recovery = off["wall_s"] / on["wall_s"]
-    for r in (off, on):
-        r["recovery_vs_alb_off"] = round(recovery, 2) if r is on else 1.0
+    arms = {}
+    for arm in ("alb_off",) + TELEMETRY_ARMS:
+        arms[arm] = _run_arm(arm, rows=rows, cols=cols, tile=tile,
+                             steps=steps, tile_cost_s=tile_cost_s, lam1=lam1)
+    off = arms["alb_off"]
+    for arm, r in arms.items():
+        r["recovery_vs_alb_off"] = 1.0 if r is off \
+            else round(off["wall_s"] / r["wall_s"], 2)
         r["problem"] = f"dense_{rows}x{cols}"
-    return off, on, recovery
+    return arms
 
 
 def run():
     """Full-size committed row set (benchmarks/run.py figure entry)."""
-    off, on, recovery = _bench(rows=768, cols=256, tile=32, steps=20,
-                               tile_cost_s=0.05)
+    arms = _bench(rows=768, cols=256, tile=32, steps=20, tile_cost_s=0.05)
     return {"figure": "straggler_bench",
-            "injected": {"spec": FAULT_SPEC, "tile_cost_s": 0.05},
-            "recovery": round(recovery, 2),
-            "rows": [off, on]}
+            "injected": {"spec": FAULT_SPEC, "net_spec": NET_FAULT_SPEC,
+                         "tile_cost_s": 0.05},
+            "recovery": arms["alb_telemetry"]["recovery_vs_alb_off"],
+            "recovery_phase": arms["alb_phase"]["recovery_vs_alb_off"],
+            "rows": list(arms.values())}
 
 
 def smoke() -> int:
-    off, on, recovery = _bench(rows=256, cols=256, tile=32, steps=12,
-                               tile_cost_s=0.02)
-    print(off)
-    print(on)
+    arms = _bench(rows=256, cols=256, tile=32, steps=12, tile_cost_s=0.02)
+    off, on = arms["alb_off"], arms["alb_telemetry"]
+    phase, net = arms["alb_phase"], arms["alb_phase_net"]
+    for r in arms.values():
+        print(r)
     # telemetry ALB must claw back most of the straggler's 4× (sleeps
     # dominate compute at this size, so the bound is machine-stable);
-    # the committed full-size run shows the ≥1.5× recovery claim
+    # the committed full-size run shows the ≥1.5× recovery claim — and
+    # phase-aware budgeting must not cost the compute-straggler win
+    recovery = on["recovery_vs_alb_off"]
     assert recovery >= 1.4, f"recovery {recovery:.2f} < 1.4"
+    assert phase["recovery_vs_alb_off"] >= 1.4, phase["recovery_vs_alb_off"]
     # the straggler (process 1) must end DOWN-budgeted relative to the
-    # fast node once telemetry converges
+    # fast node once telemetry converges — in BOTH compute-fault ALB arms
     b = on["final_budgets"]
     assert b is not None and b[1] < b[0], b
-    # both arms ran the identical superstep schedule
-    assert off["supersteps"] == on["supersteps"]
+    bp = phase["final_budgets"]
+    assert bp is not None and bp[1] < bp[0], bp
+    # the NETWORK-slow node keeps its full budget under phase-aware ALB:
+    # its compute-phase speed is normal, and a tile budget cannot fix a
+    # slow network (the ROADMAP compute-vs-network straggler item)
+    bn = net["final_budgets"]
+    assert bn is not None and bn[1] == bn[0], bn
+    cs = net["compute_speeds"]
+    assert cs is not None and cs[1] >= 0.8 * cs[0], cs
+    # ...while its AGGREGATE speed still shows the slowness (the signal
+    # the old aggregate-only ALB would have wrongly acted on)
+    ns = net["node_speeds"]
+    assert ns is not None and ns[1] < 0.5 * ns[0], ns
+    # all arms ran the identical superstep schedule
+    assert len({r["supersteps"] for r in arms.values()}) == 1
     # phase attribution (repro.dist.telemetry.phase_breakdown): the
     # telemetry arm carries probe-derived per-phase seconds for both
     # nodes, every phase positive, and the straggler's attributed local
@@ -176,7 +219,11 @@ def smoke() -> int:
     tot1 = sum(v[1] for v in pb.values())
     assert tot1 >= 0.9 * tot0, (tot0, tot1)
     assert off["phase_breakdown"] is None
-    print(f"STRAGGLER_SMOKE_OK recovery={recovery:.2f}")
+    # the network arm attributes the wait where it belongs
+    assert "network" in net["phase_breakdown"], net["phase_breakdown"]
+    print(f"STRAGGLER_SMOKE_OK recovery={recovery:.2f} "
+          f"phase={phase['recovery_vs_alb_off']:.2f} "
+          f"net_budgets={bn}")
     return 0
 
 
@@ -184,7 +231,7 @@ def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--arm", default="",
-                    choices=["", "alb_off", "alb_telemetry"])
+                    choices=["", "alb_off"] + list(TELEMETRY_ARMS))
     ap.add_argument("--out", default="")
     ap.add_argument("--rows", type=int, default=768)
     ap.add_argument("--cols", type=int, default=256)

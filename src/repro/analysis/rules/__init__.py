@@ -10,9 +10,11 @@ from __future__ import annotations
 from repro.analysis.rules.dist_rules import Dist001, Dist002
 from repro.analysis.rules.hash_rules import Hash001
 from repro.analysis.rules.jit_rules import Jit001
+from repro.analysis.rules.obs_rules import Obs001
 from repro.analysis.rules.prec_rules import Prec001
 from repro.analysis.rules.sync_rules import Sync001
 
-ALL_RULES = (Dist001(), Dist002(), Sync001(), Jit001(), Hash001(), Prec001())
+ALL_RULES = (Dist001(), Dist002(), Sync001(), Jit001(), Hash001(),
+             Prec001(), Obs001())
 
 RULES_BY_CODE = {r.CODE: r for r in ALL_RULES}

@@ -1,0 +1,72 @@
+"""OBS001 — hand-rolled timing spans outside the observability layer.
+
+The repo has exactly two sanctioned ways to time things:
+
+* ``repro.timing`` (``timed``/``timeit``/``percentiles``) for blocking
+  wall-clock measurement of jitted calls, and
+* ``repro.obs.trace`` spans for structural tracing (free when disabled,
+  Perfetto-exportable when enabled).
+
+A function that pairs bare ``time.perf_counter()`` / ``time.monotonic()``
+calls is re-rolling one of those: the duration it computes is invisible
+to the trace, uses its own clock conventions, and (for jitted work)
+usually forgets to block on the result.  OBS001 flags any function under
+``src/repro`` with two or more such calls — the classic ``t0 = ...;
+dt = ... - t0`` span — EXCEPT ``repro/timing.py`` and ``repro/obs/``
+themselves, which are the implementations.
+
+Legitimate remaining sites (e.g. the solver's telemetry measurement,
+which must read a clock even when tracing is disabled) carry an inline
+``# lint: allow OBS001 — reason`` waiver or a baseline entry.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.astutil import FileContext, dotted_name
+
+_CLOCKS = {"time.perf_counter", "time.perf_counter_ns",
+           "time.monotonic", "time.monotonic_ns"}
+
+_EXEMPT_PREFIXES = ("src/repro/obs/",)
+_EXEMPT_FILES = ("src/repro/timing.py",)
+
+
+class Obs001:
+    CODE = "OBS001"
+    TITLE = "hand-rolled timing span (use repro.timing or repro.obs.trace)"
+    DOC = (
+        "Two or more bare time.perf_counter()/time.monotonic() calls in "
+        "one function are a hand-rolled timing span: the duration is "
+        "invisible to the obs trace and skips repro.timing's blocking "
+        "convention.  Use repro.timing.timed/timeit for measurements and "
+        "repro.obs.trace.span for structural tracing; waive genuinely "
+        "low-level sites with `# lint: allow OBS001 — reason`."
+    )
+
+    def check(self, ctx: FileContext):
+        path = ctx.relpath
+        if not path.startswith("src/repro/"):
+            return
+        if path in _EXEMPT_FILES or \
+                any(path.startswith(p) for p in _EXEMPT_PREFIXES):
+            return
+        # innermost-function ownership: a nested def's clock reads count
+        # against the nested def, not its parent
+        calls: dict = {}
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.Call) \
+                    and dotted_name(node.func) in _CLOCKS:
+                fns = ctx.enclosing_functions(node)
+                owner = fns[0] if fns else None
+                calls.setdefault(owner, []).append(node)
+        for owner, sites in calls.items():
+            if len(sites) < 2:
+                continue          # a lone timestamp is not a span
+            first = min(sites, key=lambda n: (n.lineno, n.col_offset))
+            yield ctx.violation(
+                self.CODE, first,
+                f"{len(sites)} bare clock reads form a hand-rolled timing "
+                "span — use repro.timing.timed/timeit (blocking "
+                "measurement) or repro.obs.trace.span (traced span) "
+                "instead")

@@ -43,6 +43,7 @@ import jax
 import numpy as np
 
 from repro.dist import bootstrap as dist_boot
+from repro.obs import trace as obs_trace
 
 # Managers with potentially in-flight async writers.  One process-wide
 # atexit hook joins them all: the writer threads are daemonic (a hung
@@ -110,8 +111,9 @@ class CheckpointManager:
         # materialize on host BEFORE handing to the writer thread so the
         # caller may donate/overwrite device buffers immediately
         # (gather_to_host == np.asarray for anything fully addressable)
-        flat = {k: dist_boot.gather_to_host(v)
-                for k, v in _flatten(tree).items()}
+        with obs_trace.span("ckpt/save", args={"step": int(step)}):
+            flat = {k: dist_boot.gather_to_host(v)
+                    for k, v in _flatten(tree).items()}
         meta = {
             "step": int(step),
             # lint: allow SYNC001 — wall-clock manifest timestamp, not a span
@@ -142,23 +144,26 @@ class CheckpointManager:
     @staticmethod
     def _write(directory: pathlib.Path, keep_last: int, step: int,
                flat: dict, meta: dict):
-        tmp = directory / f"ckpt_{step}.tmp"
-        final = directory / f"ckpt_{step}"
-        if tmp.exists():
-            shutil.rmtree(tmp)
-        tmp.mkdir()
-        np.savez(tmp / "shard_0.npz", **flat)
-        (tmp / "manifest.json").write_text(json.dumps(meta))
-        # fsync the directory entry then commit atomically
-        fd = os.open(tmp, os.O_RDONLY)
-        try:
-            os.fsync(fd)
-        finally:
-            os.close(fd)
-        if final.exists():
-            shutil.rmtree(final)
-        os.replace(tmp, final)
-        CheckpointManager._gc(directory, keep_last)
+        # the commit span runs on whichever thread writes (the async
+        # writer's lane in traced runs — commit/compute overlap visible)
+        with obs_trace.span("ckpt/commit", args={"step": int(step)}):
+            tmp = directory / f"ckpt_{step}.tmp"
+            final = directory / f"ckpt_{step}"
+            if tmp.exists():
+                shutil.rmtree(tmp)
+            tmp.mkdir()
+            np.savez(tmp / "shard_0.npz", **flat)
+            (tmp / "manifest.json").write_text(json.dumps(meta))
+            # fsync the directory entry then commit atomically
+            fd = os.open(tmp, os.O_RDONLY)
+            try:
+                os.fsync(fd)
+            finally:
+                os.close(fd)
+            if final.exists():
+                shutil.rmtree(final)
+            os.replace(tmp, final)
+            CheckpointManager._gc(directory, keep_last)
 
     def wait(self):
         if self._thread is not None:
@@ -202,9 +207,10 @@ class CheckpointManager:
         if step is None:
             raise FileNotFoundError(f"no checkpoints in {self.dir}")
         d = self.dir / f"ckpt_{step}"
-        meta = json.loads((d / "manifest.json").read_text())
-        with np.load(d / "shard_0.npz") as z:
-            flat = {k: z[k] for k in z.files}
+        with obs_trace.span("ckpt/restore", args={"step": int(step)}):
+            meta = json.loads((d / "manifest.json").read_text())
+            with np.load(d / "shard_0.npz") as z:
+                flat = {k: z[k] for k in z.files}
 
         leaves_like, treedef = jax.tree_util.tree_flatten(like)
         flat_like = _flatten(like)

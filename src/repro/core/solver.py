@@ -74,6 +74,8 @@ from repro.data.design import (BlockSparseDesign, DesignMatrix, SparseCOO,
                                StreamingDesign)
 from repro.dist import bootstrap as dist_boot
 from repro.kernels import ops
+from repro.obs import convergence as conv_lib
+from repro.obs import trace as obs_trace
 from repro.sharding import compat
 
 _METRIC_KEYS = ("f", "f_before", "loss", "alpha", "mu", "nnz",
@@ -375,6 +377,18 @@ class GLMSolver:
         # because every coordinate was screened out.  In-memory fits only.
         self.launch_stats = {"supersteps": 0, "sweep_tile_launches": 0,
                              "sweep_tiles_skipped": 0}
+        # convergence event stream (repro.obs, DESIGN.md §12): auto-opened
+        # next to the trace shards when tracing targets a directory, or
+        # attached explicitly via set_convergence_stream().
+        self._conv = None
+        self._conv_step = 0
+        self._conv_ctx: dict = {}
+        self._last_step_us = None
+        self._last_phase_us = None
+        td = obs_trace.trace_dir()
+        if td is not None:
+            self._conv = conv_lib.ConvergenceStream(
+                td / f"convergence_{obs_trace.get_tracer().pid}.jsonl")
 
         # file / reader front door (repro.io): a path or an open reader
         # coerces to a StreamingDesign, and y=None pulls the labels from
@@ -897,29 +911,43 @@ class GLMSolver:
         """One superstep with the distributed hooks around it (DESIGN.md
         §9): per-superstep budgets, fault-plan work injection, and
         telemetry recording.  Without telemetry/faults this is exactly the
-        bare compiled-superstep call."""
+        bare compiled-superstep call (plus an obs span that is a cached
+        no-op when tracing is disabled)."""
         budgets = self._budgets()
         if self._telemetry is None and self._faults is None:
-            return self._superstep(self._Xs, self._ys, weights_dev,
-                                   self._offsets, budgets, lams,
-                                   active_dev, self._penf, state)
+            with obs_trace.span("solver/superstep") as sp:
+                out = self._superstep(self._Xs, self._ys, weights_dev,
+                                      self._offsets, budgets, lams,
+                                      active_dev, self._penf, state)
+            # host-side dispatch span: the per-iteration device_get in
+            # _run provides the sync, so no extra block here (SYNC001)
+            self._last_step_us = sp.elapsed_us or None
+            self._last_phase_us = None
+            return out
         step_no = self._superstep_no
         self._superstep_no += 1
         pid = 0 if self.dist_info is None else self.dist_info["process_id"]
         tiles = self._my_tiles()
-        work = None
+        work = work_phases = None
         if self._faults is not None and self._faults.tile_cost_s > 0:
             # simulated per-tile local-work cost: the sleep is REAL
             # wall-clock (what straggler_bench measures); the same value is
             # what telemetry records as this node's local-phase seconds
             # (see the measurement-source note in repro.dist.telemetry)
             work = self._faults.work_s(pid, step_no, tiles)
+            work_phases = self._faults.work_phases(pid, step_no, tiles)
             if work > 0:
-                time.sleep(work)
+                with obs_trace.span("solver/fault_sleep",
+                                    args={"work_s": round(work, 6)}):
+                    time.sleep(work)
+        # telemetry must read a clock even with tracing disabled
+        # lint: allow OBS001 — raw local-work seconds feed the speed EMA
         t0 = time.perf_counter()
-        state, m = self._superstep(self._Xs, self._ys, weights_dev,
-                                   self._offsets, budgets, lams,
-                                   active_dev, self._penf, state)
+        with obs_trace.span("solver/superstep",
+                            args={"step": step_no, "tiles": tiles}):
+            state, m = self._superstep(self._Xs, self._ys, weights_dev,
+                                       self._offsets, budgets, lams,
+                                       active_dev, self._penf, state)
         if self._telemetry is not None:
             jax.block_until_ready(state)
             measured = time.perf_counter() - t0
@@ -928,16 +956,43 @@ class GLMSolver:
             # program would fold in collective-wait time (every process
             # waits for the straggler) and erase the very signal ALB needs
             sec = measured if work is None else work
-            if self._phase_fractions:
+            if work_phases is not None:
+                # the fault plan's phase attribution (sweep by default,
+                # "network"/"io" wait excess for phase faults), with the
+                # compute share redistributed over any probe-measured
+                # fractions
+                phases = self._compose_phases(work_phases)
+            elif self._phase_fractions:
                 phases = {k: sec * f
                           for k, f in self._phase_fractions.items()}
-            elif work is not None:
-                # injected per-tile work models the CD sweep's local half
-                phases = {"sweep": sec}
             else:
                 phases = None
             self._telemetry.record(step_no, tiles, sec, phases=phases)
+            self._last_step_us = sec * 1e6
+            self._last_phase_us = None if phases is None else \
+                {k: round(v * 1e6, 1) for k, v in phases.items()}
+        else:
+            self._last_step_us = None
+            self._last_phase_us = None
         return state, m
+
+    def _compose_phases(self, work_phases: dict) -> dict:
+        """Fault-plan phase attribution composed with the registered probe
+        fractions: the COMPUTE share is redistributed over
+        ``set_phase_fractions`` (the probe knows the stats/sweep/merge/
+        line-search split better than the fault model's single-phase
+        charge); wait-state shares ("network"/"io") pass through, since a
+        probe of the compiled superstep can never observe them."""
+        if not self._phase_fractions:
+            return dict(work_phases)
+        from repro.dist.telemetry import COMPUTE_PHASES
+        compute = sum(v for k, v in work_phases.items()
+                      if k in COMPUTE_PHASES)
+        out = {k: v for k, v in work_phases.items()
+               if k not in COMPUTE_PHASES}
+        for k, f in self._phase_fractions.items():
+            out[k] = out.get(k, 0.0) + compute * f
+        return out
 
     def set_phase_fractions(self, fractions):
         """Attribute each superstep's telemetry seconds to named phases.
@@ -953,6 +1008,40 @@ class GLMSolver:
         if fractions is not None:
             fractions = {str(k): float(v) for k, v in fractions.items()}
         self._phase_fractions = fractions
+
+    def set_convergence_stream(self, stream):
+        """Attach (or detach, with None) a convergence event stream —
+        sessions created while tracing targets a directory get one
+        automatically (``<trace_dir>/convergence_<pid>.jsonl``).  Accepts
+        a ``repro.obs.convergence.ConvergenceStream`` or a path."""
+        if stream is not None and not hasattr(stream, "emit"):
+            stream = conv_lib.ConvergenceStream(stream)
+        self._conv = stream
+
+    def _emit_conv(self, outer_it, mh, *, lam1, lam2, active_size,
+                   step_us=None, phase_us=None):
+        """One convergence event per outer iteration — host scalars only,
+        all already fetched by the superstep's single device_get, so the
+        stream adds no device syncs (SYNC001)."""
+        self._conv_step += 1
+        ctx = self._conv_ctx
+        self._conv.emit(
+            step=self._conv_step, outer_it=int(outer_it),
+            lam_index=ctx.get("lam_index"),
+            lam1=float(lam1), lam2=float(lam2),
+            f=float(mh["f"]), loss=float(mh["loss"]),
+            deviance=float(mh["D"]) if "D" in mh else None,
+            alpha=float(mh["alpha"]), mu=float(mh["mu"]),
+            nnz=int(mh["nnz"]),
+            accepted_unit=float(mh["accepted_unit"]),
+            active_size=int(active_size),
+            screened=ctx.get("screened"),
+            kkt_violations=ctx.get("kkt_violations"),
+            supersteps=self.launch_stats["supersteps"],
+            sweep_tile_launches=self.launch_stats["sweep_tile_launches"],
+            sweep_tiles_skipped=self.launch_stats["sweep_tiles_skipped"],
+            step_us=self._last_step_us if step_us is None else step_us,
+            phase_us=self._last_phase_us if phase_us is None else phase_us)
 
     def _run(self, state: FitState, lam1: float, lam2: float, *,
              weights=None, active=None, max_outer=None, tol=None,
@@ -985,10 +1074,12 @@ class GLMSolver:
         total_tiles = self._p_tot // cfg.tile_size
         if active is None:
             live_tiles = total_tiles
+            live_active = self._p_tot
         else:
             act = np.asarray(active, np.float32).reshape(total_tiles,
                                                          cfg.tile_size)
             live_tiles = int((act.max(axis=1) > 0).sum())
+            live_active = int((act > 0).sum())
         shaped = active is not None and self.axis_data is None and (
             cfg.coupling == "gauss-seidel"
             or (cfg.fuse_superstep and cfg.coupling == "jacobi"
@@ -1033,6 +1124,9 @@ class GLMSolver:
             f = float(mh["f"])
             for k in history:
                 history[k].append(float(mh[k]))
+            if self._conv is not None:
+                self._emit_conv(it, mh, lam1=lam1, lam2=lam2,
+                                active_size=live_active)
             if verbose:
                 tag = "dglmnet" if self.mesh is None else \
                     f"dglmnet/{self._D}x{self._M}"
@@ -1137,33 +1231,52 @@ class GLMSolver:
             # ---- pass 1: chunked statistics (G_w, g0, loss) ----
             if acc is None:
                 acc, resume_chunk = zero_acc(), 0
-            for i, Xc, yc, wc, oc in self._iter_row_chunks(
-                    weights, start=resume_chunk):
-                acc = fns.stats_chunk(Xc, yc, wc, oc, state.beta, acc)
-                if (ckpt_manager is not None and ckpt_every_chunks
-                        and (i + 1) % ckpt_every_chunks == 0
-                        and i + 1 < sd.n_chunks):
-                    G, g0, L = acc
-                    ckpt_manager.save(
-                        it, {"beta": state.beta, "mu": state.mu,
-                             "G": G, "g0": g0, "L": L},
-                        metadata={"next_it": it, "stream_chunk": i + 1,
-                                  "f_prev": float(f_prev),
-                                  "design_layout": self._design_layout})
-            prep = fns.prepare(acc, state.beta, state.mu, lams, active_dev,
-                               self._penf, state.cursor, self._budgets())
+            with obs_trace.span("solver/stream_stats",
+                                args={"it": it}) as sp_stats:
+                for i, Xc, yc, wc, oc in self._iter_row_chunks(
+                        weights, start=resume_chunk):
+                    acc = fns.stats_chunk(Xc, yc, wc, oc, state.beta, acc)
+                    if (ckpt_manager is not None and ckpt_every_chunks
+                            and (i + 1) % ckpt_every_chunks == 0
+                            and i + 1 < sd.n_chunks):
+                        G, g0, L = acc
+                        ckpt_manager.save(
+                            it, {"beta": state.beta, "mu": state.mu,
+                                 "G": G, "g0": g0, "L": L},
+                            metadata={"next_it": it, "stream_chunk": i + 1,
+                                      "f_prev": float(f_prev),
+                                      "design_layout": self._design_layout})
+            with obs_trace.span("solver/stream_sweep") as sp_sweep:
+                prep = fns.prepare(acc, state.beta, state.mu, lams,
+                                   active_dev, self._penf, state.cursor,
+                                   self._budgets())
             acc = None
             # ---- pass 2: every line-search candidate in one sweep ----
-            losses = jnp.zeros((fns.n_candidates,), jnp.float32)
-            for _, Xc, yc, wc, oc in self._iter_row_chunks(weights):
-                losses = fns.ls_chunk(Xc, yc, wc, oc, state.beta,
-                                      prep["dbeta"], prep["cand"], losses)
-            state, m = fns.finish(losses, prep, state, lams, self._penf)
+            with obs_trace.span("solver/stream_line_search") as sp_ls:
+                losses = jnp.zeros((fns.n_candidates,), jnp.float32)
+                for _, Xc, yc, wc, oc in self._iter_row_chunks(weights):
+                    losses = fns.ls_chunk(Xc, yc, wc, oc, state.beta,
+                                          prep["dbeta"], prep["cand"],
+                                          losses)
+                state, m = fns.finish(losses, prep, state, lams, self._penf)
             # one batched device→host sync per outer iteration (SYNC001)
             mh = jax.device_get(m)
             f = float(mh["f"])
             for k in history:
                 history[k].append(float(mh[k]))
+            if self._conv is not None:
+                # per-phase µs from the pass spans (host-side dispatch;
+                # zeros when tracing is disabled → emit None instead)
+                phase_us = {"stats": round(sp_stats.elapsed_us, 1),
+                            "sweep": round(sp_sweep.elapsed_us, 1),
+                            "line_search": round(sp_ls.elapsed_us, 1)}
+                total = sum(phase_us.values())
+                self._emit_conv(
+                    it, mh, lam1=lam1, lam2=lam2,
+                    active_size=self._p_tot if active is None
+                    else int((np.asarray(active) > 0).sum()),
+                    step_us=total or None,
+                    phase_us=phase_us if total else None)
             if verbose:
                 print(f"[dglmnet/stream x{sd.n_chunks}] it={it} "
                       f"f={f:.8f} alpha={float(mh['alpha']):.4f} "
@@ -1464,6 +1577,15 @@ class GLMSolver:
                     (self._host(state.beta) != 0.0) | unpen
                 it_k = 0
                 for _ in range(8):
+                    # convergence-stream context: where on the path we
+                    # are, how hard the strong rule screened, and what
+                    # the last KKT check found (None before the first)
+                    self._conv_ctx = {
+                        "lam_index": k,
+                        "screened": int(active.size - active.sum()),
+                        "kkt_violations": self._conv_ctx.get(
+                            "kkt_violations")
+                        if self._conv_ctx.get("lam_index") == k else None}
                     state, hist, it_round, conv_k = self._run(
                         state, lam1, lam2, weights=weights, active=active,
                         max_outer=max_outer, tol=tol, verbose=verbose)
@@ -1474,11 +1596,13 @@ class GLMSolver:
                     g = self._grad_state(state, weights)
                     viol = (~active) & (np.abs(g) >
                                         pf * lam1 * (1.0 + kkt_slack) + 1e-7)
+                    self._conv_ctx["kkt_violations"] = int(viol.sum())
                     if not viol.any():
                         break
                     active |= viol
                 g_warm = g
             else:
+                self._conv_ctx = {"lam_index": k}
                 state, hist, it_k, conv_k = self._run(
                     state, lam1, lam2, weights=weights, max_outer=max_outer,
                     tol=tol, verbose=verbose)
@@ -1511,6 +1635,7 @@ class GLMSolver:
                                            converged[:k + 1].tolist()}})
         if ckpt_manager is not None:
             ckpt_manager.wait()
+        self._conv_ctx = {}
         return betas_packed, f, nnz, n_iters, converged, val_dev, state
 
     def _path_result(self, lambdas, lam2, betas_packed, f, nnz, n_iters,

@@ -52,11 +52,22 @@ class FaultPlan:
     run; ``stutters`` add transient windows on top (factors compose
     multiplicatively).  ``tile_cost_s = 0`` disables injection entirely
     (the plan still answers ``factor`` queries — useful for tests).
+
+    ``slow_phase[p]`` names the superstep phase the CONSTANT slowdown
+    models (``repro.dist.telemetry.VALID_PHASES``; default ``"sweep"``,
+    the CD sweep's local compute).  A non-compute phase ("network",
+    "io") changes nothing about the injected wall-clock — the sleeps
+    are identical — but ``work_phases`` attributes only the BASELINE
+    per-tile cost to compute and the excess to the named phase, which is
+    exactly the signal a phase-aware telemetry needs to leave a
+    network-slow node's tile budget alone (ROADMAP item; see
+    ``benchmarks/straggler_bench.py``'s network arm).
     """
     num_processes: int
     tile_cost_s: float = 0.0
     slowdown: Tuple[float, ...] = ()
     stutters: Tuple[StutterWindow, ...] = ()
+    slow_phase: Tuple[str, ...] = ()
     barrier_timeout_s: float = 60.0
 
     def __post_init__(self):
@@ -66,6 +77,17 @@ class FaultPlan:
                 f"{len(self.slowdown)}")
         if any(f < 1.0 for f in self.slowdown):
             raise ValueError("slowdown factors must be >= 1")
+        if self.slow_phase:
+            from repro.dist.telemetry import VALID_PHASES
+            if len(self.slow_phase) != self.num_processes:
+                raise ValueError(
+                    f"slow_phase must have {self.num_processes} entries; "
+                    f"got {len(self.slow_phase)}")
+            bad = set(self.slow_phase) - VALID_PHASES
+            if bad:
+                raise ValueError(
+                    f"unknown fault phase(s) {sorted(bad)}; valid: "
+                    f"{sorted(VALID_PHASES)}")
 
     # ------------------------------------------------------------ queries
 
@@ -80,6 +102,28 @@ class FaultPlan:
         """Simulated local-work seconds of one superstep on node pid."""
         return self.factor(pid, step) * self.tile_cost_s * int(tiles)
 
+    def phase_of(self, pid: int) -> str:
+        """Phase the constant slowdown on ``pid`` models ("sweep" unless
+        the spec said otherwise)."""
+        return self.slow_phase[pid] if self.slow_phase else "sweep"
+
+    def work_phases(self, pid: int, step: int, tiles: int) -> dict:
+        """``work_s`` split by phase attribution.  A compute-phase fault
+        charges everything to that phase; a "network"/"io" fault keeps
+        the baseline (factor-1, stutters included) per-tile cost as
+        compute ("sweep") and attributes only the EXCESS to the wait
+        phase — total always equals ``work_s``."""
+        total = self.work_s(pid, step, tiles)
+        phase = self.phase_of(pid)
+        if phase not in ("network", "io"):
+            return {phase: total}
+        stutter_f = 1.0
+        for w in self.stutters:
+            if w.pid == pid and w.start <= step < w.stop:
+                stutter_f *= w.factor
+        base = stutter_f * self.tile_cost_s * int(tiles)
+        return {"sweep": base, phase: max(total - base, 0.0)}
+
     def max_factor(self, step: int) -> float:
         return max(self.factor(p, step) for p in range(self.num_processes))
 
@@ -90,9 +134,13 @@ class FaultPlan:
               tile_cost_s: float = 0.0) -> "FaultPlan":
         """CLI spec → plan.  ``"1:4.0"`` = process 1 runs 4× slow;
         ``"0:2.0,1:4.0@10-20"`` = process 0 constantly 2× slow, process 1
-        stutters 4× during supersteps [10, 20)."""
+        stutters 4× during supersteps [10, 20); ``"1:4.0/network"`` =
+        process 1 is 4× slow with the excess attributed to the network
+        phase (a straggler ALB must NOT down-budget)."""
         slowdown = [1.0] * num_processes
+        phases = ["sweep"] * num_processes
         stutters = []
+        any_phase = False
         for part in filter(None, (p.strip() for p in spec.split(","))):
             pid_s, _, rest = part.partition(":")
             pid = int(pid_s)
@@ -100,14 +148,19 @@ class FaultPlan:
                 raise ValueError(f"fault spec names process {pid} but the "
                                  f"job has {num_processes}")
             factor_s, _, window = rest.partition("@")
+            factor_s, _, phase = factor_s.partition("/")
             factor = float(factor_s)
             if window:
                 lo, _, hi = window.partition("-")
                 stutters.append(StutterWindow(pid, int(lo), int(hi), factor))
             else:
                 slowdown[pid] = factor
+            if phase:
+                phases[pid] = phase
+                any_phase = True
         return cls(num_processes=num_processes, tile_cost_s=tile_cost_s,
-                   slowdown=tuple(slowdown), stutters=tuple(stutters))
+                   slowdown=tuple(slowdown), stutters=tuple(stutters),
+                   slow_phase=tuple(phases) if any_phase else ())
 
 
 def guarded_barrier(tag: str, *, timeout_s: float = 60.0):

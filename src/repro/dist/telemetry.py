@@ -42,6 +42,14 @@ from repro.dist import bootstrap
 
 _NS_COUNTER = [0]
 
+# The closed phase vocabulary.  Compute phases are the superstep's local
+# work (what ALB can rebalance by moving tiles); "network" and "io" are
+# wait states a tile budget cannot fix — a node slow THERE must not be
+# down-budgeted (ROADMAP: distinguish compute from network stragglers).
+VALID_PHASES = frozenset(
+    {"stats", "sweep", "merge", "line_search", "network", "io"})
+COMPUTE_PHASES = frozenset({"stats", "sweep", "merge", "line_search"})
+
 
 class SuperstepTelemetry:
     """Per-superstep node-speed estimator shared by all processes.
@@ -56,10 +64,18 @@ class SuperstepTelemetry:
       exchange_timeout_s: KV-store wait for peers' samples; a peer that
         never posts within the window raises (likely dead — the caller's
         fault guard reports which).
+      phase_aware: budgets react to COMPUTE-phase speed only.  When per-
+        phase attributions are flowing, ``effective_speeds`` (what
+        ``column_speeds`` → ALB consumes) becomes tiles / Σ(compute-phase
+        seconds): a node whose slowness is attributed to "network"/"io"
+        keeps its full tile budget, while a compute-slow node is parked
+        exactly as before.  Off (default), the aggregate tiles/seconds
+        speed drives budgets — the historical behavior.
     """
 
     def __init__(self, num_nodes: Optional[int] = None, *, ema: float = 0.5,
-                 warmup: int = 2, exchange_timeout_s: float = 60.0):
+                 warmup: int = 2, exchange_timeout_s: float = 60.0,
+                 phase_aware: bool = False):
         ctx = bootstrap.context()
         self.num_nodes = ctx.num_processes if num_nodes is None \
             else int(num_nodes)
@@ -67,8 +83,11 @@ class SuperstepTelemetry:
         self.ema = float(ema)
         self.warmup = int(warmup)
         self.exchange_timeout_s = float(exchange_timeout_s)
+        self.phase_aware = bool(phase_aware)
         self._speeds: Optional[np.ndarray] = None
+        self._tiles_ema: Optional[np.ndarray] = None
         self._phase_ema: dict = {}     # phase name -> (num_nodes,) seconds
+        self.rejected_phase_keys = 0   # unknown-phase samples dropped
         self._n_samples = 0
         # KV keys must be unique per (telemetry instance, superstep):
         # several solver sessions in one process each get their own space
@@ -83,10 +102,15 @@ class SuperstepTelemetry:
         everyone's samples into the shared EMA.
 
         ``phases`` optionally attributes the seconds to named superstep
-        phases (``{"stats": s1, "sweep": s2, "linesearch": s3}``) — the
-        attribution rides the same KV exchange and feeds
-        ``phase_breakdown()``; nodes may omit it (older callers send
-        2-element samples, which still parse).
+        phases (``{"stats": s1, "sweep": s2, "line_search": s3}`` —
+        ``VALID_PHASES`` is the closed vocabulary) — the attribution
+        rides the same KV exchange and feeds ``phase_breakdown()``;
+        nodes may omit it (older callers send 2-element samples, which
+        still parse).  A sample carrying an UNKNOWN phase key is
+        rejected like any invalid sample: the key does not fold into the
+        EMA (it would silently poison ``phase_breakdown`` and the
+        phase-aware budgets on every node), and
+        ``rejected_phase_keys`` counts the drops.
 
         Collective: every process must call it once per superstep, in
         step order.  Single-process jobs skip the exchange.
@@ -117,9 +141,16 @@ class SuperstepTelemetry:
         per-node list of phase→seconds dicts (None entries allowed)."""
         if phases is not None:
             self._fold_phases(phases)
+        tiles_arr = np.asarray(tiles, np.float64)
+        if self._tiles_ema is None:
+            self._tiles_ema = np.where(tiles_arr > 0, tiles_arr, np.nan)
+        else:
+            told = self._tiles_ema
+            tblend = np.where(np.isnan(told), tiles_arr,
+                              (1.0 - self.ema) * told + self.ema * tiles_arr)
+            self._tiles_ema = np.where(tiles_arr > 0, tblend, told)
         with np.errstate(divide="ignore", invalid="ignore"):
-            sample = np.asarray(tiles, np.float64) / \
-                np.asarray(seconds, np.float64)
+            sample = tiles_arr / np.asarray(seconds, np.float64)
         # invalid samples (zero-length window, no tiles) don't update that
         # node's EMA — alb's sanitize catches whatever is left
         if self._speeds is None:
@@ -140,11 +171,17 @@ class SuperstepTelemetry:
 
         Same EMA constant and NaN-until-seen semantics as the speed
         vector; a node that omits a phase (or the whole dict) leaves its
-        slot untouched."""
+        slot untouched.  Unknown phase names are REJECTED (dropped +
+        counted), exactly like invalid speed samples: every process runs
+        this same fold over the same exchanged samples, so the rejection
+        is deterministic and the EMA stays bit-identical across nodes."""
         for node, attrib in enumerate(phases):
             if not attrib or node >= self.num_nodes:
                 continue
             for name, sec in attrib.items():
+                if name not in VALID_PHASES:
+                    self.rejected_phase_keys += 1
+                    continue
                 arr = self._phase_ema.setdefault(
                     name, np.full((self.num_nodes,), np.nan))
                 old = arr[node]
@@ -175,11 +212,44 @@ class SuperstepTelemetry:
             return None
         return self._speeds.copy()
 
+    def compute_speeds(self) -> Optional[np.ndarray]:
+        """COMPUTE-phase node speeds (tiles/s): EMA tiles over the sum of
+        the compute-phase EMA seconds, per node.  A node with no compute-
+        phase attribution yet gets NaN (callers fall back to the
+        aggregate speed for that node).  None during warm-up or before
+        any phase attribution arrived."""
+        if not self.ready or not self._phase_ema:
+            return None
+        compute = np.zeros((self.num_nodes,), np.float64)
+        seen = np.zeros((self.num_nodes,), bool)
+        for name in sorted(COMPUTE_PHASES & set(self._phase_ema)):
+            arr = self._phase_ema[name]
+            ok = ~np.isnan(arr)
+            compute[ok] += arr[ok]
+            seen |= ok
+        with np.errstate(divide="ignore", invalid="ignore"):
+            sp = self._tiles_ema / compute
+        return np.where(seen & np.isfinite(sp) & (sp > 0), sp, np.nan)
+
+    def effective_speeds(self) -> Optional[np.ndarray]:
+        """The speed vector budgets should consume: aggregate speeds by
+        default, compute-phase speeds (per node, falling back to the
+        aggregate where no attribution exists) in ``phase_aware`` mode.
+        Deterministic across processes — both inputs are."""
+        sp = self.speeds()
+        if sp is None or not self.phase_aware:
+            return sp
+        csp = self.compute_speeds()
+        if csp is None:
+            return sp
+        return np.where(np.isnan(csp), sp, csp)
+
     def column_speeds(self, mesh, axis_model: str = "model") \
             -> Optional[np.ndarray]:
         """Per-model-column speeds: node speeds mapped through the
-        column → owning-process bookkeeping.  None during warm-up."""
-        sp = self.speeds()
+        column → owning-process bookkeeping.  None during warm-up.
+        Respects ``phase_aware`` (compute-phase speeds when available)."""
+        sp = self.effective_speeds()
         if sp is None:
             return None
         owners = bootstrap.column_process_map(mesh, axis_model)

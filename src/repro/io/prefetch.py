@@ -37,6 +37,9 @@ import queue
 import threading
 from typing import Callable, Optional
 
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
+
 
 class PrefetchingSource:
     """Chunk callable that produces ``depth`` chunks ahead on a thread.
@@ -65,16 +68,23 @@ class PrefetchingSource:
     # ------------------------------------------------------------- worker
 
     def _run(self, start: int, q: queue.Queue, stop: threading.Event):
+        depth_gauge = obs_metrics.gauge("io.prefetch.queue_depth")
         for i in range(start, self.n_chunks):
             if stop.is_set():
                 return
             try:
-                item = (i, self._fn(i), None)
+                # the span puts chunk production on the worker thread's
+                # own trace lane — overlap with the consumer's device
+                # compute is visible directly in Perfetto
+                with obs_trace.span("io/prefetch_produce",
+                                    args={"chunk": i}):
+                    item = (i, self._fn(i), None)
             except BaseException as e:          # re-raised at the consumer
                 item = (i, None, e)
             while not stop.is_set():
                 try:
                     q.put(item, timeout=0.1)
+                    depth_gauge.set(q.qsize())
                     break
                 except queue.Full:
                     continue

@@ -197,7 +197,8 @@ def _worker(args) -> int:
     if args.faults:
         plan = faults.FaultPlan.parse(args.faults, ctx.num_processes,
                                       tile_cost_s=args.tile_cost_s)
-    tel = telemetry.SuperstepTelemetry() if args.telemetry else None
+    tel = telemetry.SuperstepTelemetry(phase_aware=args.phase_aware) \
+        if args.telemetry else None
 
     solver = GLMSolver(
         X, y, config=DGLMNETConfig(tile_size=args.tile, max_outer=args.steps),
@@ -237,6 +238,14 @@ def main() -> int:
                     "activates fault injection sleeps)")
     ap.add_argument("--telemetry", action="store_true",
                     help="drive ALB budgets from measured node speeds")
+    ap.add_argument("--phase-aware", action="store_true", dest="phase_aware",
+                    help="budgets react to COMPUTE-phase speed only (a "
+                    "network-slow node keeps its tile budget)")
+    ap.add_argument("--trace", default="",
+                    help="directory for repro.obs traces: every process "
+                    "writes a trace_<pid>.json shard (+ metrics/"
+                    "convergence streams); the parent merges the shards "
+                    "into one Perfetto-loadable trace_merged.json")
     ap.add_argument("--timeout", type=float, default=900.0)
     ap.add_argument("--data", default="",
                     help="libsvm(.gz)/Parquet file: multi-process "
@@ -253,9 +262,21 @@ def main() -> int:
     args = ap.parse_args()
 
     if os.environ.get("REPRO_DIST_PROCID") is not None or args.nprocs <= 1:
+        if args.trace:
+            # enable before any solver work; the atexit hook saves this
+            # process's shard (workers spawned by the parent inherit
+            # REPRO_TRACE instead and are already enabled at import)
+            from repro.obs import trace as obs_trace
+            if not obs_trace.get_tracer().enabled:
+                obs_trace.enable(args.trace)
         return _worker_stream(args) if args.data else _worker(args)
 
     from repro.dist import launcher
+    if args.trace:
+        # workers inherit the env → every process traces into the same
+        # directory with zero per-call wiring (repro.obs.trace)
+        had_trace_env = "REPRO_TRACE" in os.environ
+        os.environ["REPRO_TRACE"] = args.trace
     forwarded, skip = [], False
     for a in sys.argv[1:]:
         if skip:
@@ -268,6 +289,19 @@ def main() -> int:
     result = launcher.run_local(args.nprocs, os.path.abspath(__file__),
                                 args=forwarded, timeout_s=args.timeout)
     print(result.summary())
+    if args.trace:
+        from repro.obs import trace as obs_trace
+        if not had_trace_env:
+            # the env var was for the WORKERS: if importing repro.obs
+            # under it enabled tracing in this launcher process too, drop
+            # that — a near-empty parent shard would add a junk lane to
+            # the merge (and to every later re-merge of the directory)
+            os.environ.pop("REPRO_TRACE", None)
+            obs_trace.disable()
+        merged = obs_trace.merge_dir(args.trace)
+        if merged is not None:
+            print(f"[dist_run] merged trace: {merged} "
+                  "(load at https://ui.perfetto.dev)")
     return 0 if result.ok else 1
 
 

@@ -27,6 +27,8 @@ import time
 
 import numpy as np
 
+from repro.timing import percentiles
+
 
 def synth_requests(rng, n_requests: int, n_features: int, nnz: int):
     """Sparse feature-list requests with true ±50% nnz jitter — request
@@ -109,11 +111,10 @@ def main(argv=None):
         _, t_total = timed(lambda: [lat.append(
             timed(batcher.score_one, i, v)[1]) for i, v in reqs])
         batcher.close()
-        lat = np.asarray(lat)
+        pct = percentiles([v * 1e3 for v in lat])
         record.update(
             n_requests=len(reqs), n_batches=len(reqs), mean_batch=1.0,
-            p50_ms=float(np.percentile(lat, 50) * 1e3),
-            p99_ms=float(np.percentile(lat, 99) * 1e3),
+            p50_ms=pct["p50"], p99_ms=pct["p99"],
             rows_per_s=float(len(reqs) / t_total),
             compiled_shapes=engine.compile_count)
     else:

@@ -1,0 +1,16 @@
+"""repro.obs — unified tracing + metrics + convergence streams.
+
+The observability layer (DESIGN.md §12): always importable, near-free
+when disabled, wired through solver, io, serve, checkpoint and dist.
+
+  * ``obs.trace`` — span tracer with Chrome trace-event (Perfetto)
+    export; enable with ``REPRO_TRACE=dir`` or ``trace.enable(dir)``.
+  * ``obs.metrics`` — counters / gauges / histograms with multi-process
+    snapshot merge.
+  * ``obs.convergence`` — per-superstep training event stream (JSONL,
+    versioned schema) emitted by ``GLMSolver``.
+
+Summarize a run's trace/metrics/convergence directory with
+``python -m repro.launch.trace_report <dir>``.
+"""
+from repro.obs import convergence, metrics, trace  # noqa: F401

@@ -35,7 +35,9 @@ from typing import Optional, Sequence
 
 import numpy as np
 
-from repro.timing import timed
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
+from repro.timing import percentiles, timed
 
 DEFAULT_BATCH_BUCKETS = (1, 4, 16, 64)
 DEFAULT_NNZ_BUCKETS = (8, 32, 128)
@@ -107,13 +109,19 @@ class MicroBatcher:
         self._lock = threading.Condition()
         self._queue: list = []
         self._closed = False
-        # instrumentation
+        # instrumentation (repro.obs mirrors: queue-depth gauge, flush-
+        # reason counters and a request-latency histogram live in the
+        # process metrics registry so multi-batcher deployments aggregate)
         self._latencies: list = []
         self._batch_sizes: list = []
         self._n_failed = 0
         self._engine_s = 0.0
         self._t_first: Optional[float] = None
         self._t_last: Optional[float] = None
+        self._m_depth = obs_metrics.gauge("serve.queue_depth")
+        self._m_lat = obs_metrics.histogram("serve.latency_ms")
+        self._m_flush = {r: obs_metrics.counter(f"serve.flush.{r}")
+                         for r in ("full", "deadline", "close")}
 
         self._thread = threading.Thread(target=self._flusher, daemon=True,
                                         name="repro-serve-flusher")
@@ -156,6 +164,7 @@ class MicroBatcher:
                 raise RuntimeError("batcher is closed")
             was_empty = not self._queue
             self._queue.append(p)
+            self._m_depth.set(len(self._queue))
             # wake the flusher on empty→non-empty (it sleeps untimed while
             # idle) and when a full batch is ready
             if was_empty or len(self._queue) >= self.max_batch:
@@ -208,8 +217,14 @@ class MicroBatcher:
                        and not self._closed and now < deadline):
                     self._lock.wait(timeout=deadline - now)
                     now = time.perf_counter()
+                # why did this flush fire?  The three reasons are exactly
+                # the loop's exit conditions, tested in order
+                reason = "full" if len(self._queue) >= self.max_batch \
+                    else ("close" if self._closed else "deadline")
                 batch = self._queue[:self.max_batch]
                 del self._queue[:len(batch)]
+                self._m_depth.set(len(self._queue))
+            self._m_flush[reason].inc()
             try:
                 self._flush(batch)
             except Exception as e:          # noqa: BLE001 — must not die
@@ -235,8 +250,10 @@ class MicroBatcher:
             offs = np.zeros((B,), np.float32)
             for i, p in enumerate(batch):
                 offs[i] = 0.0 if p.offset is None else float(p.offset)
-        out, dt = timed(self.engine.score_sparse, reqs, kind=self.kind,
-                        nnz_pad=J, offset=offs)
+        with obs_trace.span("serve/flush", args={"batch": len(batch),
+                                                 "B": B, "nnz": J}):
+            out, dt = timed(self.engine.score_sparse, reqs, kind=self.kind,
+                            nnz_pad=J, offset=offs)
         t_done = time.perf_counter()
         with self._lock:
             self._engine_s += dt
@@ -247,28 +264,32 @@ class MicroBatcher:
             for i, p in enumerate(batch):
                 p.result = out[i]
                 p.t_done = t_done
-                self._latencies.append(t_done - p.t_submit)
+                lat = t_done - p.t_submit
+                self._latencies.append(lat)
+                self._m_lat.observe(lat * 1e3)
                 p.event.set()
 
     # ---------------------------------------------------------------- stats
 
     def stats(self) -> dict:
         """p50/p99 request latency (ms), throughput and batching telemetry
-        over everything served so far."""
+        over everything served so far (quantiles via the repo's shared
+        ``repro.timing.percentiles`` — no hand-rolled percentile math)."""
         with self._lock:
-            lat = np.asarray(self._latencies, np.float64)
-            sizes = np.asarray(self._batch_sizes, np.float64)
+            lat_ms = [latency * 1e3 for latency in self._latencies]
+            sizes = self._batch_sizes[:]
             wall = (self._t_last - self._t_first) \
                 if self._t_last is not None else 0.0
             engine_s = self._engine_s
-        n = int(lat.size)
+        n = len(lat_ms)
+        pct = percentiles(lat_ms)
         return {
             "n_requests": n,
             "n_failed": self._n_failed,
-            "n_batches": int(sizes.size),
-            "mean_batch": float(sizes.mean()) if sizes.size else 0.0,
-            "p50_ms": float(np.percentile(lat, 50) * 1e3) if n else None,
-            "p99_ms": float(np.percentile(lat, 99) * 1e3) if n else None,
+            "n_batches": len(sizes),
+            "mean_batch": float(np.mean(sizes)) if sizes else 0.0,
+            "p50_ms": pct["p50"],
+            "p99_ms": pct["p99"],
             "rows_per_s": float(n / wall) if wall > 0 else None,
             "engine_s": engine_s,
             "compiled_shapes": self.engine.compile_count,

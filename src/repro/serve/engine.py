@@ -36,6 +36,8 @@ import numpy as np
 
 from repro.data.sparse import SparseCOO
 from repro.kernels import ops
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.serve.artifact import ServableModel
 
 
@@ -155,6 +157,11 @@ class ScoringEngine:
                                         kind=kind, backend=backend)
 
             fn = self._packed_fns[key] = jax.jit(run)
+            # every new compiled shape is a steady-state smell: the
+            # counter (and the trace instant) makes bucket leaks visible
+            obs_metrics.counter("serve.compiled_shapes").inc()
+            obs_trace.instant("serve/compile",
+                              args={"shape": list(shape), "kind": kind})
         return fn
 
     def score_packed(self, slots, vals, *, kind: str = "response"):

@@ -8,16 +8,24 @@ convention for this repo's benchmarks and launchers (README §Benchmarks):
 
     out, dt = timed(model.forward, params, tokens)       # one call
     us = timeit(ops.glm_stats, y, xb, "logistic")        # steady-state
+    us.p50_us, us.p99_us                                 # tail latency
 
-``timed`` returns the (blocked-on) result and seconds.  ``timeit`` runs a
-compile/warmup call first, then ``iters`` timed calls, and returns the
-steady-state microseconds per call.  Both call ``jax.block_until_ready`` on
-the output pytree; non-jax outputs pass through unharmed (it ignores
-non-array leaves), so the helpers are safe around host-side code too.
+``timed`` returns the (blocked-on) result and seconds.  ``timeit`` runs
+``warmup`` compile/warmup calls, then ``iters`` timed calls — each call
+is blocked on INDIVIDUALLY, so device pipelining cannot hide a slow
+call's tail inside a batch mean — and returns a ``TimeitResult``: a
+``float`` equal to the mean microseconds per call (existing callers keep
+working unchanged) that also carries ``p50_us`` / ``p99_us`` / ``n``.
+
+``percentiles(samples, qs)`` is THE percentile helper for the repo —
+linear-interpolation quantiles identical to ``np.percentile``'s default
+— so serving code and benchmarks share one definition instead of
+hand-rolling the math (lint rule OBS001 points new timing code here).
 """
 from __future__ import annotations
 
 import time
+from typing import Sequence
 
 import jax
 
@@ -30,14 +38,70 @@ def timed(fn, *args, **kwargs):
     return out, time.perf_counter() - t0
 
 
-def timeit(fn, *args, iters: int = 20, warmup: int = 1, **kwargs) -> float:
-    """Steady-state microseconds per call (median-free mean over ``iters``
-    calls after ``warmup`` compile/warmup calls, blocked per batch)."""
+def quantile(sorted_samples: Sequence[float], q: float) -> float:
+    """Linear-interpolation q-percentile (q in [0, 100]) of an ascending
+    sequence — the ``np.percentile`` default, without the numpy round
+    trip for short latency lists."""
+    n = len(sorted_samples)
+    if n == 0:
+        raise ValueError("quantile of an empty sequence")
+    if n == 1:
+        return float(sorted_samples[0])
+    pos = (q / 100.0) * (n - 1)    # numpy's operand order, bit for bit
+    lo = int(pos)
+    hi = min(lo + 1, n - 1)
+    frac = pos - lo
+    a, b = float(sorted_samples[lo]), float(sorted_samples[hi])
+    # numpy's lerp: anchor on b when frac >= 0.5 so the result is
+    # bit-identical to np.percentile (a + frac*(b-a) differs by 1 ulp)
+    if frac >= 0.5:
+        return b - (b - a) * (1.0 - frac)
+    return a + (b - a) * frac
+
+
+def percentiles(samples: Sequence[float], qs=(50.0, 99.0)) -> dict:
+    """``{"p50": ..., "p99": ..., "mean": ...}`` over raw samples (any
+    unit; empty input yields None values)."""
+    xs = sorted(float(x) for x in samples)
+    if not xs:
+        return {**{f"p{g:g}": None for g in qs}, "mean": None}
+    out = {f"p{g:g}": quantile(xs, g) for g in qs}
+    out["mean"] = sum(xs) / len(xs)
+    return out
+
+
+class TimeitResult(float):
+    """Mean µs per call (the float value) plus the tail: ``p50_us``,
+    ``p99_us``, ``min_us``, ``max_us``, ``n``."""
+
+    p50_us: float
+    p99_us: float
+    min_us: float
+    max_us: float
+    n: int
+
+    def __new__(cls, times_us: Sequence[float]):
+        xs = sorted(float(t) for t in times_us)
+        self = super().__new__(cls, sum(xs) / len(xs))
+        self.p50_us = quantile(xs, 50.0)
+        self.p99_us = quantile(xs, 99.0)
+        self.min_us = xs[0]
+        self.max_us = xs[-1]
+        self.n = len(xs)
+        return self
+
+
+def timeit(fn, *args, iters: int = 20, warmup: int = 1,
+           **kwargs) -> TimeitResult:
+    """Steady-state microseconds per call over ``iters`` calls after
+    ``warmup`` compile/warmup calls.  Each timed call blocks on its own
+    result (per-call spans), so the mean AND the percentiles are honest
+    — pipelined dispatch cannot smear a straggler call across the batch."""
     for _ in range(warmup):
         jax.block_until_ready(fn(*args, **kwargs))
-    t0 = time.perf_counter()
-    out = None
+    times_us = []
     for _ in range(iters):
-        out = fn(*args, **kwargs)
-    jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / iters * 1e6
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args, **kwargs))
+        times_us.append((time.perf_counter() - t0) * 1e6)
+    return TimeitResult(times_us)

@@ -1,0 +1,76 @@
+"""Two-process phase-attributed telemetry exchange prog (DESIGN.md §12).
+
+Run under ``repro.dist.launcher`` with 2 processes.  Both nodes drive a
+``SuperstepTelemetry(phase_aware=True)`` through a handful of supersteps
+with tracing enabled:
+
+  * node 0 is healthy (all work in "sweep");
+  * node 1 does the same sweep work but adds a large "network" wait —
+    the compute-vs-network straggler the phase-aware ALB must NOT
+    down-budget;
+  * on one step node 0 attributes seconds to a bogus phase name, which
+    every process must reject deterministically (same count on both).
+
+Each process writes ``<out>.p<procid>.json`` with its view of the folded
+state so the pytest parent can assert cross-node agreement, and leaves
+``trace_<pid>.json`` / ``metrics_<pid>.json`` shards in ``--trace-dir``
+for the parent to merge into one Perfetto file.
+"""
+import argparse
+import json
+import sys
+
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", required=True)
+    ap.add_argument("--trace-dir", required=True)
+    ap.add_argument("--steps", type=int, default=6)
+    args = ap.parse_args()
+
+    from repro.dist import bootstrap, faults
+    from repro.dist.telemetry import SuperstepTelemetry
+    from repro.obs import metrics as obs_metrics
+    from repro.obs import trace as obs_trace
+
+    ctx = bootstrap.initialize()
+    assert ctx.multiprocess and ctx.num_processes == 2
+    obs_trace.enable(args.trace_dir)
+
+    tel = SuperstepTelemetry(phase_aware=True, warmup=2, ema=0.5)
+    steps = obs_metrics.counter("phases.steps")
+    for step in range(args.steps):
+        with obs_trace.span("phases/superstep", args={"step": step}):
+            if ctx.process_id == 0:
+                phases = {"sweep": 0.10}
+                if step == 3:
+                    phases["bogus_phase"] = 1.0   # must be rejected
+                tel.record(step, tiles=8, seconds=0.10, phases=phases)
+            else:
+                # same compute speed, 4x aggregate wall via network wait
+                tel.record(step, tiles=8, seconds=0.40,
+                           phases={"sweep": 0.10, "network": 0.30})
+        steps.inc()
+
+    bd = tel.phase_breakdown() or {}
+    view = {
+        "procid": ctx.process_id,
+        "speeds": np.asarray(tel.speeds(), np.float64).tolist(),
+        "compute_speeds":
+            np.asarray(tel.compute_speeds(), np.float64).tolist(),
+        "effective_speeds":
+            np.asarray(tel.effective_speeds(), np.float64).tolist(),
+        "phase_breakdown": {k: np.asarray(v, np.float64).tolist()
+                            for k, v in sorted(bd.items())},
+        "rejected_phase_keys": tel.rejected_phase_keys,
+    }
+    with open(f"{args.out}.p{ctx.process_id}.json", "w") as f:
+        json.dump(view, f)
+    faults.guarded_barrier("dist-phases-exit")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -231,3 +231,50 @@ def test_two_process_checkpoint_restart(tmp_path):
     assert np.max(np.abs(np.asarray(full["beta_packed"])
                          - np.asarray(resumed["beta_packed"]))) <= 1e-5
     assert resumed["n_iter"] == full["n_iter"]
+
+
+@pytest.mark.slow
+def test_two_process_phase_telemetry_and_trace_merge(tmp_path):
+    """Phase-attributed telemetry over the real 2-process KV exchange:
+    both nodes fold identical state (incl. the SAME unknown-phase
+    rejection count), the network-slow node keeps full compute speed in
+    ``compute_speeds``/``effective_speeds``, and the per-process trace
+    shards merge into one Perfetto-loadable file with two pid lanes."""
+    from repro.obs import trace as obs_trace
+
+    prog = pathlib.Path(__file__).parent / "progs" / "dist_phases.py"
+    out = tmp_path / "phases"
+    trace_dir = tmp_path / "trace"
+    res = launcher.run_local(
+        2, prog, args=["--out", str(out), "--trace-dir", str(trace_dir)],
+        timeout_s=600)
+    assert res.ok, res.summary()
+
+    views = [json.loads((tmp_path / f"phases.p{p}.json").read_text())
+             for p in range(2)]
+    # every process folded the same exchanged samples -> identical state
+    for key in ("speeds", "compute_speeds", "effective_speeds",
+                "phase_breakdown", "rejected_phase_keys"):
+        assert views[0][key] == views[1][key], key
+    v = views[0]
+    assert v["rejected_phase_keys"] == 1           # node 0's bogus key
+    sp = np.asarray(v["speeds"])
+    assert sp[0] / sp[1] == pytest.approx(4.0, rel=0.05)   # aggregate: 4x
+    csp = np.asarray(v["compute_speeds"])
+    assert csp[1] == pytest.approx(csp[0], rel=0.05)  # network != compute
+    esp = np.asarray(v["effective_speeds"])
+    assert esp[1] == pytest.approx(esp[0], rel=0.05)
+    assert "network" in v["phase_breakdown"]
+    assert "bogus_phase" not in v["phase_breakdown"]
+
+    # two shards -> one merged Perfetto file with both pid lanes
+    merged_path = obs_trace.merge_dir(trace_dir)
+    merged = json.loads(merged_path.read_text())
+    evs = merged["traceEvents"]
+    pids = {e["pid"] for e in evs if e.get("ph") == "M"}
+    assert pids == {0, 1}
+    for pid in (0, 1):
+        b = sum(1 for e in evs if e["pid"] == pid and e.get("ph") == "B"
+                and e["name"] == "phases/superstep")
+        e = sum(1 for e in evs if e["pid"] == pid and e.get("ph") == "E")
+        assert b == 6 and e >= b

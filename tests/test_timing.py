@@ -31,12 +31,37 @@ def test_timed_passes_kwargs_and_host_results():
     assert out == 5 and dt >= 0.0
 
 
-def test_timeit_blocks_and_warms_up(monkeypatch):
+def test_timeit_blocks_every_call(monkeypatch):
     calls = []
     fn = jax.jit(lambda x: x + 1.0)
     monkeypatch.setattr(timing.jax, "block_until_ready",
                         lambda out: calls.append(out) or out)
     us = timing.timeit(fn, jnp.ones(4), iters=3, warmup=2)
     assert us >= 0.0
-    # one block per warmup call + one closing the timed batch
-    assert len(calls) == 3
+    # one block per warmup call + one PER timed call (per-call spans, so
+    # pipelining cannot hide tail latency inside a batch mean)
+    assert len(calls) == 5
+
+
+def test_timeit_result_carries_percentiles():
+    us = timing.timeit(lambda: None, iters=8, warmup=1)
+    assert isinstance(us, float)
+    assert us.n == 8
+    assert us.min_us <= us.p50_us <= us.p99_us <= us.max_us
+    # the float value IS the mean — downstream callers never changed
+    assert float(us) >= us.min_us
+
+
+def test_percentiles_match_numpy():
+    xs = [5.0, 1.0, 9.0, 3.0, 7.0, 2.0]
+    got = timing.percentiles(xs, qs=(50, 99))
+    assert got["p50"] == float(np.percentile(xs, 50))
+    assert got["p99"] == float(np.percentile(xs, 99))
+    assert got["mean"] == float(np.mean(xs))
+
+
+def test_percentiles_empty_and_single():
+    empty = timing.percentiles([])
+    assert empty["p50"] is None and empty["mean"] is None
+    one = timing.percentiles([4.0])
+    assert one["p50"] == 4.0 and one["p99"] == 4.0 and one["mean"] == 4.0
